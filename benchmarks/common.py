@@ -1,0 +1,141 @@
+"""Shared benchmark scaffolding: corpora, operators, curve summaries.
+
+Regimes (mirroring paper section 6.1 datasets, DESIGN.md section 7):
+  * ``muct``     — narrow-quality cascade (AUC .61-.71), small corpus
+  * ``multipie`` — wide-quality cascade  (AUC .53-.89), noisy first probe
+  * ``sts``      — wide corpus, cheap text functions
+All cost/quality pairs follow the paper's Table 1 spreads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    OperatorConfig,
+    Predicate,
+    ProgressiveQueryOperator,
+    StaticOrderEvaluator,
+    conjunction,
+    learn_decision_table,
+)
+from repro.core.combine import fit_combine_weights
+from repro.core.metrics import area_under_quality_curve, gain_curve, progressive_qty
+from repro.data.synthetic import make_corpus, split_corpus, truth_answer_mask
+from repro.enrich.simulated import SimulatedBank, preprocess_cheapest
+
+REGIMES = {
+    # name: (aucs, costs, selectivity-per-pred)
+    "muct": ([0.61, 0.67, 0.69, 0.71], [0.023, 0.114, 0.42, 0.949], 0.4),
+    "multipie": ([0.53, 0.84, 0.86, 0.89], [0.018, 0.096, 0.42, 0.886], 0.3),
+    "sts": ([0.60, 0.88, 0.93, 0.97], [0.01, 0.05, 0.2, 0.5], 0.15),
+}
+
+
+@dataclasses.dataclass
+class Setup:
+    query: object
+    combine: object
+    table: object
+    corpus: object
+    truth: jax.Array
+    bank: SimulatedBank
+    pre: tuple
+    n: int
+
+
+def build_setup(
+    regime: str = "sts",
+    n: int = 1024,
+    num_preds: int = 1,
+    seed: int = 0,
+    cost_normalized_table: bool = False,
+) -> Setup:
+    aucs, costs, sel = REGIMES[regime]
+    rng = jax.random.PRNGKey(seed)
+    preds = [Predicate(i, 1) for i in range(num_preds)]
+    query = conjunction(*preds)
+    corpus = make_corpus(
+        rng, n + 1024, [p.tag_type for p in preds], [p.tag for p in preds],
+        selectivity=[sel] * num_preds, aucs=aucs, costs=costs,
+    )
+    train, evalc = split_corpus(corpus, 1024)
+    combine = fit_combine_weights(
+        train.func_probs, train.truth_pred.astype(jnp.float32), steps=150
+    )
+    table = learn_decision_table(
+        train.func_probs, combine, num_bins=10,
+        costs=evalc.costs, cost_normalized=cost_normalized_table,
+    )
+    truth = truth_answer_mask(evalc, query)
+    bank = SimulatedBank(outputs=evalc.func_probs, costs=evalc.costs)
+    pre = preprocess_cheapest(evalc.func_probs, evalc.costs)[:2]
+    return Setup(query, combine, table, evalc, truth, bank, pre, n)
+
+
+def run_progressive(
+    setup: Setup, cfg: Optional[OperatorConfig] = None, epochs: int = 400,
+    warm_fraction: float = 0.0, benefit_fn=None,
+):
+    cfg = cfg or OperatorConfig(plan_size=64, function_selection="best")
+    op = ProgressiveQueryOperator(
+        setup.query, setup.table, setup.combine, setup.corpus.costs,
+        setup.bank, cfg, truth_mask=setup.truth, benefit_fn=benefit_fn,
+    )
+    pre_p, pre_m = setup.pre
+    if warm_fraction > 0:  # Fig. 11 cache warm-up: extra function cached
+        rng = np.random.default_rng(0)
+        m = np.asarray(pre_m).copy()
+        rows = rng.choice(setup.n, size=int(warm_fraction * setup.n), replace=False)
+        m[rows, :, 1] = True
+        pre_m = jnp.asarray(m)
+    st0 = op.warm_start(op.init_state(setup.n), pre_p, pre_m)
+    t0 = time.perf_counter()
+    _, hist = op.run(setup.n, num_epochs=epochs, state=st0)
+    return hist, time.perf_counter() - t0
+
+
+def run_baseline(setup: Setup, name: str, cfg=None, epochs: int = 400):
+    cfg = cfg or OperatorConfig(plan_size=64)
+    ev = StaticOrderEvaluator(
+        name, setup.query, setup.combine, setup.corpus.costs,
+        np.asarray(setup.corpus.aucs), setup.bank, cfg, truth_mask=setup.truth,
+    )
+    t0 = time.perf_counter()
+    _, hist = ev.run(setup.n, num_epochs=epochs,
+                     cached_probs=setup.pre[0], cached_mask=setup.pre[1])
+    return hist, time.perf_counter() - t0
+
+
+def curves(hist):
+    c = np.asarray([h.cost_spent for h in hist])
+    f = np.asarray([h.true_f1 if h.true_f1 is not None else 0.0 for h in hist])
+    ef = np.asarray([h.expected_f for h in hist])
+    return c, f, ef
+
+
+def summarize(name: str, hist, budget: Optional[float] = None):
+    c, f, _ = curves(hist)
+    budget = budget or (float(c[-1]) if len(c) else 1.0)
+    return dict(
+        name=name,
+        final_f1=float(f[-1]) if len(f) else 0.0,
+        qty=progressive_qty(c, f, budget),
+        auqc=area_under_quality_curve(c, f),
+        total_cost=float(c[-1]) if len(c) else 0.0,
+        epochs=len(hist),
+    )
+
+
+def f1_at_cost(hist, cost: float) -> float:
+    out = 0.0
+    for h in hist:
+        if h.cost_spent <= cost and h.true_f1 is not None:
+            out = h.true_f1
+    return out

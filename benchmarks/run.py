@@ -1,0 +1,57 @@
+"""Benchmark harness entry point (assignment deliverable d).
+
+One function per paper table/figure; prints ``name,us_per_call,derived``
+CSV.  ``python -m benchmarks.run [--full]`` (default: small/fast configs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--only", default=None, help="substring filter")
+    args = ap.parse_args(argv)
+    small = not args.full
+
+    from benchmarks import paper_figures as pf
+    from benchmarks.roofline import bench_roofline
+
+    benches = [
+        ("table1", pf.bench_table1),
+        ("fig2", pf.bench_fig2_gain),
+        ("fig3", pf.bench_fig3_f1),
+        ("fig6", pf.bench_fig6_plangen),
+        ("fig7", pf.bench_fig7_candidate),
+        ("fig8", pf.bench_fig8_benefit),
+        ("fig9", pf.bench_fig9_scalability),
+        ("fig11", pf.bench_fig11_caching),
+        ("kernel", pf.bench_kernel_enrich),
+        ("roofline", bench_roofline),
+    ]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            rows = fn(small=small)
+            for r in rows:
+                print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+        except Exception as e:  # keep the harness going; report at the end
+            failures += 1
+            print(f"{name},-1,ERROR:{type(e).__name__}:{e}")
+        finally:
+            dt = time.perf_counter() - t0
+            print(f"# {name} took {dt:.1f}s", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,45 @@
+"""Train a (reduced) assigned-architecture tagging backbone for a few hundred
+steps on CPU with the full production substrate: sharded step function,
+synthetic data pipeline with prefetch, checkpointing + auto-resume,
+preemption handling (assignment deliverable b: end-to-end train driver).
+
+Run:  PYTHONPATH=src python examples/train_tagger.py [--arch hymba-1.5b]
+"""
+
+import argparse
+import tempfile
+
+from repro.configs.archs import get_config
+from repro.configs.shapes import ShapeSpec
+from repro.launch.mesh import make_host_mesh
+from repro.launch.train import train_loop
+from repro.runtime.fault_tolerance import PreemptionHandler
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    shape = ShapeSpec("example", "train", seq_len=64, global_batch=8)
+    mesh = make_host_mesh()
+    handler = PreemptionHandler().install()
+
+    with tempfile.TemporaryDirectory() as ckpt:
+        with mesh:
+            params, opt_state, hist = train_loop(
+                cfg, shape, mesh, steps=args.steps,
+                ckpt_dir=ckpt, ckpt_every=50, preemption=handler,
+                log_every=20,
+            )
+        losses = [h["loss"] for h in hist]
+        print(f"\n{args.arch} (smoke config): "
+              f"loss {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} steps")
+        assert losses[-1] < losses[0], "loss should descend"
+        print("training descends; checkpoints were written and pruned.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Config for --arch gemma2-9b (see repro.configs.archs for the source dims)."""
+from repro.configs.archs import gemma2_9b, gemma2_9b_smoke
+
+full = gemma2_9b
+smoke = gemma2_9b_smoke

@@ -1,0 +1,5 @@
+"""Config for --arch llava-next-mistral-7b (see repro.configs.archs for the source dims)."""
+from repro.configs.archs import llava_next_mistral_7b, llava_next_mistral_7b_smoke
+
+full = llava_next_mistral_7b
+smoke = llava_next_mistral_7b_smoke

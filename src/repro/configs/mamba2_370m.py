@@ -1,0 +1,5 @@
+"""Config for --arch mamba2-370m (see repro.configs.archs for the source dims)."""
+from repro.configs.archs import mamba2_370m, mamba2_370m_smoke
+
+full = mamba2_370m
+smoke = mamba2_370m_smoke

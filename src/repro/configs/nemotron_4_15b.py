@@ -1,0 +1,5 @@
+"""Config for --arch nemotron-4-15b (see repro.configs.archs for the source dims)."""
+from repro.configs.archs import nemotron_4_15b, nemotron_4_15b_smoke
+
+full = nemotron_4_15b
+smoke = nemotron_4_15b_smoke

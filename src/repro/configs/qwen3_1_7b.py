@@ -1,0 +1,5 @@
+"""Config for --arch qwen3-1.7b (see repro.configs.archs for the source dims)."""
+from repro.configs.archs import qwen3_1_7b, qwen3_1_7b_smoke
+
+full = qwen3_1_7b
+smoke = qwen3_1_7b_smoke

@@ -1,0 +1,23 @@
+"""PIQUE core: the paper's progressive query operator, vectorized for TPU."""
+
+from repro.core.query import EQ, NEQ, And, Not, Or, Predicate, compile_query, conjunction
+from repro.core.state import EnrichmentState, init_state, refresh_derived
+from repro.core.decision_table import (
+    DecisionTable,
+    fallback_decision_table,
+    learn_decision_table,
+)
+from repro.core.threshold import select_answer, select_answer_approx
+from repro.core.benefit import compute_benefits
+from repro.core.plan import Plan, select_plan
+from repro.core.operator import OperatorConfig, ProgressiveQueryOperator
+from repro.core.baselines import StaticOrderEvaluator
+
+__all__ = [
+    "EQ", "NEQ", "And", "Not", "Or", "Predicate", "compile_query", "conjunction",
+    "EnrichmentState", "init_state", "refresh_derived",
+    "DecisionTable", "fallback_decision_table", "learn_decision_table",
+    "select_answer", "select_answer_approx", "compute_benefits",
+    "Plan", "select_plan", "OperatorConfig", "ProgressiveQueryOperator",
+    "StaticOrderEvaluator",
+]

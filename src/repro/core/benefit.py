@@ -1,0 +1,182 @@
+"""Benefit estimation (paper section 4.3, Lemma 4 / Theorem 2 / Eq. 11).
+
+For every candidate (object, predicate) pair we:
+  1. look up the decision table with (predicate, state bitmask, uncertainty
+     bin) -> (next function f*, expected delta-uncertainty u)        (§4.2)
+  2. form the estimated uncertainty  h_hat = clip(h + u, 0, 1)        (§4.3.1)
+  3. invert binary entropy, keeping the optimistic upper root p_hat   (Eq. 8)
+  4. estimate the new joint probability P_hat (conjunctive O(1) path
+     or general column-substitution re-evaluation)                   (§4.3.1)
+  5. Benefit = P * P_hat / cost(f*)                                   (Eq. 11)
+
+This module is the *reference* (pure jnp) implementation; the fused Pallas
+kernel in ``repro.kernels.enrich_score`` computes steps 1-5 in a single HBM
+pass and is numerically checked against this code.
+
+The "default strategy" the paper compares against in §6.3.3 — re-running the
+full threshold-selection per candidate triple — is also provided
+(``benefit_exact_slow``) for the Fig. 8 benchmark.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import entropy as entropy_lib
+from repro.core import threshold as threshold_lib
+from repro.core.decision_table import DecisionTable
+from repro.core.query import CompiledQuery
+from repro.core.state import EnrichmentState
+
+NEG_INF = -jnp.inf
+
+
+class TripleBenefits(NamedTuple):
+    benefit: jax.Array  # [N, P] f32; -inf where no candidate triple exists
+    next_fn: jax.Array  # [N, P] int32; -1 where exhausted
+    est_joint: jax.Array  # [N, P] f32; estimated joint prob if executed
+    cost: jax.Array  # [N, P] f32; cost of the selected function
+
+
+def estimate_pred_prob_after(
+    pred_prob: jax.Array, delta_h: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Steps 2-3: (h_hat, p_hat) with the optimistic (upper) entropy root."""
+    h = entropy_lib.binary_entropy(pred_prob)
+    h_hat = jnp.clip(h + delta_h, 0.0, 1.0)
+    p_hat = entropy_lib.inverse_entropy_upper(h_hat)
+    return h_hat, p_hat
+
+
+def compute_benefits(
+    state: EnrichmentState,
+    query: CompiledQuery,
+    table: DecisionTable,
+    costs: jax.Array,  # [P, F] per-(predicate, function) cost
+    candidate_mask: jax.Array | None = None,  # [N] bool; default: ~in_answer (§4.1)
+    load_cost: jax.Array | None = None,  # [N] optional per-object load cost (Eq. 12)
+    function_selection: str = "table",  # "table" (paper §4.2) | "best" (beyond-paper)
+) -> TripleBenefits:
+    """Vectorized Eq. 11 over all candidate (object, predicate) pairs.
+
+    ``function_selection="best"`` replaces the decision table's argmax-delta-h
+    function choice with a direct argmax of Eq. 11 over every *remaining*
+    function — the benefit metric prices the function, not just the object.
+    A strict superset of the paper's behavior (ablated in EXPERIMENTS.md).
+    """
+    n, p = state.pred_prob.shape
+    state_id = state.state_id()  # [N, P]
+    pred_idx = jnp.broadcast_to(jnp.arange(p, dtype=jnp.int32)[None, :], (n, p))
+
+    if function_selection == "best" and table.delta_h_all is not None:
+        dh_all = table.lookup_all(pred_idx, state_id, state.uncertainty)  # [N,P,F]
+        _, p_hat_all = estimate_pred_prob_after(
+            state.pred_prob[..., None], jnp.where(jnp.isfinite(dh_all), dh_all, 0.0)
+        )
+        cost = jnp.maximum(jnp.broadcast_to(costs[None], dh_all.shape), 1e-9)
+        if load_cost is not None:
+            cost = cost + load_cost[:, None, None]
+        if query.is_conjunctive:
+            est_joint_all = query.conjunctive_update(
+                state.joint_prob[:, None, None], state.pred_prob[..., None], p_hat_all
+            )
+        else:
+            est_joint_all = jnp.stack(
+                [
+                    jnp.stack(
+                        [
+                            query.evaluate_with_column(
+                                state.pred_prob, c, p_hat_all[:, c, f]
+                            )
+                            for f in range(dh_all.shape[-1])
+                        ],
+                        axis=-1,
+                    )
+                    for c in range(p)
+                ],
+                axis=1,
+            )  # [N, P, F]
+        est_joint_all = jnp.clip(est_joint_all, 0.0, 1.0)
+        ben_all = state.joint_prob[:, None, None] * est_joint_all / cost  # Eq. 11 per f
+        ben_all = jnp.where(jnp.isfinite(dh_all), ben_all, NEG_INF)
+        nf = jnp.argmax(ben_all, axis=-1).astype(jnp.int32)  # [N, P]
+        benefit = jnp.max(ben_all, axis=-1)
+        est_joint = jnp.take_along_axis(est_joint_all, nf[..., None], axis=-1)[..., 0]
+        cost = jnp.take_along_axis(cost, nf[..., None], axis=-1)[..., 0]
+        nf = jnp.where(jnp.isfinite(benefit), nf, -1)
+        valid = nf >= 0
+        if candidate_mask is None:
+            candidate_mask = ~state.in_answer
+        valid = valid & candidate_mask[:, None]
+        benefit = jnp.where(valid, benefit, NEG_INF)
+        return TripleBenefits(
+            benefit=benefit, next_fn=nf, est_joint=est_joint, cost=cost
+        )
+
+    nf, dh = table.lookup(pred_idx, state_id, state.uncertainty)  # [N, P] each
+
+    _, p_hat = estimate_pred_prob_after(state.pred_prob, dh)
+
+    if query.is_conjunctive:
+        est_joint = query.conjunctive_update(
+            state.joint_prob[:, None], state.pred_prob, p_hat
+        )
+    else:
+        def sub_col(c):
+            return query.evaluate_with_column(state.pred_prob, c, p_hat[:, c])
+
+        est_joint = jnp.stack([sub_col(c) for c in range(p)], axis=-1)
+
+    est_joint = jnp.clip(est_joint, 0.0, 1.0)
+
+    fn_safe = jnp.maximum(nf, 0)
+    cost = costs[pred_idx, fn_safe]  # [N, P]
+    if load_cost is not None:
+        cost = cost + load_cost[:, None]  # Eq. 12: c_load + c_fn
+    cost = jnp.maximum(cost, 1e-9)
+
+    benefit = state.joint_prob[:, None] * est_joint / cost  # Eq. 11
+
+    valid = nf >= 0
+    if candidate_mask is None:
+        candidate_mask = ~state.in_answer  # §4.1 Candidate = O - Answer_{i-1}
+    valid = valid & candidate_mask[:, None]
+    benefit = jnp.where(valid, benefit, NEG_INF)
+    return TripleBenefits(benefit=benefit, next_fn=nf, est_joint=est_joint, cost=cost)
+
+
+def benefit_exact_slow(
+    state: EnrichmentState,
+    query: CompiledQuery,
+    table: DecisionTable,
+    costs: jax.Array,
+    alpha: float = 1.0,
+    candidate_mask: jax.Array | None = None,
+) -> TripleBenefits:
+    """The paper's §6.3.3 "default strategy": per-triple threshold re-selection.
+
+    Benefit = (E(F_a) after re-running Theorem-1 selection with the estimated
+    joint probability of this one object - E(F_a) of Answer_{i-1}) / cost
+    (Eq. 7 computed literally).  O(N^2 P log N) — implemented with vmap for
+    the Fig. 8 comparison at small N; do not use in production paths.
+    """
+    base = threshold_lib.select_answer(state.joint_prob, alpha)
+    fast = compute_benefits(state, query, table, costs, candidate_mask)
+    n, p = state.pred_prob.shape
+
+    def ef_with(obj_idx, col):
+        jp = state.joint_prob.at[obj_idx].set(fast.est_joint[obj_idx, col])
+        return threshold_lib.select_answer(jp, alpha).expected_f
+
+    obj_grid = jnp.arange(n)
+    ef = jax.vmap(
+        lambda o: jax.vmap(lambda c: ef_with(o, c))(jnp.arange(p))
+    )(obj_grid)  # [N, P]
+    benefit = (ef - base.expected_f) / fast.cost
+    benefit = jnp.where(jnp.isfinite(fast.benefit), benefit, NEG_INF)
+    return TripleBenefits(
+        benefit=benefit, next_fn=fast.next_fn, est_joint=fast.est_joint, cost=fast.cost
+    )

@@ -1,0 +1,63 @@
+"""Memory-tier extension (paper section 5 "Dealing with Large Dataset" +
+Appendix B), adapted HBM <-> host-DRAM (DESIGN.md section 3).
+
+Objects live in ``num_blocks`` equal blocks; only ``resident_blocks`` fit in
+the fast tier.  Benefit of a triple whose object is non-resident pays the
+block load cost (Eq. 12):
+
+    Benefit = dE(F) / (c_load / block_size + c_fn)
+
+Block selection (Appendix B): BlockBenefit(b) = sum of plan-triple benefits
+falling in b; the best non-resident block is swapped in each epoch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.benefit import TripleBenefits
+
+
+class BlockState(NamedTuple):
+    block_of_object: jax.Array  # [N] int32
+    resident: jax.Array  # [num_blocks] bool
+    load_cost: jax.Array  # [] f32 cost to load one block
+
+
+def make_block_state(
+    num_objects: int, num_blocks: int, resident_blocks: int, load_cost: float
+) -> BlockState:
+    block = (jnp.arange(num_objects) * num_blocks // num_objects).astype(jnp.int32)
+    resident = jnp.arange(num_blocks) < resident_blocks
+    return BlockState(block, resident, jnp.asarray(load_cost, jnp.float32))
+
+
+def per_object_load_cost(bs: BlockState, num_objects: int) -> jax.Array:
+    """Eq. 12 load term amortized per object: c_load/block_size if non-resident."""
+    block_size = num_objects / bs.resident.shape[0]
+    nonresident = ~bs.resident[bs.block_of_object]
+    return jnp.where(nonresident, bs.load_cost / block_size, 0.0)
+
+
+def block_benefits(bs: BlockState, benefits: TripleBenefits) -> jax.Array:
+    """Appendix-B BlockBenefit: segment-sum of triple benefits per block."""
+    num_blocks = bs.resident.shape[0]
+    per_obj = jnp.sum(
+        jnp.where(jnp.isfinite(benefits.benefit), benefits.benefit, 0.0), axis=-1
+    )  # [N]
+    return jax.ops.segment_sum(per_obj, bs.block_of_object, num_segments=num_blocks)
+
+
+def swap_best_block(bs: BlockState, benefits: TripleBenefits) -> BlockState:
+    """Evict the lowest-benefit resident block for the best non-resident one."""
+    bb = block_benefits(bs, benefits)
+    best_out = jnp.argmax(jnp.where(bs.resident, -jnp.inf, bb))
+    worst_in = jnp.argmin(jnp.where(bs.resident, bb, jnp.inf))
+    should_swap = bb[best_out] > bb[worst_in]
+    resident = bs.resident.at[best_out].set(should_swap | bs.resident[best_out])
+    resident = resident.at[worst_in].set(~should_swap & bs.resident[worst_in])
+    return bs._replace(resident=resident)

@@ -1,0 +1,175 @@
+"""Combine functions M_j (paper Eq. 1): fuse tagging-function outputs.
+
+Each predicate probability is ``p = M(p_1, ..., p_F)`` over the probability
+outputs of the tagging functions executed so far.  The paper learns M offline
+from labeled data; we implement M as *masked logistic pooling*:
+
+    logit(p) = (sum_f m_f * w_f * logit(p_f) + b(mask)) / max(1, sum_f m_f)^rho
+
+with per-function reliability weights ``w_f`` and a per-state bias.  Two ways
+to obtain the weights:
+
+* ``reliability_weights_from_auc`` — closed-form prior: w_f = logit(AUC_f),
+  i.e. better functions get proportionally more say (used before any
+  training data is seen; mirrors the paper's "agnostic to how quality is set").
+* ``fit_combine_weights`` — learned offline with gradient descent on NLL over
+  a labeled training set, exactly the paper's "learned offline using a labeled
+  training dataset".
+
+The combine is vectorized over [N, P, F] tensors and differentiable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def _logit(p: jax.Array, eps: float = 1e-6) -> jax.Array:
+    p = jnp.clip(p, eps, 1.0 - eps)
+    return jnp.log(p) - jnp.log1p(-p)
+
+
+def _sigmoid(x: jax.Array) -> jax.Array:
+    return jax.nn.sigmoid(x)
+
+
+@dataclasses.dataclass
+class CombineParams:
+    """Parameters of M for one query: weights [P, F], bias [P], rho [P]."""
+
+    weights: jax.Array  # [P, F] positive reliabilities
+    bias: jax.Array  # [P]
+    rho: jax.Array  # [P] normalization exponent in [0, 1]
+
+    def tree_flatten(self):
+        return (self.weights, self.bias, self.rho), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+jax.tree_util.register_pytree_node(
+    CombineParams, CombineParams.tree_flatten, CombineParams.tree_unflatten
+)
+
+
+def reliability_weights_from_auc(auc: jax.Array, prior_default: float = 0.75) -> jax.Array:
+    """w_f = logit(AUC_f), clipped; AUC 0.5 (noise) -> weight ~0."""
+    auc = jnp.where(jnp.isfinite(auc), auc, prior_default)
+    return jnp.maximum(_logit(jnp.clip(auc, 0.5 + 1e-3, 1 - 1e-3)), 1e-3)
+
+
+def default_combine_params(auc: jax.Array) -> CombineParams:
+    """auc: [P, F] per-(predicate, function) quality -> prior combine params."""
+    return CombineParams(
+        weights=reliability_weights_from_auc(auc),
+        bias=jnp.zeros(auc.shape[0], jnp.float32),
+        rho=jnp.full((auc.shape[0],), 0.5, jnp.float32),
+    )
+
+
+def combine_probabilities(
+    params: CombineParams,
+    func_probs: jax.Array,  # [..., P, F] raw function outputs (garbage where unexecuted)
+    exec_mask: jax.Array,  # [..., P, F] bool / {0,1}
+    prior: float = 0.5,
+) -> jax.Array:
+    """M over executed functions only; objects with empty state get ``prior``.
+
+    Returns [..., P] predicate probabilities.
+    """
+    m = exec_mask.astype(jnp.float32)
+    logits = _logit(func_probs) * m * params.weights  # broadcast [P, F]
+    denom = jnp.maximum(jnp.sum(m * params.weights, axis=-1), 1e-9)
+    n_exec = jnp.sum(m, axis=-1)
+    # Weighted mean of logits, then mildly sharpened as evidence accumulates:
+    # pooled = (sum w l) / (sum w) * n^rho  -- n^rho in [1, F^rho].
+    pooled = jnp.sum(logits, axis=-1) / denom
+    sharp = jnp.power(jnp.maximum(n_exec, 1.0), params.rho)
+    out = _sigmoid(pooled * sharp + params.bias)
+    return jnp.where(n_exec > 0, out, jnp.full_like(out, prior))
+
+
+def fit_combine_weights(
+    func_probs: jax.Array,  # [N, P, F] training outputs (all functions executed)
+    labels: jax.Array,  # [N, P] in {0, 1}
+    steps: int = 400,
+    lr: float = 0.05,
+) -> CombineParams:
+    """Learn M offline by NLL descent (paper: "learned offline ... labeled data")."""
+    n, p, f = func_probs.shape
+    full_mask = jnp.ones((n, p, f), jnp.float32)
+
+    def unpack(theta):
+        w = jax.nn.softplus(theta["w"]) + 1e-3
+        return CombineParams(weights=w, bias=theta["b"], rho=_sigmoid(theta["r"]))
+
+    def loss_fn(theta):
+        params = unpack(theta)
+        pred = combine_probabilities(params, func_probs, full_mask)
+        pred = jnp.clip(pred, 1e-6, 1 - 1e-6)
+        nll = -(labels * jnp.log(pred) + (1 - labels) * jnp.log(1 - pred))
+        return jnp.mean(nll)
+
+    theta = {
+        "w": jnp.zeros((p, f), jnp.float32),
+        "b": jnp.zeros((p,), jnp.float32),
+        "r": jnp.zeros((p,), jnp.float32),
+    }
+    grad_fn = jax.jit(jax.grad(loss_fn))
+
+    def body(theta, _):
+        g = grad_fn(theta)
+        theta = jax.tree.map(lambda t, gg: t - lr * gg, theta, g)
+        return theta, None
+
+    theta, _ = jax.lax.scan(body, theta, None, length=steps)
+    return unpack(theta)
+
+
+def calibrate_platt(
+    raw_scores: jax.Array, labels: jax.Array, steps: int = 300, lr: float = 0.1
+) -> tuple[jax.Array, jax.Array]:
+    """Platt scaling (paper section 6.1 calibrates functions this way).
+
+    Fits (a, b) minimizing NLL of sigmoid(a * logit(s) + b).  Returns (a, b).
+    """
+
+    def loss(ab):
+        a, b = ab
+        p = _sigmoid(a * _logit(raw_scores) + b)
+        p = jnp.clip(p, 1e-6, 1 - 1e-6)
+        return -jnp.mean(labels * jnp.log(p) + (1 - labels) * jnp.log(1 - p))
+
+    ab = jnp.array([1.0, 0.0])
+    g = jax.jit(jax.grad(loss))
+
+    def body(ab, _):
+        return ab - lr * g(ab), None
+
+    ab, _ = jax.lax.scan(body, ab, None, length=steps)
+    return ab[0], ab[1]
+
+
+def apply_platt(raw_scores: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    return _sigmoid(a * _logit(raw_scores) + b)
+
+
+def auc_score(scores: jax.Array, labels: jax.Array) -> jax.Array:
+    """Area under ROC via the rank statistic (ties get 0.5 credit). Pure jnp."""
+    scores = scores.reshape(-1)
+    labels = labels.reshape(-1).astype(jnp.float32)
+    order = jnp.argsort(scores)
+    ranked_labels = labels[order]
+    n_pos = jnp.sum(ranked_labels)
+    n_neg = ranked_labels.shape[0] - n_pos
+    # rank sum of positives (1-indexed ranks; average-rank tie handling omitted:
+    # scores are continuous in our synthetic corpora)
+    ranks = jnp.arange(1, ranked_labels.shape[0] + 1, dtype=jnp.float32)
+    rank_sum = jnp.sum(ranks * ranked_labels)
+    auc = (rank_sum - n_pos * (n_pos + 1) / 2.0) / jnp.maximum(n_pos * n_neg, 1.0)
+    return jnp.where((n_pos > 0) & (n_neg > 0), auc, 0.5)

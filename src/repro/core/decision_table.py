@@ -1,0 +1,198 @@
+"""Decision table (paper section 4.2, Table 3): (state, uncertainty-bin) ->
+(next tagging function, expected delta-uncertainty).
+
+Learned offline from a labeled training corpus exactly as the paper describes:
+for every predicate, every state bitmask s (set of already-executed functions)
+and every uncertainty bin, simulate executing each remaining function on the
+training objects whose (s, bin) matches, measure the mean entropy reduction,
+store the argmax function and its mean delta.
+
+Storage is dense: ``next_fn [P, 2^F, BINS] int32`` and ``delta_h [P, 2^F,
+BINS] f32`` — tiny (P * 16 * 10 entries for F=4), VMEM-resident, gathered
+inside the fused enrich_score kernel.
+
+A ``cost_normalized`` switch selects functions by delta-h per unit cost
+instead of raw delta-h — a beyond-paper variant ablated in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import combine as combine_lib
+from repro.core import entropy as entropy_lib
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DecisionTable:
+    next_fn: jax.Array  # [P, S, B] int32; -1 where no function remains
+    delta_h: jax.Array  # [P, S, B] f32 (<= 0: expected uncertainty reduction)
+    # Per-function expected deltas [P, S, B, F]; +inf where f already in state.
+    # Kept so the "best-benefit" function-selection variant (beyond-paper,
+    # EXPERIMENTS.md §Perf) can price every remaining function, not just the
+    # table's argmax choice.
+    delta_h_all: jax.Array | None = None
+    num_bins: int = dataclasses.field(metadata=dict(static=True), default=10)
+
+    @property
+    def num_states(self) -> int:
+        return self.next_fn.shape[1]
+
+    def lookup(
+        self, pred_idx: jax.Array, state_id: jax.Array, uncertainty: jax.Array
+    ) -> tuple[jax.Array, jax.Array]:
+        """Vectorized gather: -> (next function idx [..., ], delta_h [...])."""
+        b = entropy_lib.uncertainty_bin(uncertainty, self.num_bins)
+        return self.next_fn[pred_idx, state_id, b], self.delta_h[pred_idx, state_id, b]
+
+    def lookup_all(
+        self, pred_idx: jax.Array, state_id: jax.Array, uncertainty: jax.Array
+    ) -> jax.Array:
+        """Per-function deltas [..., F] (inf where executed / unlearnable)."""
+        assert self.delta_h_all is not None, "table learned without delta_h_all"
+        b = entropy_lib.uncertainty_bin(uncertainty, self.num_bins)
+        return self.delta_h_all[pred_idx, state_id, b]
+
+
+def enumerate_states(num_functions: int) -> np.ndarray:
+    """[2^F, F] bool table of state bitmask -> executed-function indicator."""
+    states = np.zeros((2**num_functions, num_functions), dtype=bool)
+    for s in range(2**num_functions):
+        for f in range(num_functions):
+            states[s, f] = bool((s >> f) & 1)
+    return states
+
+
+def learn_decision_table(
+    train_func_probs: jax.Array,  # [Ntr, P, F] outputs of ALL functions on train set
+    combine_params: combine_lib.CombineParams,
+    num_bins: int = 10,
+    costs: jax.Array | None = None,  # [P, F] or [F]; used if cost_normalized
+    cost_normalized: bool = False,
+    min_count: int = 1,
+) -> DecisionTable:
+    """Offline learning pass (paper "Learning the Decision Table").
+
+    Fully vectorized over (state, object): for each state s we combine the
+    executed subset, compute entropies + bins, then for each remaining f
+    combine (s | f) and measure the per-bin mean entropy delta.
+    """
+    ntr, p, f = train_func_probs.shape
+    s_count = 2**f
+    states = jnp.asarray(enumerate_states(f))  # [S, F] bool
+
+    if costs is not None:
+        costs = jnp.asarray(costs, jnp.float32)
+        if costs.ndim == 1:
+            costs = jnp.broadcast_to(costs[None, :], (p, f))
+
+    def per_state(state_row):  # [F] bool
+        mask = jnp.broadcast_to(state_row[None, None, :], (ntr, p, f))
+        prob_s = combine_lib.combine_probabilities(
+            combine_params, train_func_probs, mask
+        )  # [Ntr, P]
+        h_s = entropy_lib.binary_entropy(prob_s)
+        bins = entropy_lib.uncertainty_bin(h_s, num_bins)  # [Ntr, P]
+
+        def per_function(f_idx):
+            add = jnp.zeros((f,), bool).at[f_idx].set(True)
+            mask2 = jnp.broadcast_to((state_row | add)[None, None, :], (ntr, p, f))
+            prob_sf = combine_lib.combine_probabilities(
+                combine_params, train_func_probs, mask2
+            )
+            dh = entropy_lib.binary_entropy(prob_sf) - h_s  # [Ntr, P] (<=0 hoped)
+            # segment-mean per (predicate, bin)
+            onehot = jax.nn.one_hot(bins, num_bins, dtype=jnp.float32)  # [Ntr,P,B]
+            sums = jnp.einsum("np,npb->pb", dh, onehot)
+            cnts = jnp.sum(onehot, axis=0)  # [P, B]
+            mean = sums / jnp.maximum(cnts, 1.0)
+            # A function already in the state gives no new information.
+            already = state_row[f_idx]
+            mean = jnp.where(already, jnp.inf, mean)
+            mean = jnp.where(cnts >= min_count, mean, jnp.inf)
+            return mean  # [P, B]
+
+        deltas = jax.vmap(per_function)(jnp.arange(f))  # [F, P, B]
+        if cost_normalized and costs is not None:
+            score = deltas / jnp.maximum(costs.T[:, :, None], 1e-9)  # [F,P,B]
+        else:
+            score = deltas
+        best = jnp.argmin(score, axis=0)  # [P, B]  (most negative delta wins)
+        best_delta = jnp.take_along_axis(deltas, best[None], axis=0)[0]  # [P, B]
+        # Bins with no training evidence: fall back to the first unexecuted
+        # function with a zero delta estimate (never an executed one).
+        no_data = ~jnp.isfinite(jnp.min(score, axis=0))  # [P, B]
+        fallback_fn = jnp.argmax(~state_row).astype(best.dtype)  # first unexecuted
+        best = jnp.where(no_data, fallback_fn, best)
+        all_exhausted = jnp.all(state_row)
+        best = jnp.where(all_exhausted, -1, best)
+        best_delta = jnp.where(
+            jnp.isfinite(best_delta), jnp.minimum(best_delta, 0.0), 0.0
+        )
+        best_delta = jnp.where(all_exhausted, 0.0, best_delta)
+        # Per-function deltas for the best-benefit variant: clamp learnable
+        # entries to <= 0, keep +inf where executed/unlearnable.
+        deltas_clean = jnp.where(jnp.isfinite(deltas), jnp.minimum(deltas, 0.0), jnp.inf)
+        return (
+            best.astype(jnp.int32),
+            best_delta.astype(jnp.float32),
+            deltas_clean.astype(jnp.float32),
+        )
+
+    next_fns, delta_hs, delta_all = jax.lax.map(per_state, states)
+    return DecisionTable(
+        next_fn=jnp.transpose(next_fns, (1, 0, 2)),  # [S,P,B] -> [P,S,B]
+        delta_h=jnp.transpose(delta_hs, (1, 0, 2)),
+        delta_h_all=jnp.transpose(delta_all, (2, 0, 3, 1)),  # [S,F,P,B]->[P,S,B,F]
+        num_bins=num_bins,
+    )
+
+
+def fallback_decision_table(
+    num_predicates: int,
+    num_functions: int,
+    auc: jax.Array,  # [P, F] or [F]
+    num_bins: int = 10,
+) -> DecisionTable:
+    """Analytic prior table when no training data exists: pick the highest-AUC
+    unexecuted function; expected delta-h proportional to (AUC-0.5) * h.
+
+    Used by tests and as the cold-start table before offline learning runs.
+    """
+    auc = jnp.asarray(auc, jnp.float32)
+    if auc.ndim == 1:
+        auc = jnp.broadcast_to(auc[None, :], (num_predicates, num_functions))
+    s_count = 2**num_functions
+    states = jnp.asarray(enumerate_states(num_functions))  # [S, F]
+    # quality of each unexecuted function per state
+    q = jnp.where(states[None, :, :], -jnp.inf, auc[:, None, :])  # [P, S, F]
+    best = jnp.argmax(q, axis=-1).astype(jnp.int32)  # [P, S]
+    best_q = jnp.max(q, axis=-1)  # [P, S]
+    exhausted = jnp.all(states, axis=-1)[None, :]  # [1, S]
+    best = jnp.where(exhausted, -1, best)
+    bins_mid = (jnp.arange(num_bins, dtype=jnp.float32) + 0.5) / num_bins  # h midpoints
+    # delta-h model: reduction fraction 2*(AUC-0.5) of current uncertainty
+    frac = jnp.clip(2.0 * (best_q - 0.5), 0.0, 1.0)  # [P, S]
+    delta = -frac[:, :, None] * bins_mid[None, None, :]  # [P, S, B]
+    delta = jnp.where(exhausted[:, :, None], 0.0, delta)
+    frac_all = jnp.clip(2.0 * (auc[:, None, :] - 0.5), 0.0, 1.0)  # [P, 1, F]
+    delta_all = -frac_all[:, :, None, :] * bins_mid[None, None, :, None]  # [P,1,B,F]
+    delta_all = jnp.broadcast_to(
+        delta_all, (num_predicates, s_count, num_bins, num_functions)
+    )
+    # executed functions get +inf (cannot be re-run): states [S, F]
+    delta_all = jnp.where(states[None, :, None, :], jnp.inf, delta_all)
+    return DecisionTable(
+        next_fn=jnp.broadcast_to(
+            best[:, :, None], (num_predicates, s_count, num_bins)
+        ).astype(jnp.int32),
+        delta_h=delta.astype(jnp.float32),
+        delta_h_all=delta_all.astype(jnp.float32),
+        num_bins=num_bins,
+    )

@@ -1,0 +1,93 @@
+"""Binary entropy, its inverse, and uncertainty machinery (paper Eq. 4/5/8).
+
+The paper measures per-(object, predicate) uncertainty as the binary entropy of
+the predicate probability (Eq. 5) and, during benefit estimation, inverts the
+entropy (Eq. 8) to recover the *estimated* predicate probability after running
+one more tagging function.
+
+Binary entropy has no closed-form inverse.  A per-object Newton solve wastes
+VPU cycles and is branch-heavy, so we build a monotone lookup table over the
+upper branch p in [0.5, 1] once (it is query-independent) and invert with a
+gather + linear interpolation.  This is the TPU-native adaptation recorded in
+DESIGN.md section 3; max absolute inversion error with 4096 bins is < 2e-4
+(asserted in tests).
+
+All entropies here are base-2 so that h in [0, 1] and the paper's decision
+table bins ([0-0.1), ..., [0.9-1]) apply verbatim.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_LOG2 = 0.6931471805599453  # ln 2
+
+
+def binary_entropy(p: jax.Array) -> jax.Array:
+    """H(p) = -p log2 p - (1-p) log2 (1-p), safe at p in {0, 1} (paper Eq. 5)."""
+    p = jnp.clip(p, 0.0, 1.0)
+    # xlogy-style safety: 0 * log 0 := 0.
+    def _xlog2x(x):
+        return jnp.where(x > 0, x * jnp.log(jnp.maximum(x, 1e-38)) / _LOG2, 0.0)
+
+    return -(_xlog2x(p) + _xlog2x(1.0 - p))
+
+
+@functools.lru_cache(maxsize=8)
+def _inverse_entropy_table(bins: int):
+    """Tabulate p_hi(h): the UPPER root of H(p) = h, p in [0.5, 1].
+
+    Grid is uniform in h.  Built by sampling p densely and interpolating the
+    (h, p) pairs onto a uniform h grid; H is strictly decreasing on [0.5, 1]
+    as p grows, i.e. strictly increasing in h as p -> 0.5.
+
+    Built with numpy (host, concrete) so the lru_cache never captures a
+    tracer when first touched inside a jitted function.
+    """
+    import numpy as np
+
+    # Dense p grid on [0.5, 1]; H maps it onto [0, 1] monotonically
+    # (H(0.5)=1, H(1)=0).  We sample extra-densely near p=1 where dH/dp blows.
+    p_dense = 1.0 - np.logspace(-12, np.log10(0.5), 65536)[::-1]
+    with np.errstate(divide="ignore", invalid="ignore"):
+        h_dense = -(
+            np.where(p_dense > 0, p_dense * np.log2(np.maximum(p_dense, 1e-300)), 0.0)
+            + np.where(
+                p_dense < 1,
+                (1 - p_dense) * np.log2(np.maximum(1 - p_dense, 1e-300)),
+                0.0,
+            )
+        )
+    h_grid = np.linspace(0.0, 1.0, bins)
+    # np.interp needs ascending x: h_dense is descending as p ascends.
+    p_of_h = np.interp(h_grid, h_dense[::-1], p_dense[::-1])
+    return np.asarray(p_of_h, 'float32')  # numpy: safe to lru_cache across traces
+
+
+def inverse_entropy_upper(h: jax.Array, bins: int = 4096) -> jax.Array:
+    """Upper root p >= 0.5 of H(p) = h via LUT + linear interpolation (Eq. 8).
+
+    The paper keeps the optimistic root (the one that *raises* the joint
+    probability, Lemma 3), which is always the upper branch.
+    """
+    table = jnp.asarray(_inverse_entropy_table(bins))
+    h = jnp.clip(h, 0.0, 1.0)
+    x = h * (bins - 1)
+    lo = jnp.floor(x).astype(jnp.int32)
+    hi = jnp.minimum(lo + 1, bins - 1)
+    frac = x - lo.astype(h.dtype)
+    return table[lo] * (1.0 - frac) + table[hi] * frac
+
+
+def inverse_entropy_lower(h: jax.Array, bins: int = 4096) -> jax.Array:
+    """Lower root p <= 0.5 of H(p) = h (the pessimistic solution of Eq. 8)."""
+    return 1.0 - inverse_entropy_upper(h, bins)
+
+
+def uncertainty_bin(h: jax.Array, num_bins: int) -> jax.Array:
+    """Map uncertainty h in [0,1] to a decision-table bin index (paper Table 3)."""
+    b = jnp.floor(jnp.clip(h, 0.0, 1.0 - 1e-7) * num_bins).astype(jnp.int32)
+    return jnp.clip(b, 0, num_bins - 1)

@@ -1,0 +1,39 @@
+"""Restricted probabilistic joins (paper section 5, Eq. 13).
+
+For an equi-join on tag type T_l between corpora O and V, under the
+independence assumption of probabilistic databases [Dalvi & Suciu]:
+
+    p_join(o_k) = p_l(o_k) * mean_i p_l(v_i)                        (Eq. 13)
+
+i.e. the join predicate behaves like an extra predicate column whose value is
+the object's own tag probability scaled by the partner corpus's mean tag
+probability.  The scalar ``mean_i p_l(v_i)`` is one all-reduce when V is
+sharded; benefits then flow through Eq. 11 unchanged.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def join_predicate_probability(
+    own_pred_prob: jax.Array,  # [N] p of each o_k containing the join tag
+    partner_pred_prob: jax.Array,  # [M] p of each v_i containing the join tag
+) -> jax.Array:
+    """Eq. 13 — vectorized over the left corpus."""
+    partner_mean = jnp.mean(partner_pred_prob)
+    return own_pred_prob * partner_mean
+
+
+def join_predicate_probability_sharded(
+    own_pred_prob: jax.Array,
+    partner_local_sum: jax.Array,  # [] local sum of partner probabilities
+    partner_global_count: int,
+    axis_name: str | None = None,
+) -> jax.Array:
+    """Sharded Eq. 13: partner mean via psum of local sums (inside shard_map)."""
+    total = partner_local_sum
+    if axis_name is not None:
+        total = jax.lax.psum(partner_local_sum, axis_name)
+    return own_pred_prob * (total / partner_global_count)

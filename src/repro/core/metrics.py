@@ -1,0 +1,81 @@
+"""Quality metrics (paper Eq. 2, 3, 6, 14, 15).
+
+``true_f_alpha``     — F_alpha against ground truth (Eq. 2), for experiments.
+``gain_curve``       — Eq. 14 relative improvement normalization.
+``progressive_qty``  — Eq. 3 discrete-sampled progressiveness with the Eq. 15
+                       linear-decay weight function.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def true_precision_recall_f(
+    answer_mask: jax.Array, truth_mask: jax.Array, alpha: float = 1.0
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Eq. 2 with the paper's F_alpha parameterization.
+
+    Note the paper's F_alpha = (1+alpha) Pre Rec / (alpha Pre + Rec); alpha=1
+    recovers the usual F1.
+    """
+    a = answer_mask.astype(jnp.float32)
+    g = truth_mask.astype(jnp.float32)
+    inter = jnp.sum(a * g)
+    pre = inter / jnp.maximum(jnp.sum(a), 1.0)
+    rec = inter / jnp.maximum(jnp.sum(g), 1.0)
+    f = (1.0 + alpha) * pre * rec / jnp.maximum(alpha * pre + rec, 1e-9)
+    return pre, rec, f
+
+
+def true_f_alpha(answer_mask, truth_mask, alpha: float = 1.0) -> jax.Array:
+    return true_precision_recall_f(answer_mask, truth_mask, alpha)[2]
+
+
+def gain_curve(f_values: np.ndarray) -> np.ndarray:
+    """Eq. 14: gain(t) = (F1(t) - F1_min) / (F1_max - F1_min)."""
+    f = np.asarray(f_values, dtype=np.float64)
+    lo, hi = float(f.min()), float(f.max())
+    if hi - lo < 1e-12:
+        return np.ones_like(f)
+    return (f - lo) / (hi - lo)
+
+
+def linear_decay_weight(t: np.ndarray, budget: float) -> np.ndarray:
+    """Eq. 15: W(t) = max(1 - (t-1)/budget, 0)."""
+    return np.maximum(1.0 - (np.asarray(t, np.float64) - 1.0) / budget, 0.0)
+
+
+def progressive_qty(
+    costs: Sequence[float], f_values: Sequence[float], budget: float | None = None
+) -> float:
+    """Eq. 3: Qty = sum_i W(v_i) * Imp(v_i) over sampled cost points v_i.
+
+    ``costs`` must be ascending; Imp(v_i) = F(v_i) - F(v_{i-1}) with F(v_0)=F[0].
+    """
+    c = np.asarray(costs, np.float64)
+    f = np.asarray(f_values, np.float64)
+    if budget is None:
+        budget = float(c[-1]) if len(c) else 1.0
+    w = linear_decay_weight(c, budget)
+    imp = np.diff(np.concatenate([[f[0]], f]))
+    return float(np.sum(w * imp))
+
+
+def area_under_quality_curve(costs, f_values) -> float:
+    """Trapezoid AUC of quality-vs-cost, normalized by the cost span.
+
+    A secondary summary we report next to Eq. 3 (robust to sampling grid).
+    """
+    c = np.asarray(costs, np.float64)
+    f = np.asarray(f_values, np.float64)
+    if len(c) < 2:
+        return float(f[0]) if len(f) else 0.0
+    span = c[-1] - c[0]
+    if span <= 0:
+        return float(f[-1])
+    return float(np.trapezoid(f, c) / span)

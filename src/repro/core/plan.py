@@ -1,0 +1,118 @@
+"""Plan generation + selection (paper sections 4.4, 3.2).
+
+The paper maintains a priority queue of triples and pops until the epoch's
+time budget is exhausted.  TPU adaptation: a masked ``top_k`` over the dense
+[N, P] benefit matrix, then a cost-cumsum mask enforcing the budget — all
+shape-stable under jit.
+
+Sharded operation (objects split over ("pod", "data")) uses hierarchical
+selection: each shard takes its local top-k, the (k x shards) survivors are
+all-gathered and reduced to the global top-k.  Exactness: benefit selection is
+a global top-k, and the max over shards of per-shard top-k covers it.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.benefit import TripleBenefits
+
+
+class Plan(NamedTuple):
+    """A fixed-capacity epoch plan (paper Plan_i), sorted by descending benefit."""
+
+    object_idx: jax.Array  # [K] int32
+    pred_idx: jax.Array  # [K] int32
+    func_idx: jax.Array  # [K] int32
+    benefit: jax.Array  # [K] f32
+    cost: jax.Array  # [K] f32
+    valid: jax.Array  # [K] bool (within budget and finite benefit)
+
+    @property
+    def capacity(self) -> int:
+        return self.object_idx.shape[0]
+
+    def num_valid(self) -> jax.Array:
+        return jnp.sum(self.valid)
+
+    def total_cost(self) -> jax.Array:
+        return jnp.sum(jnp.where(self.valid, self.cost, 0.0))
+
+
+def select_plan(
+    benefits: TripleBenefits,
+    plan_size: int,
+    cost_budget: float | jax.Array | None = None,
+) -> Plan:
+    """Top-``plan_size`` triples by benefit, optionally cost-budget-masked.
+
+    One triple per (object, predicate) pair exists (the decision table already
+    picked the function), so the flattened matrix IS the candidate triple set
+    Triples_i of §4.2.
+    """
+    n, p = benefits.benefit.shape
+    flat = benefits.benefit.reshape(-1)
+    k = min(plan_size, flat.shape[0])
+    top_vals, top_idx = jax.lax.top_k(flat, k)
+    obj = (top_idx // p).astype(jnp.int32)
+    prd = (top_idx % p).astype(jnp.int32)
+    fn = benefits.next_fn.reshape(-1)[top_idx]
+    cost = benefits.cost.reshape(-1)[top_idx]
+    valid = jnp.isfinite(top_vals) & (fn >= 0)
+    if cost_budget is not None:
+        # Triples are executed in benefit order until the budget is consumed
+        # (paper §3.2 "until the allotted time for the epoch is consumed").
+        csum = jnp.cumsum(jnp.where(valid, cost, 0.0))
+        valid = valid & (csum <= cost_budget)
+    return Plan(
+        object_idx=obj,
+        pred_idx=prd,
+        func_idx=fn.astype(jnp.int32),
+        benefit=top_vals,
+        cost=cost,
+        valid=valid,
+    )
+
+
+def merge_sharded_plans(plans: Plan, plan_size: int) -> Plan:
+    """Reduce per-shard plans [S, K] -> global top-k plan (hierarchical top-k).
+
+    ``plans`` leaves carry a leading shard axis (e.g. from shard_map +
+    all_gather).  Used by the distributed operator; unit-testable on CPU by
+    stacking local plans.
+    """
+    flat = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), plans)
+    score = jnp.where(flat.valid, flat.benefit, -jnp.inf)
+    k = min(plan_size, score.shape[0])
+    _, idx = jax.lax.top_k(score, k)
+    return jax.tree.map(lambda x: x[idx], flat)
+
+
+def static_plan_from_order(
+    object_order: jax.Array,  # [M] object indices in execution order
+    pred_of_slot: jax.Array,  # [M]
+    func_of_slot: jax.Array,  # [M]
+    costs: jax.Array,  # [P, F]
+    offset: jax.Array,  # [] int32: how many triples were already executed
+    plan_size: int,
+) -> Plan:
+    """A window of a precomputed static execution order (Baseline1/Baseline2)."""
+    m = object_order.shape[0]
+    sl = offset + jnp.arange(plan_size)
+    in_range = sl < m
+    sl = jnp.minimum(sl, m - 1)
+    obj = object_order[sl]
+    prd = pred_of_slot[sl]
+    fn = func_of_slot[sl]
+    cost = costs[prd, jnp.maximum(fn, 0)]
+    return Plan(
+        object_idx=obj.astype(jnp.int32),
+        pred_idx=prd.astype(jnp.int32),
+        func_idx=fn.astype(jnp.int32),
+        benefit=jnp.zeros((plan_size,), jnp.float32),
+        cost=cost,
+        valid=in_range & (fn >= 0),
+    )

@@ -1,0 +1,229 @@
+"""Query model: SPJ predicates over tag types, compiled to vectorized evaluators.
+
+A query (paper section 2) is a boolean combination (AND / OR / NOT) of
+predicates ``Value(T_i) == t_j`` / ``!=``.  Probabilistic semantics:
+
+* predicates over *different* tag types are independent:
+  ``P(a AND b) = P(a) P(b)``; ``P(a OR b) = P(a) + P(b) - P(a) P(b)``
+* predicates over the *same* tag type with different tags are mutually
+  exclusive: ``P(a AND b) = 0``; ``P(a OR b) = P(a) + P(b)``
+* ``!=`` is complement: ``P(T != t) = 1 - P(T == t)``.
+
+The compiler lowers the AST to a closure mapping a dense ``[..., P]`` matrix of
+predicate probabilities to joint probabilities ``[...]`` — pure jnp, jit- and
+vmap-friendly, and shardable over objects.  ``P`` is the number of *distinct
+positive predicates* (tag-type, tag) the query mentions; the state tensors in
+``core.state`` are keyed by the same predicate index.
+
+For benefit estimation the conjunctive fast path (``is_conjunctive``) permits
+O(1) joint updates ``P_new = P_old / p_col * p_hat``; general ASTs fall back to
+re-evaluation with one substituted column (still fully vectorized).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+EQ = "=="
+NEQ = "!="
+
+
+@dataclasses.dataclass(frozen=True)
+class Predicate:
+    """``Value(tag_type) op tag`` (paper section 2, "Query")."""
+
+    tag_type: int
+    tag: int
+    op: str = EQ
+
+    def __post_init__(self):
+        if self.op not in (EQ, NEQ):
+            raise ValueError(f"bad predicate op: {self.op}")
+
+    def positive(self) -> "Predicate":
+        return Predicate(self.tag_type, self.tag, EQ)
+
+
+@dataclasses.dataclass(frozen=True)
+class And:
+    children: tuple
+
+    def __init__(self, *children):
+        object.__setattr__(self, "children", tuple(children))
+
+
+@dataclasses.dataclass(frozen=True)
+class Or:
+    children: tuple
+
+    def __init__(self, *children):
+        object.__setattr__(self, "children", tuple(children))
+
+
+@dataclasses.dataclass(frozen=True)
+class Not:
+    child: object
+
+
+Node = object  # Predicate | And | Or | Not
+
+
+def _collect_predicates(node: Node, acc: list) -> None:
+    if isinstance(node, Predicate):
+        pos = node.positive()
+        if pos not in acc:
+            acc.append(pos)
+    elif isinstance(node, (And, Or)):
+        for c in node.children:
+            _collect_predicates(c, acc)
+    elif isinstance(node, Not):
+        _collect_predicates(node.child, acc)
+    else:
+        raise TypeError(f"bad query node: {node!r}")
+
+
+def _tag_types(node: Node) -> set:
+    out = set()
+    acc: list = []
+    _collect_predicates(node, acc)
+    for p in acc:
+        out.add(p.tag_type)
+    return out
+
+
+def _mutually_exclusive(a: Node, b: Node) -> bool:
+    """True when a and b are single predicates on the same tag type w/ different tags."""
+    return (
+        isinstance(a, Predicate)
+        and isinstance(b, Predicate)
+        and a.op == EQ
+        and b.op == EQ
+        and a.tag_type == b.tag_type
+        and a.tag != b.tag
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledQuery:
+    """A query lowered to vectorized evaluators over predicate-probability tensors."""
+
+    ast: Node
+    predicates: tuple  # tuple[Predicate]: distinct positive predicates, index order
+    is_conjunctive: bool
+    # evaluate([..., P]) -> [...]
+    evaluate: Callable[[jax.Array], jax.Array]
+
+    @property
+    def num_predicates(self) -> int:
+        return len(self.predicates)
+
+    def evaluate_with_column(
+        self, pred_probs: jax.Array, col: int, new_col: jax.Array
+    ) -> jax.Array:
+        """Joint probability with predicate column ``col`` replaced by ``new_col``."""
+        sub = pred_probs.at[..., col].set(new_col)
+        return self.evaluate(sub)
+
+    def conjunctive_update(
+        self, joint: jax.Array, old_col: jax.Array, new_col: jax.Array
+    ) -> jax.Array:
+        """O(1) joint update for pure conjunctions: joint / old * new (guarded)."""
+        safe = jnp.maximum(old_col, 1e-12)
+        return jnp.where(old_col > 0, joint / safe * new_col, 0.0)
+
+
+def compile_query(ast: Node) -> CompiledQuery:
+    preds: list = []
+    _collect_predicates(ast, preds)
+    index = {p: i for i, p in enumerate(preds)}
+
+    def build(node: Node) -> Callable[[jax.Array], jax.Array]:
+        if isinstance(node, Predicate):
+            i = index[node.positive()]
+            if node.op == EQ:
+                return lambda pp: pp[..., i]
+            return lambda pp: 1.0 - pp[..., i]
+        if isinstance(node, Not):
+            f = build(node.child)
+            return lambda pp: 1.0 - f(pp)
+        if isinstance(node, And):
+            fns = [build(c) for c in node.children]
+            excl = _any_exclusive(node.children)
+
+            def f_and(pp):
+                out = fns[0](pp)
+                for g in fns[1:]:
+                    out = out * g(pp)
+                return out
+
+            if excl:
+                # Mutually-exclusive conjuncts can never both hold.
+                return lambda pp: jnp.zeros_like(fns[0](pp))
+            return f_and
+        if isinstance(node, Or):
+            fns = [build(c) for c in node.children]
+            pairs_excl = _all_pairwise_exclusive(node.children)
+
+            def f_or_excl(pp):
+                out = fns[0](pp)
+                for g in fns[1:]:
+                    out = out + g(pp)
+                return jnp.clip(out, 0.0, 1.0)
+
+            def f_or_indep(pp):
+                out = fns[0](pp)
+                for g in fns[1:]:
+                    q = g(pp)
+                    out = out + q - out * q
+                return out
+
+            return f_or_excl if pairs_excl else f_or_indep
+        raise TypeError(f"bad query node: {node!r}")
+
+    def _any_exclusive(children: Sequence[Node]) -> bool:
+        for i in range(len(children)):
+            for j in range(i + 1, len(children)):
+                if _mutually_exclusive(children[i], children[j]):
+                    return True
+        return False
+
+    def _all_pairwise_exclusive(children: Sequence[Node]) -> bool:
+        if len(children) < 2:
+            return False
+        for i in range(len(children)):
+            for j in range(i + 1, len(children)):
+                if not _mutually_exclusive(children[i], children[j]):
+                    return False
+        return True
+
+    evaluate = build(ast)
+    is_conj = _is_pure_conjunction(ast)
+    return CompiledQuery(
+        ast=ast,
+        predicates=tuple(preds),
+        is_conjunctive=is_conj,
+        evaluate=evaluate,
+    )
+
+
+def _is_pure_conjunction(node: Node) -> bool:
+    """AND of positive predicates over distinct tag types (paper queries Q1-Q5)."""
+    if isinstance(node, Predicate):
+        return node.op == EQ
+    if isinstance(node, And):
+        if not all(isinstance(c, Predicate) and c.op == EQ for c in node.children):
+            return False
+        types = [c.tag_type for c in node.children]
+        return len(types) == len(set(types))
+    return False
+
+
+def conjunction(*predicates: Predicate) -> CompiledQuery:
+    """Convenience constructor for the paper's experimental queries (Q1-Q5)."""
+    if len(predicates) == 1:
+        return compile_query(predicates[0])
+    return compile_query(And(*predicates))

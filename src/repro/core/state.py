@@ -1,0 +1,151 @@
+"""Enrichment state: dense, sharded SoA tensors (paper section 3.1 + Appendix C).
+
+The paper keeps per-object hash maps (state / predicate-probability /
+uncertainty).  On a TPU pod those become structure-of-arrays tensors sharded
+over the ``("pod", "data")`` mesh axes:
+
+    func_probs  [N, P, F]  raw tagging-function outputs (0.5 where unexecuted)
+    exec_mask   [N, P, F]  bool, which functions have run (the "state" bitmask)
+    pred_prob   [N, P]     combined predicate probability (Eq. 1)
+    uncertainty [N, P]     binary entropy of pred_prob (Eq. 5)
+    joint_prob  [N]        query probability (section 3.1 Def. 2)
+    in_answer   [N]        bool, membership in Answer_{i-1} (candidate filter)
+    cost_spent  []         cumulative enrichment cost (seconds of cost model)
+
+``state_id`` (the decision-table key) is derived on the fly as the little-
+endian packing of ``exec_mask`` — keeping one canonical representation avoids
+the paper's Appendix-C triple bookkeeping entirely: *all* updates are O(1)
+vectorized writes followed by recombination of the touched columns.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import combine as combine_lib
+from repro.core import entropy as entropy_lib
+from repro.core.query import CompiledQuery
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EnrichmentState:
+    func_probs: jax.Array  # [N, P, F] f32
+    exec_mask: jax.Array  # [N, P, F] bool
+    pred_prob: jax.Array  # [N, P] f32
+    uncertainty: jax.Array  # [N, P] f32
+    joint_prob: jax.Array  # [N] f32
+    in_answer: jax.Array  # [N] bool
+    cost_spent: jax.Array  # [] f32
+
+    @property
+    def num_objects(self) -> int:
+        return self.func_probs.shape[0]
+
+    @property
+    def num_predicates(self) -> int:
+        return self.func_probs.shape[1]
+
+    @property
+    def num_functions(self) -> int:
+        return self.func_probs.shape[2]
+
+    def state_id(self) -> jax.Array:
+        """[N, P] int32 little-endian packing of exec_mask (decision-table key)."""
+        f = self.exec_mask.shape[-1]
+        weights = (2 ** jnp.arange(f, dtype=jnp.int32))[None, None, :]
+        return jnp.sum(self.exec_mask.astype(jnp.int32) * weights, axis=-1)
+
+
+def init_state(
+    num_objects: int,
+    num_predicates: int,
+    num_functions: int,
+    prior: float = 0.5,
+    dtype=jnp.float32,
+) -> EnrichmentState:
+    n, p, f = num_objects, num_predicates, num_functions
+    return EnrichmentState(
+        func_probs=jnp.full((n, p, f), prior, dtype),
+        exec_mask=jnp.zeros((n, p, f), bool),
+        pred_prob=jnp.full((n, p), prior, dtype),
+        uncertainty=jnp.full((n, p), entropy_lib.binary_entropy(jnp.asarray(prior)), dtype),
+        joint_prob=jnp.full((n,), prior**num_predicates, dtype),
+        in_answer=jnp.zeros((n,), bool),
+        cost_spent=jnp.zeros((), dtype),
+    )
+
+
+def refresh_derived(
+    state: EnrichmentState,
+    query: CompiledQuery,
+    combine_params: combine_lib.CombineParams,
+    prior: float = 0.5,
+) -> EnrichmentState:
+    """Recompute pred_prob / uncertainty / joint_prob from raw outputs + mask."""
+    pred_prob = combine_lib.combine_probabilities(
+        combine_params, state.func_probs, state.exec_mask, prior=prior
+    )
+    return dataclasses.replace(
+        state,
+        pred_prob=pred_prob,
+        uncertainty=entropy_lib.binary_entropy(pred_prob),
+        joint_prob=query.evaluate(pred_prob),
+    )
+
+
+def apply_function_outputs(
+    state: EnrichmentState,
+    query: CompiledQuery,
+    combine_params: combine_lib.CombineParams,
+    object_idx: jax.Array,  # [K] int32, may contain PAD (= num_objects) entries
+    pred_idx: jax.Array,  # [K] int32
+    func_idx: jax.Array,  # [K] int32
+    probs: jax.Array,  # [K] f32 raw outputs of the executed functions
+    cost: jax.Array,  # [K] f32 per-triple cost (0 for PAD)
+    valid: jax.Array,  # [K] bool
+) -> EnrichmentState:
+    """Scatter a batch of executed (object, predicate, function) triples.
+
+    Implements the paper's Appendix-C update: set the state bit, record the raw
+    probability, then recombine + re-entropy + re-joint only the touched rows
+    (we recombine all rows — it is a cheap fused elementwise pass and avoids
+    gather/scatter irregularity; see DESIGN.md section 3).
+    """
+    n = state.num_objects
+    obj = jnp.where(valid, object_idx, n)  # out-of-range drops the scatter
+    fp = state.func_probs.at[obj, pred_idx, func_idx].set(
+        probs, mode="drop", unique_indices=False
+    )
+    em = state.exec_mask.at[obj, pred_idx, func_idx].set(
+        True, mode="drop", unique_indices=False
+    )
+    new = dataclasses.replace(
+        state,
+        func_probs=fp,
+        exec_mask=em,
+        cost_spent=state.cost_spent + jnp.sum(jnp.where(valid, cost, 0.0)),
+    )
+    return refresh_derived(new, query, combine_params)
+
+
+def with_cached_state(
+    state: EnrichmentState,
+    query: CompiledQuery,
+    combine_params: combine_lib.CombineParams,
+    cached_probs: jax.Array,  # [N, P, F]
+    cached_mask: jax.Array,  # [N, P, F] bool
+) -> EnrichmentState:
+    """Warm-start from a previous query's cache (paper section 5, "Caching").
+
+    The starting state becomes the cached state; derived quantities are
+    recombined so the first answer set already reflects cached enrichment.
+    """
+    merged_mask = state.exec_mask | cached_mask
+    merged_probs = jnp.where(cached_mask, cached_probs, state.func_probs)
+    new = dataclasses.replace(state, func_probs=merged_probs, exec_mask=merged_mask)
+    return refresh_derived(new, query, combine_params)

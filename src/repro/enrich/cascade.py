@@ -1,0 +1,202 @@
+"""Model-cascade tagging bank: PIQUE's tagging functions as real models.
+
+Each tag type gets a cascade of classifiers over object feature vectors,
+cheap -> expensive (the paper's DT -> GNB -> RF -> SVM spectrum, DESIGN.md
+section 3):
+
+    level 0: linear probe                 (the pre-executed cheapest function)
+    level 1: 2-layer MLP probe
+    level 2: small transformer over feature patches
+    level 3: assigned-arch-backbone head (reduced config on CPU; the full
+             config is what the dry-run serves on the production mesh)
+
+Costs are analytic FLOPs converted to seconds at the target chip's peak
+(197 TFLOPs bf16); qualities are measured AUC on a held-out validation
+split.  ``execute`` groups a plan's triples by (predicate, level) and runs
+batched forward passes — the "plan execution" phase of the paper driven by
+actual model inference.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plan import Plan
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+
+PEAK_FLOPS = 197e12
+
+
+def _linear_probe_init(key, d, width=0):
+    return {"w": jax.random.normal(key, (d, 1)) * (1 / math.sqrt(d)),
+            "b": jnp.zeros((1,))}
+
+
+def _linear_probe_apply(params, x):
+    return jax.nn.sigmoid(x @ params["w"] + params["b"])[:, 0]
+
+
+def _mlp_probe_init(key, d, width=256):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (d, width)) * (1 / math.sqrt(d)),
+        "b1": jnp.zeros((width,)),
+        "w2": jax.random.normal(k2, (width, 1)) * (1 / math.sqrt(width)),
+        "b2": jnp.zeros((1,)),
+    }
+
+
+def _mlp_probe_apply(params, x):
+    h = jax.nn.gelu(x @ params["w1"] + params["b1"])
+    return jax.nn.sigmoid(h @ params["w2"] + params["b2"])[:, 0]
+
+
+@dataclasses.dataclass
+class CascadeLevel:
+    name: str
+    params: object
+    apply_fn: Callable  # (params, features [B, D]) -> probs [B]
+    flops_per_object: float
+
+    @property
+    def cost_seconds(self) -> float:
+        return self.flops_per_object / PEAK_FLOPS
+
+
+def _backbone_level(key, cfg: ModelConfig, feature_dim: int) -> CascadeLevel:
+    """Transformer-backbone tagging head: features -> token-ish patches ->
+    reduced backbone -> mean-pool -> sigmoid head."""
+    model = Model(cfg)
+    params, _ = model.init_params(key)
+    k2 = jax.random.fold_in(key, 1)
+    head = {
+        "proj": jax.random.normal(k2, (feature_dim, cfg.d_model)) * 0.05,
+        "out": jax.random.normal(jax.random.fold_in(k2, 1), (cfg.d_model, 1)) * 0.05,
+    }
+
+    n_tokens = 8
+
+    def apply_fn(p, feats):
+        model_params, head_params = p
+        b = feats.shape[0]
+        x = feats @ head_params["proj"]  # [B, d_model]
+        x = jnp.tile(x[:, None, :], (1, n_tokens, 1)).astype(cfg.activation_dtype)
+        import dataclasses as dc
+
+        from repro.models import layers as nn_layers
+        from repro.models import transformer as tf
+
+        pos = jnp.broadcast_to(jnp.arange(n_tokens)[None], (b, n_tokens))
+        h, _, _ = tf.stack_apply(
+            model_params["layers"], cfg, x, pos, cfg.num_layers, causal=False
+        )
+        pooled = jnp.mean(h.astype(jnp.float32), axis=1)
+        return jax.nn.sigmoid(pooled @ head_params["out"])[:, 0]
+
+    flops = 2.0 * cfg.param_counts()["active"] * n_tokens
+    return CascadeLevel(
+        name=f"backbone:{cfg.name}",
+        params=(params, head),
+        apply_fn=apply_fn,
+        flops_per_object=flops,
+    )
+
+
+def build_cascade(
+    key,
+    feature_dim: int,
+    backbone_cfg: Optional[ModelConfig] = None,
+) -> list[CascadeLevel]:
+    ks = jax.random.split(key, 4)
+    levels = [
+        CascadeLevel("linear", _linear_probe_init(ks[0], feature_dim),
+                     _linear_probe_apply, 2.0 * feature_dim),
+        CascadeLevel("mlp", _mlp_probe_init(ks[1], feature_dim),
+                     _mlp_probe_apply, 2.0 * feature_dim * 256 * 2),
+    ]
+    if backbone_cfg is not None:
+        levels.append(_backbone_level(ks[2], backbone_cfg, feature_dim))
+    return levels
+
+
+def train_level(
+    level: CascadeLevel, feats: jax.Array, labels: jax.Array,
+    steps: int = 200, lr: float = 0.05,
+) -> CascadeLevel:
+    """Fit a level to planted labels with NLL descent.  Backbone levels
+    train only the (proj, out) head with the backbone frozen (full backbone
+    pretraining runs via launch/train.py)."""
+    y = labels.astype(jnp.float32)
+
+    if level.name.startswith("backbone"):
+        backbone, head = level.params
+
+        def loss_h(h):
+            pr = jnp.clip(level.apply_fn((backbone, h), feats), 1e-6, 1 - 1e-6)
+            return -jnp.mean(y * jnp.log(pr) + (1 - y) * jnp.log(1 - pr))
+
+        g = jax.jit(jax.grad(loss_h))
+        for _ in range(max(steps // 2, 50)):
+            head = jax.tree.map(lambda t, gg: t - lr * gg, head, g(head))
+        return dataclasses.replace(level, params=(backbone, head))
+
+    def loss(p):
+        pr = jnp.clip(level.apply_fn(p, feats), 1e-6, 1 - 1e-6)
+        return -jnp.mean(y * jnp.log(pr) + (1 - y) * jnp.log(1 - pr))
+
+    g = jax.jit(jax.grad(loss))
+    params = level.params
+    for _ in range(steps):
+        params = jax.tree.map(lambda t, gg: t - lr * gg, params, g(params))
+    return dataclasses.replace(level, params=params)
+
+
+@dataclasses.dataclass
+class ModelCascadeBank:
+    """Tagging bank backed by model cascades (one per predicate)."""
+
+    cascades: Sequence[Sequence[CascadeLevel]]  # [P][F]
+    features: jax.Array  # [N, D]
+    costs: jax.Array = None  # [P, F] seconds (filled in __post_init__)
+
+    def __post_init__(self):
+        p = len(self.cascades)
+        f = max(len(c) for c in self.cascades)
+        costs = np.zeros((p, f), np.float32)
+        for i, c in enumerate(self.cascades):
+            for j, lvl in enumerate(c):
+                costs[i, j] = lvl.cost_seconds
+        self.costs = jnp.asarray(costs)
+        self._jitted = {}
+
+    def _apply(self, pred: int, fn: int):
+        key = (pred, fn)
+        if key not in self._jitted:
+            lvl = self.cascades[pred][fn]
+            self._jitted[key] = jax.jit(lvl.apply_fn)
+        return self._jitted[key]
+
+    def execute(self, plan: Plan) -> jax.Array:
+        """Group triples by (predicate, function) and run batched forwards."""
+        obj = np.asarray(plan.object_idx)
+        prd = np.asarray(plan.pred_idx)
+        fns = np.asarray(plan.func_idx)
+        valid = np.asarray(plan.valid)
+        out = np.full(obj.shape, 0.5, np.float32)
+        for p in range(len(self.cascades)):
+            for f in range(len(self.cascades[p])):
+                sel = valid & (prd == p) & (fns == f)
+                if not sel.any():
+                    continue
+                idx = obj[sel]
+                feats = self.features[jnp.asarray(idx)]
+                probs = self._apply(p, f)(self.cascades[p][f].params, feats)
+                out[sel] = np.asarray(probs, np.float32)
+        return jnp.asarray(out)

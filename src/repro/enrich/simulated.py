@@ -1,0 +1,67 @@
+"""Simulated tagging bank: function outputs are pre-materialized tensors.
+
+Execution of a plan is a gather — the paper-scale reproduction path (its
+tagging functions are scikit-learn classifiers whose outputs we model with
+AUC-calibrated synthetic scores; see ``repro.data.synthetic``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.plan import Plan
+
+
+@dataclasses.dataclass
+class SimulatedBank:
+    """Bank backed by a dense [N, P, F] tensor of function outputs."""
+
+    outputs: jax.Array  # [N, P, F]
+    costs: jax.Array  # [P, F]
+
+    def execute(self, plan: Plan) -> jax.Array:
+        obj = jnp.clip(plan.object_idx, 0, self.outputs.shape[0] - 1)
+        fn = jnp.maximum(plan.func_idx, 0)
+        return self.outputs[obj, plan.pred_idx, fn]
+
+
+def preprocess_cheapest(outputs: jax.Array, costs: jax.Array):
+    """Paper section 6.1 "Initialization Step": the cheapest function of every
+    tag type runs on all objects before any query arrives.
+
+    Returns (cached_probs [N,P,F], cached_mask [N,P,F], cheapest_fn [P]) for
+    ``ProgressiveQueryOperator.warm_start`` / baseline warm starts.
+    """
+    n, p, f = outputs.shape
+    cheapest = jnp.argmin(costs, axis=-1)  # [P]
+    mask = jax.nn.one_hot(cheapest, f, dtype=bool)[None]  # [1, P, F]
+    mask = jnp.broadcast_to(mask, (n, p, f))
+    return outputs, mask, cheapest
+
+
+@dataclasses.dataclass
+class LatencyModelBank(SimulatedBank):
+    """SimulatedBank + a wall-clock latency model (for straggler experiments).
+
+    ``shard_slowdown`` multiplies the modeled execution cost for objects on
+    given shards, letting the runtime's straggler mitigation be exercised
+    deterministically on CPU.
+    """
+
+    shard_of_object: jax.Array | None = None  # [N] int32
+    shard_slowdown: jax.Array | None = None  # [S] f32 multiplier
+
+    def modeled_plan_time(self, plan: Plan) -> jax.Array:
+        base = jnp.where(plan.valid, plan.cost, 0.0)
+        if self.shard_of_object is None or self.shard_slowdown is None:
+            return jnp.sum(base)
+        shards = self.shard_of_object[jnp.clip(plan.object_idx, 0, self.shard_of_object.shape[0] - 1)]
+        mult = self.shard_slowdown[shards]
+        # epoch time = max over shards of that shard's work (bulk-synchronous)
+        per_shard = jax.ops.segment_sum(
+            base * mult, shards, num_segments=self.shard_slowdown.shape[0]
+        )
+        return jnp.max(per_shard)

@@ -1,0 +1,109 @@
+"""Flash-decoding Pallas TPU kernel: split-KV partial attention.
+
+Decode is KV-bandwidth-bound (one query token reads the whole cache), so the
+cache is split into ``num_splits`` ranges processed in parallel grid cells;
+each emits un-normalized partials (m, l, acc) and a cheap jnp combine
+(ops.py) merges them with the standard logsumexp algebra.  This mirrors the
+cross-shard combine used for sequence-sharded caches at long_500k
+(DESIGN.md section 4) — the same algebra, intra-chip.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    kv_len_ref,  # [1] int32 scalar-prefetch
+    q_ref,  # [1, G, D]   (one kv-head group's query rows)
+    k_ref,  # [1, ck, D]
+    v_ref,  # [1, ck, D]
+    m_ref,  # [1, 1, G, 128] out partial max
+    l_ref,  # [1, 1, G, 128] out partial denominator
+    acc_ref,  # [1, 1, G, D] out partial numerator
+    *,
+    scale: float,
+    softcap: float | None,
+    ck: int,
+    window: int | None,
+):
+    si = pl.program_id(1)
+    kv_len = kv_len_ref[0]
+    q = q_ref[0].astype(jnp.float32)  # [G, D]
+    k = k_ref[0].astype(jnp.float32)  # [ck, D]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [G, ck]
+    s = s * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    k_pos = si * ck + jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], ck), 1)
+    ok = k_pos < kv_len  # causal: the new token sits at position kv_len
+    if window is not None:
+        ok = jnp.logical_and(ok, k_pos > kv_len - window)
+    s = jnp.where(ok, s, NEG_INF)
+    m = jnp.max(s, axis=1, keepdims=True)  # [G, 1]
+    p = jnp.where(ok, jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=1, keepdims=True)
+    acc = jax.lax.dot_general(
+        p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [G, D]
+    m_ref[0, 0] = jnp.broadcast_to(m, m_ref.shape[2:])
+    l_ref[0, 0] = jnp.broadcast_to(l, l_ref.shape[2:])
+    acc_ref[0, 0] = acc
+
+
+def decode_attention_partials(
+    q: jax.Array,  # [BKV, G, D] one query token per (batch, kv head), G = q_per_kv
+    k: jax.Array,  # [BKV, Skv, D]
+    v: jax.Array,  # [BKV, Skv, D]
+    kv_len: jax.Array,  # [1] int32
+    *,
+    softcap: float | None = None,
+    window: int | None = None,
+    num_splits: int = 8,
+    interpret: bool = False,
+):
+    bkv, g, d = q.shape
+    skv = k.shape[1]
+    while skv % num_splits != 0:
+        num_splits //= 2
+    ck = skv // num_splits
+    scale = 1.0 / math.sqrt(d)
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, softcap=softcap, ck=ck, window=window
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bkv, num_splits),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda i, si, *_: (i, 0, 0)),
+            pl.BlockSpec((1, ck, d), lambda i, si, *_: (i, si, 0)),
+            pl.BlockSpec((1, ck, d), lambda i, si, *_: (i, si, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, 128), lambda i, si, *_: (i, si, 0, 0)),
+            pl.BlockSpec((1, 1, g, 128), lambda i, si, *_: (i, si, 0, 0)),
+            pl.BlockSpec((1, 1, g, d), lambda i, si, *_: (i, si, 0, 0)),
+        ],
+    )
+    m, l, acc = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bkv, num_splits, g, 128), jnp.float32),
+            jax.ShapeDtypeStruct((bkv, num_splits, g, 128), jnp.float32),
+            jax.ShapeDtypeStruct((bkv, num_splits, g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), q, k, v)
+    return m[..., 0], l[..., 0], acc  # [BKV, ns, G], [BKV, ns, G], [BKV, ns, G, D]

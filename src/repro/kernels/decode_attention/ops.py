@@ -1,0 +1,59 @@
+"""Jit'd decode attention: split-KV kernel partials + logsumexp combine."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_partials
+
+
+def _is_cpu() -> bool:
+    return jax.devices()[0].platform == "cpu"
+
+
+def combine_partials(m, l, acc):
+    """Merge split partials: [.., ns, G], [.., ns, G], [.., ns, G, D] -> [.., G, D].
+
+    Also used across sequence-sharded cache shards at long_500k: each shard
+    produces one (m, l, acc) triple and this combine runs after an all-gather
+    of 2 scalars + one [D] vector per head.
+    """
+    m_g = jnp.max(m, axis=-2, keepdims=True)  # [.., 1, G]
+    w = jnp.exp(m - m_g)  # [.., ns, G]
+    l_g = jnp.sum(l * w, axis=-2)  # [.., G]
+    num = jnp.sum(acc * w[..., None], axis=-3)  # [.., G, D]
+    return num / jnp.maximum(l_g, 1e-20)[..., None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("softcap", "window", "num_splits", "interpret")
+)
+def decode_attention(
+    q: jax.Array,  # [B, 1, H, D]
+    k: jax.Array,  # [B, Skv, KV, D]
+    v: jax.Array,  # [B, Skv, KV, D]
+    kv_len: jax.Array,  # [1] int32 (tokens already in cache; q attends to them)
+    *,
+    softcap: float | None = None,
+    window: int | None = None,
+    num_splits: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = _is_cpu()
+    b, _, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qm = q[:, 0].reshape(b, kvh, g, d).reshape(b * kvh, g, d)
+    km = jnp.transpose(k, (0, 2, 1, 3)).reshape(b * kvh, skv, d)
+    vm = jnp.transpose(v, (0, 2, 1, 3)).reshape(b * kvh, skv, d)
+    m, l, acc = decode_attention_partials(
+        qm, km, vm, jnp.reshape(kv_len, (1,)),
+        softcap=softcap, window=window, num_splits=num_splits,
+        interpret=interpret,
+    )
+    out = combine_partials(m, l, acc)  # [B*KV, G, D]
+    return out.reshape(b, kvh * g, d)[:, None].reshape(b, 1, h, d)

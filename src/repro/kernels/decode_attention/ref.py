@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for decode attention (single-token full-cache softmax)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_decode(
+    q: jax.Array,  # [B, 1, H, D]
+    k: jax.Array,  # [B, Skv, KV, D]
+    v: jax.Array,  # [B, Skv, KV, D]
+    kv_len: jax.Array,  # [1] int32
+    *,
+    softcap: float | None = None,
+    window: int | None = None,
+) -> jax.Array:
+    b, _, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q[:, 0].reshape(b, kvh, g, d)
+    s = jnp.einsum(
+        "bkgd,bskd->bkgs", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) / math.sqrt(d)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    kl = kv_len[0]
+    pos = jnp.arange(skv)
+    ok = pos < kl
+    if window is not None:
+        ok &= pos > kl - window
+    s = jnp.where(ok[None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)

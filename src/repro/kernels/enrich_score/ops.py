@@ -1,0 +1,76 @@
+"""Jit'd wrapper: EnrichmentState -> TripleBenefits via the fused kernel.
+
+Drop-in replacement for ``repro.core.benefit.compute_benefits`` on
+conjunctive queries (``OperatorConfig.use_fused_kernel``)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.benefit import TripleBenefits
+from repro.core.decision_table import DecisionTable
+from repro.core.entropy import _inverse_entropy_table
+from repro.core.query import CompiledQuery
+from repro.core.state import EnrichmentState
+from repro.kernels.enrich_score.kernel import enrich_score_tiles
+
+TILE = 256
+
+
+def _is_cpu() -> bool:
+    return jax.devices()[0].platform == "cpu"
+
+
+def fused_benefits(
+    state: EnrichmentState,
+    query: CompiledQuery,
+    table: DecisionTable,
+    costs: jax.Array,  # [P, F]
+    candidate_mask: jax.Array | None = None,
+    interpret: bool | None = None,
+    lut_bins: int = 4096,
+) -> TripleBenefits:
+    assert query.is_conjunctive, "fused kernel covers the conjunctive fast path"
+    if interpret is None:
+        interpret = _is_cpu()
+    n, p = state.pred_prob.shape
+    f = costs.shape[1]
+    if candidate_mask is None:
+        candidate_mask = ~state.in_answer
+
+    m = n * p
+    pad = (-m) % TILE
+    rows = (m + pad) // TILE
+
+    def flat(x, fill=0.0):
+        x = x.reshape(-1).astype(jnp.float32)
+        x = jnp.pad(x, (0, pad), constant_values=fill)
+        return x.reshape(rows, TILE)
+
+    pred_idx = jnp.broadcast_to(jnp.arange(p, dtype=jnp.int32)[None], (n, p))
+    out = enrich_score_tiles(
+        flat(state.pred_prob),
+        flat(state.uncertainty),
+        flat(state.state_id().astype(jnp.float32)),
+        flat(pred_idx.astype(jnp.float32)),
+        flat(jnp.broadcast_to(state.joint_prob[:, None], (n, p))),
+        flat(jnp.broadcast_to(candidate_mask[:, None], (n, p)).astype(jnp.float32)),
+        table.delta_h.reshape(-1).astype(jnp.float32),
+        table.next_fn.reshape(-1).astype(jnp.float32),
+        costs.reshape(-1).astype(jnp.float32),
+        jnp.asarray(_inverse_entropy_table(lut_bins)),
+        num_bins=table.num_bins,
+        num_states=table.num_states,
+        num_functions=f,
+        interpret=interpret,
+    )
+    benefit, next_fn, est_joint = (x.reshape(-1)[:m].reshape(n, p) for x in out)
+    benefit = jnp.where(benefit <= -1e29, -jnp.inf, benefit)
+    nf = next_fn.astype(jnp.int32)
+    cost = costs[pred_idx, jnp.maximum(nf, 0)]
+    return TripleBenefits(
+        benefit=benefit, next_fn=nf, est_joint=est_joint, cost=cost
+    )

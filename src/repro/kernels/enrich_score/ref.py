@@ -1,0 +1,4 @@
+"""Oracle for the fused scoring kernel = the step-by-step jnp pipeline in
+``repro.core.benefit.compute_benefits`` (the paper-faithful reference)."""
+
+from repro.core.benefit import compute_benefits as reference_benefits  # noqa: F401

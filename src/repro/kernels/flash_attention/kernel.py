@@ -1,0 +1,188 @@
+"""Flash attention Pallas TPU kernel: block-wise online softmax with VMEM
+accumulators (FlashAttention algorithm re-tiled for MXU/VMEM).
+
+Grid: (B*H, num_q_blocks, num_kv_blocks) — kv innermost, so the (m, l, acc)
+running statistics live in VMEM scratch across kv iterations; at the last kv
+block the normalized output is written.  GQA is resolved in the k/v index
+maps (q-head -> kv-head integer mapping), so no k/v replication happens in
+HBM.  Causal / sliding-window / cache-length masking is applied from block
+indices via 2D iota; fully-masked (q, kv) block pairs short-circuit with
+``pl.when`` (no MXU work issued).
+
+Supports: causal, sliding window, logit softcap, dynamic kv_len (decode /
+chunked prefill), GQA head mapping.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    # scalar-prefetch
+    kv_len_ref,  # [1] int32 in SMEM
+    # inputs
+    q_ref,  # [1, cq, d]
+    k_ref,  # [1, ck, d]
+    v_ref,  # [1, ck, d]
+    # outputs
+    o_ref,  # [1, cq, d]
+    # scratch
+    m_ref,  # [cq, 128] f32
+    l_ref,  # [cq, 128] f32
+    acc_ref,  # [cq, d] f32
+    *,
+    causal: bool,
+    window: int | None,
+    softcap: float | None,
+    scale: float,
+    cq: int,
+    ck: int,
+    num_kv_blocks: int,
+    q_offset_from_kv_len: bool,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    kv_len = kv_len_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # absolute positions of this block's rows/cols
+    if q_offset_from_kv_len:
+        # decode/suffix mode: q rows sit at the end of the valid cache
+        q_base = kv_len - (pl.num_programs(1) * cq) + qi * cq
+    else:
+        q_base = qi * cq
+    q_pos = q_base + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
+    k_pos = ki * ck + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 1)
+
+    # block-level reachability (static off-diagonal skip for causal/window)
+    block_live = jnp.asarray(True)
+    if causal:
+        block_live = jnp.logical_and(
+            block_live, ki * ck <= q_base + cq - 1
+        )
+    if window is not None:
+        block_live = jnp.logical_and(
+            block_live, (ki + 1) * ck - 1 > q_base - window
+        )
+    block_live = jnp.logical_and(block_live, ki * ck < kv_len)
+
+    @pl.when(block_live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [cq, ck]
+        s = s * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        ok = k_pos < kv_len
+        if causal:
+            ok = jnp.logical_and(ok, k_pos <= q_pos)
+        if window is not None:
+            ok = jnp.logical_and(ok, k_pos > q_pos - window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[:, 0:1]  # [cq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(ok, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)  # [cq, 1]
+        l_new = l_ref[:, 0:1] * corr + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [cq, d]
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        l = l_ref[:, 0:1]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, ...] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(
+    q: jax.Array,  # [BH, Sq, D]   (B*H merged)
+    k: jax.Array,  # [BKV, Skv, D] (B*KV merged)
+    v: jax.Array,  # [BKV, Skv, D]
+    kv_len: jax.Array,  # [1] int32 (valid cache length; Skv if uncached)
+    *,
+    num_q_heads: int,
+    num_kv_heads: int,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    q_offset_from_kv_len: bool = False,
+    block_q: int = 512,
+    block_kv: int = 512,
+    interpret: bool = False,
+):
+    bh, sq, d = q.shape
+    bkv, skv, _ = k.shape
+    qpk = num_q_heads // num_kv_heads
+    cq = min(block_q, sq)
+    ck = min(block_kv, skv)
+    assert sq % cq == 0 and skv % ck == 0
+    nq, nk = sq // cq, skv // ck
+    scale = 1.0 / math.sqrt(d)
+
+    # NB: with num_scalar_prefetch=1 the index maps receive the scalar ref
+    # as a trailing argument.
+    def q_map(i, qi, ki, *_):
+        return (i, qi, 0)
+
+    def kv_map(i, qi, ki, *_):
+        b = i // num_q_heads
+        h = i % num_q_heads
+        return (b * num_kv_heads + h // qpk, ki, 0)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        scale=scale,
+        cq=cq,
+        ck=ck,
+        num_kv_blocks=nk,
+        q_offset_from_kv_len=q_offset_from_kv_len,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, cq, d), q_map),
+            pl.BlockSpec((1, ck, d), kv_map),
+            pl.BlockSpec((1, ck, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, cq, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((cq, 128), jnp.float32),
+            pltpu.VMEM((cq, 128), jnp.float32),
+            pltpu.VMEM((cq, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), q, k, v)

@@ -1,0 +1,55 @@
+"""Jit'd public wrapper: [B, S, H, D] layout in, GQA handled, TPU target with
+interpret-mode fallback on CPU (how tests validate the kernel)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def _is_cpu() -> bool:
+    return jax.devices()[0].platform == "cpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "logit_softcap", "q_offset_from_kv_len",
+        "block_q", "block_kv", "interpret",
+    ),
+)
+def flash_attention(
+    q: jax.Array,  # [B, Sq, H, D]
+    k: jax.Array,  # [B, Skv, KV, D]
+    v: jax.Array,  # [B, Skv, KV, D]
+    kv_len: jax.Array | None = None,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    logit_softcap: float | None = None,
+    q_offset_from_kv_len: bool = False,
+    block_q: int = 512,
+    block_kv: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    if kv_len is None:
+        kv_len = jnp.asarray([skv], jnp.int32)
+    kv_len = jnp.reshape(kv_len, (1,)).astype(jnp.int32)
+    if interpret is None:
+        interpret = _is_cpu()
+    qm = jnp.transpose(q, (0, 2, 1, 3)).reshape(b * h, sq, d)
+    km = jnp.transpose(k, (0, 2, 1, 3)).reshape(b * kvh, skv, d)
+    vm = jnp.transpose(v, (0, 2, 1, 3)).reshape(b * kvh, skv, d)
+    out = flash_attention_bhsd(
+        qm, km, vm, kv_len,
+        num_q_heads=h, num_kv_heads=kvh, causal=causal, window=window,
+        softcap=logit_softcap, q_offset_from_kv_len=q_offset_from_kv_len,
+        block_q=block_q, block_kv=block_kv, interpret=interpret,
+    )
+    return jnp.transpose(out.reshape(b, h, sq, d), (0, 2, 1, 3))

@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for the flash attention kernel (naive softmax(QK^T)V)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_bhsd(
+    q: jax.Array,  # [BH, Sq, D]
+    k: jax.Array,  # [BKV, Skv, D]
+    v: jax.Array,  # [BKV, Skv, D]
+    kv_len: jax.Array,  # [1] int32
+    *,
+    num_q_heads: int,
+    num_kv_heads: int,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    q_offset_from_kv_len: bool = False,
+) -> jax.Array:
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    qpk = num_q_heads // num_kv_heads
+    b = bh // num_q_heads
+    # expand kv to per-q-head
+    k_e = jnp.repeat(k.reshape(b, num_kv_heads, skv, d), qpk, axis=1).reshape(
+        bh, skv, d
+    )
+    v_e = jnp.repeat(v.reshape(b, num_kv_heads, skv, d), qpk, axis=1).reshape(
+        bh, skv, d
+    )
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32), k_e.astype(jnp.float32))
+    s = s / math.sqrt(d)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    kl = kv_len[0]
+    if q_offset_from_kv_len:
+        q_pos = kl - sq + jnp.arange(sq)
+    else:
+        q_pos = jnp.arange(sq)
+    k_pos = jnp.arange(skv)
+    ok = jnp.ones((sq, skv), bool)
+    ok &= k_pos[None, :] < kl
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(ok[None], s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m)
+    p = jnp.where(ok[None], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("hqk,hkd->hqd", p, v_e.astype(jnp.float32))
+    out = out / jnp.maximum(l, 1e-20)
+    return out.astype(q.dtype)

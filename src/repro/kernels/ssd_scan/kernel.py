@@ -1,0 +1,120 @@
+"""Mamba-2 SSD intra-chunk Pallas TPU kernel.
+
+Per (batch*head, chunk) grid cell, computes in VMEM:
+  * the masked-decay quadratic term  Y_intra = (L ∘ (C B^T) ∘ dt) X
+  * the chunk's state contribution   S = (X ∘ dt·tail)^T B
+  * the per-position cumulative decay exp(cum) and the chunk decay
+
+The inter-chunk recurrence (strictly sequential, O(S/Q) steps) runs in jnp
+scan in ops.py.  Cumulative sums are computed as a lower-triangular ones
+matmul so everything maps onto the MXU (no lane-dim cumsum on TPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    a_ref,  # [BH] f32 scalar-prefetch: per-head A (negative)
+    x_ref,  # [1, Q, P]
+    dt_ref,  # [1, Q]
+    b_ref,  # [1, Q, N]
+    c_ref,  # [1, Q, N]
+    y_ref,  # [1, Q, P] out: intra-chunk y
+    s_ref,  # [1, P, N] out: state contribution
+    ce_ref,  # [1, Q] out: exp(cum)
+    *,
+    q_size: int,
+):
+    i = pl.program_id(0)
+    a = a_ref[i]
+    x = x_ref[0].astype(jnp.float32)  # [Q, P]
+    dt = dt_ref[0].astype(jnp.float32)  # [Q]
+    b = b_ref[0].astype(jnp.float32)  # [Q, N]
+    c = c_ref[0].astype(jnp.float32)  # [Q, N]
+
+    adt = dt * a  # [Q]
+    # inclusive cumsum via lower-triangular ones matmul (MXU-friendly)
+    row = jax.lax.broadcasted_iota(jnp.int32, (q_size, q_size), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (q_size, q_size), 1)
+    tril_inc = (col <= row).astype(jnp.float32)  # [Q, Q] includes diagonal
+    cum = jax.lax.dot_general(
+        tril_inc, adt[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0]  # [Q]
+
+    cb = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [Q_i, Q_j]
+    decay = jnp.exp(cum[:, None] - cum[None, :])  # [Qi, Qj]
+    w = jnp.where(col <= row, decay, 0.0) * cb * dt[None, :]
+    y_intra = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [Q, P]
+
+    tail = jnp.exp(cum[q_size - 1] - cum)  # [Q]
+    xw = x * (dt * tail)[:, None]  # [Q, P]
+    s_contrib = jax.lax.dot_general(
+        xw, b, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [P, N]
+
+    y_ref[0, ...] = y_intra.astype(y_ref.dtype)
+    s_ref[0, ...] = s_contrib.astype(s_ref.dtype)
+    ce_ref[0, ...] = jnp.exp(cum).astype(ce_ref.dtype)
+
+
+def ssd_intra_chunk(
+    x: jax.Array,  # [BH, S, P]
+    dt: jax.Array,  # [BH, S]
+    a: jax.Array,  # [BH] f32
+    b: jax.Array,  # [BH, S, N] (pre-broadcast across heads by ops.py)
+    c: jax.Array,  # [BH, S, N]
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+):
+    bh, s, p = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+
+    def xmap(i, ci, *_):
+        return (i, ci, 0)
+
+    def dmap(i, ci, *_):
+        return (i, ci)
+
+    kernel = functools.partial(_ssd_kernel, q_size=chunk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), xmap),
+            pl.BlockSpec((1, chunk), dmap),
+            pl.BlockSpec((1, chunk, n), xmap),
+            pl.BlockSpec((1, chunk, n), xmap),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), xmap),
+            pl.BlockSpec((1, p, n), lambda i, ci, *_: (i * nc + ci, 0, 0)),
+            pl.BlockSpec((1, chunk), dmap),
+        ],
+    )
+    y, s_contrib, cumexp = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, p), jnp.float32),
+            jax.ShapeDtypeStruct((bh * nc, p, n), jnp.float32),
+            jax.ShapeDtypeStruct((bh, s), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a.astype(jnp.float32), x, dt, b, c)
+    return y, s_contrib.reshape(bh, nc, p, n), cumexp

@@ -1,0 +1,59 @@
+"""Jit'd SSD wrapper: Pallas intra-chunk kernel + jnp inter-chunk recurrence."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_intra_chunk
+
+
+def _is_cpu() -> bool:
+    return jax.devices()[0].platform == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,  # [BH, S, P]
+    dt: jax.Array,  # [BH, S]
+    a: jax.Array,  # [BH]
+    b: jax.Array,  # [BH, S, N]
+    c: jax.Array,  # [BH, S, N]
+    h0: jax.Array | None = None,  # [BH, P, N]
+    *,
+    chunk: int = 256,
+    interpret: bool | None = None,
+):
+    """Full SSD: y [BH, S, P], h_final [BH, P, N]."""
+    if interpret is None:
+        interpret = _is_cpu()
+    bh, s, p = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, s)
+    nc = s // chunk
+    y_intra, s_contrib, cumexp = ssd_intra_chunk(
+        x, dt, a, b, c, chunk=chunk, interpret=interpret
+    )
+    if h0 is None:
+        h0 = jnp.zeros((bh, p, n), jnp.float32)
+
+    # inter-chunk recurrence: h_{i+1} = h_i * exp(cum_last_i) + S_i;
+    # y_inter[t] = C_t . (h_i * cumexp_t) for t in chunk i.
+    cr = c.reshape(bh, nc, chunk, n)
+    ce = cumexp.reshape(bh, nc, chunk)
+
+    def step(h, inp):
+        s_i, c_i, ce_i = inp  # [BH,P,N], [BH,Q,N], [BH,Q]
+        y_inter = jnp.einsum("bqn,bpn,bq->bqp", c_i.astype(jnp.float32), h, ce_i)
+        h_new = h * ce_i[:, -1][:, None, None] + s_i
+        return h_new, y_inter
+
+    h_final, y_inter = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(s_contrib, 1, 0), jnp.moveaxis(cr, 1, 0),
+         jnp.moveaxis(ce, 1, 0)),
+    )
+    y_inter = jnp.moveaxis(y_inter, 0, 1).reshape(bh, s, p)
+    return y_intra + y_inter, h_final

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the SSD kernel: naive O(S) state recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_ssd(
+    x: jax.Array,  # [BH, S, P]
+    dt: jax.Array,  # [BH, S]
+    a: jax.Array,  # [BH]
+    b: jax.Array,  # [BH, S, N]
+    c: jax.Array,  # [BH, S, N]
+    h0: jax.Array | None = None,  # [BH, P, N]
+):
+    """y_t = C_t . h_t;  h_t = h_{t-1} exp(a dt_t) + dt_t x_t B_t^T."""
+    bh, s, p = x.shape
+    n = b.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((bh, p, n), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # [BH,P], [BH], [BH,N], [BH,N]
+        decay = jnp.exp(a * dtt)[:, None, None]
+        h = h * decay + jnp.einsum(
+            "bp,bn,b->bpn", xt.astype(jnp.float32), bt.astype(jnp.float32), dtt
+        )
+        y = jnp.einsum("bpn,bn->bp", h, ct.astype(jnp.float32))
+        return h, y
+
+    h_final, ys = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(b, 1, 0), jnp.moveaxis(c, 1, 0)),
+    )
+    return jnp.moveaxis(ys, 0, 1), h_final  # [BH, S, P], [BH, P, N]

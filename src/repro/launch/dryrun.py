@@ -1,0 +1,205 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+AOT-lowers and compiles every (architecture x input-shape) cell against the
+production meshes — (16, 16) single-pod and (2, 16, 16) multi-pod — on 512
+placeholder host devices, then records:
+
+  * memory_analysis()  — per-device argument/output/temp bytes (proves fit)
+  * cost_analysis()    — HLO FLOPs + bytes accessed (roofline numerator)
+  * collective bytes   — parsed from the partitioned HLO: per-device operand
+    bytes of all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute, by op kind
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs.archs import ARCHS, get_config
+from repro.configs.shapes import SHAPES, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b((?:pred|s8|u8|s16|u16|s32|u32|s64|u64|bf16|f16|f32|f64|c64|c128))\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*)$")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes of every array shape literal in `text`."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Per-device operand bytes of collectives in partitioned HLO, by kind.
+
+    Builds name -> output bytes for every instruction, then for each
+    collective sums the output bytes of its operands.
+    """
+    out_bytes: dict = {}
+    pending = []  # (kind, [operand names]) resolved after the table is built
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # output shape = everything before the opcode name
+        out_bytes[name] = _shape_bytes(rhs.split(" ", 1)[0] if rhs else "")
+        for kind in COLLECTIVE_OPS:
+            if f"{kind}(" in rhs or f"{kind}-start(" in rhs:
+                ops = re.findall(r"(%[\w.\-]+)", rhs)  # operand references
+                pending.append((kind, ops))
+                break
+    totals = {k: 0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    for kind, ops in pending:
+        counts[kind] += 1
+        totals[kind] += sum(out_bytes.get(o, 0) for o in ops)
+    return {
+        "bytes_by_kind": totals,
+        "count_by_kind": counts,
+        "total_bytes": int(sum(totals.values())),
+        "total_count": int(sum(counts.values())),
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path) -> dict:
+    cfg = get_config(arch)
+    spec = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape_name)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "runnable": ok, "reason": reason, "status": "skipped" if not ok else None,
+    }
+    if not ok:
+        return result
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        built = build_step(cfg, spec, mesh)
+        t_build = time.time()
+        lowered = built.fn.lower(*built.args)
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    coll = parse_collective_bytes(hlo)
+    result.update(
+        status="ok",
+        times=dict(
+            build_s=round(t_build - t0, 2),
+            lower_s=round(t_lower - t_build, 2),
+            compile_s=round(t_compile - t_lower, 2),
+        ),
+        memory=dict(
+            argument_bytes=int(getattr(mem, "argument_size_in_bytes", 0)),
+            output_bytes=int(getattr(mem, "output_size_in_bytes", 0)),
+            temp_bytes=int(getattr(mem, "temp_size_in_bytes", 0)),
+            alias_bytes=int(getattr(mem, "alias_size_in_bytes", 0)),
+        ),
+        cost=dict(
+            flops=float(cost.get("flops", -1)) if cost else -1,
+            transcendentals=float(cost.get("transcendentals", -1)) if cost else -1,
+            bytes_accessed=float(cost.get("bytes accessed", -1)) if cost else -1,
+        ),
+        collectives=coll,
+        hlo_lines=hlo.count("\n"),
+        params_total=cfg.param_counts()["total"],
+        params_active=cfg.param_counts()["active"],
+    )
+    # memory fit check against v5e 16 GiB HBM
+    per_dev = (
+        result["memory"]["argument_bytes"]
+        + result["memory"]["temp_bytes"]
+        + result["memory"]["output_bytes"]
+        - result["memory"]["alias_bytes"]
+    )
+    result["memory"]["per_device_total"] = int(per_dev)
+    result["memory"]["fits_16g"] = bool(per_dev < 16 * 1024**3)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"{arch}__{shape_name}__{mesh_name}.json"
+    path.write_text(json.dumps(result, indent=2))
+    print(f"[dryrun] wrote {path}")
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args(argv)
+
+    out_dir = Path(args.out)
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        try:
+            r = run_cell(arch, shape, args.multi_pod, out_dir)
+            if r["status"] == "ok":
+                m = r["memory"]
+                print(
+                    f"[dryrun] {arch} x {shape} x {r['mesh']}: OK "
+                    f"compile={r['times']['compile_s']}s "
+                    f"per-dev={m['per_device_total']/2**30:.2f}GiB "
+                    f"fits16G={m['fits_16g']} "
+                    f"flops={r['cost']['flops']:.3g} "
+                    f"coll={r['collectives']['total_bytes']/2**20:.1f}MiB"
+                )
+            else:
+                print(f"[dryrun] {arch} x {shape}: SKIP ({r['reason']})")
+        except Exception as e:
+            failures += 1
+            print(f"[dryrun] {arch} x {shape}: FAIL {type(e).__name__}: {e}")
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

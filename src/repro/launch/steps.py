@@ -1,0 +1,338 @@
+"""Step builders: jitted train_step / prefill / decode_step with explicit
+in/out shardings, plus ``input_specs()`` ShapeDtypeStruct stand-ins for AOT
+lowering (assignment MULTI-POD DRY-RUN steps 2-3).
+
+Everything here is allocation-free: abstract params via ``jax.eval_shape``,
+inputs as ShapeDtypeStructs carrying NamedShardings — ``.lower()`` +
+``.compile()`` never touch device memory."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec
+from repro.launch.rules import rules_for_cell
+from repro.models.activation_sharding import activation_sharding
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.models.sharding import ShardingRules
+from repro.models.transformer import init_model_cache, model_cache_axes
+from repro.optim.adamw import AdamW, AdamWState, clip_by_global_norm
+
+def _AXES_LEAF(x):
+    """Logical-axes leaves are tuples of axis names (or empty, for scalars).
+
+    A tuple of ONLY Nones is NOT a leaf: that shape arises in cache pytrees
+    as a container of per-pattern-position entries where a position has no
+    cache — e.g. ``ssm_conv=(None,)`` for attention-only models."""
+    if not isinstance(x, tuple):
+        return False
+    if not all(e is None or isinstance(e, str) for e in x):
+        return False
+    return len(x) == 0 or any(isinstance(e, str) for e in x)
+
+
+def shardings_for_axes(axes_tree, rules: ShardingRules, mesh: Mesh):
+    return jax.tree.map(
+        lambda ax: rules.sharding(mesh, ax), axes_tree, is_leaf=_AXES_LEAF
+    )
+
+
+def abstract_params_and_axes(model: Model):
+    """(abstract params, logical axes) with ZERO allocation: init traced under
+    eval_shape; the axes pytree (static strings) is captured by side effect."""
+    captured = {}
+
+    def f(k):
+        p, a = model.init_params(k)
+        captured["axes"] = a
+        return p
+
+    abstract = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return abstract, captured["axes"]
+
+
+def _with_sharding(abstract_tree, sharding_tree, force_dtype=None):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(
+            s.shape, force_dtype or s.dtype, sharding=sh
+        ),
+        abstract_tree,
+        sharding_tree,
+    )
+
+
+def _serve_dtype(tree, dtype=jnp.bfloat16):
+    """Serving stores params in bf16 (checkpoint-cast at load; halves HBM)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, dtype if jnp.issubdtype(s.dtype, jnp.floating) else s.dtype
+        ),
+        tree,
+    )
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+# ------------------------------------------------------------- input specs --
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, rules=None):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    rules = rules or rules_for_cell(cfg, mesh, shape.kind, shape.global_batch)
+    b = shape.global_batch
+    dp_spec = rules.sharding(mesh, ("batch", "seq"))
+    dp3_spec = rules.sharding(mesh, ("batch", "seq", "act_embed"))
+    act_dt = cfg.activation_dtype
+
+    def tok(s):
+        return jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=dp_spec)
+
+    # Vision archs spend part of the context budget on anyres patch tokens:
+    # text length shrinks so prefix + text == the assigned seq_len.
+    text_len = shape.seq_len
+    if cfg.frontend == "vision" and shape.kind in ("prefill",):
+        text_len = shape.seq_len - cfg.num_image_tokens
+        assert text_len > 0
+
+    if shape.kind == "train":
+        batch = {"tokens": tok(shape.seq_len), "targets": tok(shape.seq_len)}
+        if cfg.frontend == "vision":
+            batch["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_image_tokens, cfg.d_model), act_dt, sharding=dp3_spec
+            )
+        if cfg.frontend == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder.seq_len, cfg.d_model), act_dt, sharding=dp3_spec
+            )
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": tok(text_len)}
+        if cfg.frontend == "vision":
+            batch["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_image_tokens, cfg.d_model), act_dt, sharding=dp3_spec
+            )
+        if cfg.frontend == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder.seq_len, cfg.d_model), act_dt, sharding=dp3_spec
+            )
+        return batch
+    if shape.kind == "decode":
+        return {"token": tok(1)}
+    raise ValueError(shape.kind)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, rules=None):
+    """Abstract KV/SSM cache for decode cells, with shardings."""
+    rules = rules or rules_for_cell(cfg, mesh, shape.kind, shape.global_batch)
+    b = shape.global_batch
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = jax.ShapeDtypeStruct(
+            (b, cfg.encoder.seq_len, cfg.d_model), cfg.activation_dtype
+        )
+    abstract = jax.eval_shape(
+        lambda: init_model_cache(
+            cfg, b, shape.seq_len, cfg.activation_dtype,
+            enc_out=enc_out if enc_out is None else jnp.zeros(enc_out.shape, enc_out.dtype),
+        )
+    )
+    axes = model_cache_axes(cfg, shard_kv_seq=True)
+    shardings = shardings_for_axes(axes, rules, mesh)
+    # prune sharding tree to abstract tree structure (enc_out may be absent)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        abstract, shardings,
+    )
+
+
+# -------------------------------------------------------------- step fns ----
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: Any  # jitted function
+    args: tuple  # abstract args (ShapeDtypeStructs) for .lower(*args)
+    param_shardings: Any
+    rules: ShardingRules
+
+
+def default_microbatches(
+    shape: ShapeSpec, mesh: Mesh, cfg: Optional[ModelConfig] = None,
+    act_budget_bytes: float = 4e9,
+) -> int:
+    """Gradient-accumulation factor bounding live activations: the layer-scan
+    residual stack costs rows*S*d*L*2 bytes per shard, so the per-shard row
+    count is sized against ``act_budget_bytes`` (DESIGN.md section 4)."""
+    import numpy as _np
+
+    names = set(mesh.axis_names)
+    dp = int(_np.prod([mesh.shape[a] for a in ("pod", "data") if a in names]))
+    rows = max(shape.global_batch // max(dp, 1), 1)
+    if cfg is not None:
+        per_row = 2.0 * shape.seq_len * cfg.d_model * max(cfg.num_layers, 1)
+        target_rows = int(max(1, min(8, act_budget_bytes // max(per_row, 1))))
+    else:
+        target_rows = 4
+    m = max(1, rows // target_rows)
+    while shape.global_batch % m != 0:
+        m -= 1
+    return m
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    shape: ShapeSpec,
+    mesh: Mesh,
+    optimizer: Optional[AdamW] = None,
+    grad_clip: float = 1.0,
+    donate: bool = True,
+    num_microbatches: Optional[int] = None,
+) -> BuiltStep:
+    model = Model(cfg)
+    rules = rules_for_cell(cfg, mesh, shape.kind, shape.global_batch)
+    big = cfg.param_counts()["total"] > 2e11
+    # >=300B recipe (DESIGN.md section 4): bf16 params + Adafactor factored
+    # moments + bf16 grad accumulation; smaller models keep f32 + AdamW.
+    if optimizer is not None:
+        opt = optimizer
+    elif big:
+        from repro.optim.adafactor import Adafactor
+
+        opt = Adafactor()
+    else:
+        opt = AdamW()
+    mb = num_microbatches or default_microbatches(shape, mesh, cfg)
+    accum_dtype = jnp.bfloat16 if big else jnp.float32
+
+    abstract_params, axes = abstract_params_and_axes(model)
+    if big:
+        abstract_params = _serve_dtype(abstract_params)  # bf16 train params
+    param_sh = shardings_for_axes(axes, rules, mesh)
+
+    opt_abstract = jax.eval_shape(opt.init, abstract_params)
+    # optimizer-state shardings: leaves that mirror a param keep its sharding;
+    # factored/scalar leaves replicate (XLA re-shards factors cheaply).
+    param_by_shape = {}
+    for p, sh in zip(jax.tree.leaves(abstract_params), jax.tree.leaves(param_sh)):
+        param_by_shape.setdefault((p.shape, str(p.dtype)), sh)
+
+    def _opt_leaf_sharding(leaf):
+        return param_by_shape.get((leaf.shape, str(leaf.dtype)), _replicated(mesh))
+
+    opt_sh = jax.tree.map(_opt_leaf_sharding, opt_abstract)
+
+    batch_abstract = input_specs(cfg, shape, mesh, rules)
+    batch_sh = jax.tree.map(lambda s: s.sharding, batch_abstract)
+
+    def train_step(params, opt_state, batch):
+        with activation_sharding(mesh, rules):
+            if mb > 1:
+                # gradient accumulation: scan microbatches, f32 grad sum
+                batch_r = jax.tree.map(
+                    lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:]),
+                    batch,
+                )
+
+                def micro(gsum, mbatch):
+                    (_, metrics), grads = jax.value_and_grad(
+                        lambda p: model.loss_fn(p, mbatch), has_aux=True
+                    )(params)
+                    gsum = jax.tree.map(
+                        lambda a, g: a + g.astype(accum_dtype), gsum, grads
+                    )
+                    return gsum, metrics
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, accum_dtype), params
+                )
+                gsum, metrics_all = jax.lax.scan(micro, zeros, batch_r)
+                grads = jax.tree.map(lambda g: g / mb, gsum)
+                metrics = jax.tree.map(jnp.mean, metrics_all)
+            else:
+                (_, metrics), grads = jax.value_and_grad(
+                    lambda p: model.loss_fn(p, batch), has_aux=True
+                )(params)
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+            params, opt_state = opt.update(grads, opt_state, params)
+            metrics = dict(metrics, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    fn = jax.jit(
+        train_step,
+        in_shardings=(param_sh, opt_sh, batch_sh),
+        out_shardings=(param_sh, opt_sh, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    args = (
+        _with_sharding(abstract_params, param_sh),
+        _with_sharding(opt_abstract, opt_sh),
+        batch_abstract,
+    )
+    return BuiltStep(fn=fn, args=args, param_shardings=param_sh, rules=rules)
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh) -> BuiltStep:
+    model = Model(cfg)
+    rules = rules_for_cell(cfg, mesh, shape.kind, shape.global_batch)
+    abstract_params, axes = abstract_params_and_axes(model)
+    abstract_params = _serve_dtype(abstract_params)
+    param_sh = shardings_for_axes(axes, rules, mesh)
+    batch_abstract = input_specs(cfg, shape, mesh, rules)
+    batch_sh = jax.tree.map(lambda s: s.sharding, batch_abstract)
+
+    # cache out-shardings follow the decode-shape layout so serve_step chains
+    cache_axes = model_cache_axes(cfg, shard_kv_seq=True)
+    cache_sh = shardings_for_axes(cache_axes, rules, mesh)
+
+    def prefill(params, batch):
+        with activation_sharding(mesh, rules):
+            return model.prefill(params, batch, max_len=shape.seq_len)
+
+    fn = jax.jit(
+        prefill,
+        in_shardings=(param_sh, batch_sh),
+        out_shardings=None,
+    )
+    args = (_with_sharding(abstract_params, param_sh), batch_abstract)
+    return BuiltStep(fn=fn, args=args, param_shardings=param_sh, rules=rules)
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh) -> BuiltStep:
+    model = Model(cfg)
+    rules = rules_for_cell(cfg, mesh, shape.kind, shape.global_batch)
+    abstract_params, axes = abstract_params_and_axes(model)
+    abstract_params = _serve_dtype(abstract_params)
+    param_sh = shardings_for_axes(axes, rules, mesh)
+    token = input_specs(cfg, shape, mesh, rules)["token"]
+    cache_abstract = cache_specs(cfg, shape, mesh, rules)
+    cache_sh = jax.tree.map(lambda s: s.sharding, cache_abstract)
+
+    def decode(params, token, cache):
+        with activation_sharding(mesh, rules):
+            return model.decode_step(params, token, cache)
+
+    fn = jax.jit(
+        decode,
+        in_shardings=(param_sh, token.sharding, cache_sh),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(2,),
+    )
+    args = (_with_sharding(abstract_params, param_sh), token, cache_abstract)
+    return BuiltStep(fn=fn, args=args, param_shardings=param_sh, rules=rules)
+
+
+def build_step(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh) -> BuiltStep:
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh)
+    if shape.kind == "decode":
+        return build_decode_step(cfg, shape, mesh)
+    raise ValueError(shape.kind)

@@ -1,0 +1,129 @@
+"""Training driver: end-to-end train loop with checkpoint/restart, preemption
+handling, straggler accounting and (optional) cross-pod gradient compression.
+
+CPU-scale usage (examples/train_tagger.py uses this):
+    python -m repro.launch.train --arch qwen3-1.7b --smoke --steps 50
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import latest_step, prune_old, restore_checkpoint, save_checkpoint
+from repro.configs.archs import get_config
+from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.data.pipeline import PrefetchIterator, SyntheticTokenStream, TokenStreamConfig
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import build_train_step
+from repro.models.model import Model
+from repro.runtime.fault_tolerance import PreemptionHandler, StragglerMonitor
+
+
+def train_loop(
+    cfg,
+    shape: ShapeSpec,
+    mesh,
+    steps: int,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 20,
+    resume: bool = True,
+    preemption: PreemptionHandler | None = None,
+    log_every: int = 10,
+):
+    model = Model(cfg)
+    built = build_train_step(cfg, shape, mesh, donate=False)
+
+    params = jax.jit(
+        lambda k: model.init_params(k)[0], out_shardings=built.param_shardings
+    )(jax.random.PRNGKey(0))
+    from repro.launch.steps import _serve_dtype  # big-model bf16 params
+
+    if cfg.param_counts()["total"] > 2e11:
+        params = jax.tree.map(
+            lambda p: p.astype(jnp.bfloat16)
+            if jnp.issubdtype(p.dtype, jnp.floating) else p, params
+        )
+    from repro.optim.adafactor import Adafactor
+    from repro.optim.adamw import AdamW
+
+    opt = Adafactor() if cfg.param_counts()["total"] > 2e11 else AdamW()
+    opt_state = jax.jit(opt.init)(params)
+
+    start = 0
+    if ckpt_dir and resume and latest_step(ckpt_dir) is not None:
+        (params, opt_state), start = restore_checkpoint(
+            ckpt_dir, None, (params, opt_state)
+        )
+        print(f"[train] resumed from step {start}")
+
+    def extra_fn(rng, b):
+        out = {}
+        if cfg.frontend == "vision":
+            out["image_embeds"] = rng.normal(
+                size=(b, cfg.num_image_tokens, cfg.d_model)
+            ).astype(np.float32)
+        if cfg.frontend == "audio":
+            out["frames"] = rng.normal(
+                size=(b, cfg.encoder.seq_len, cfg.d_model)
+            ).astype(np.float32)
+        return out
+
+    stream = SyntheticTokenStream(
+        TokenStreamConfig(cfg.vocab_size, shape.seq_len, shape.global_batch),
+        extra_fn if cfg.frontend != "text" else None,
+    )
+    monitor = StragglerMonitor(num_shards=1)
+    history = []
+    for step in range(start, steps):
+        if preemption is not None and preemption.should_stop:
+            if ckpt_dir:
+                save_checkpoint(ckpt_dir, step, (params, opt_state))
+                print(f"[train] preempted; checkpointed at step {step}")
+            break
+        batch = jax.tree.map(jnp.asarray, stream.batch(step))
+        t0 = time.perf_counter()
+        params, opt_state, metrics = built.fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        monitor.record(0, dt)
+        history.append(dict(step=step, loss=loss, sec=dt))
+        if step % log_every == 0:
+            print(f"[train] step {step}: loss={loss:.4f} ({dt:.2f}s)")
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            save_checkpoint(ckpt_dir, step + 1, (params, opt_state))
+            prune_old(ckpt_dir, keep=3)
+    return params, opt_state, history
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    shape = ShapeSpec("cli", "train", args.seq_len, args.batch)
+    mesh = make_host_mesh()
+    handler = PreemptionHandler().install()
+    with mesh:
+        _, _, hist = train_loop(
+            cfg, shape, mesh, args.steps, ckpt_dir=args.ckpt, preemption=handler
+        )
+    if len(hist) >= 2:
+        print(f"[train] loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,241 @@
+"""GQA attention with the zoo's variants: RoPE, qk-norm, logit softcap,
+causal / sliding-window / non-causal (encoder, cross) masks, and KV caches.
+
+Score engines:
+    dense    — materializes [.., Sq, Skv] scores; used for decode (Sq == 1)
+               and short sequences.
+    chunked  — online-softmax over (q-block, kv-block) tiles in pure jnp
+               (Rabe & Staats memory-efficient attention).  This is the XLA
+               rendering of the flash-attention algorithm and what long
+               prefills compile to in the multi-pod dry-run; peak scores
+               memory is [B, H, cq, ckv] instead of [B, H, S, S].
+    pallas   — repro.kernels.flash_attention (TPU target; validated in
+               interpret mode against these paths).
+
+``cfg.attn_impl``: "auto" (dense < CHUNK_THRESHOLD <= chunked) | "dense" |
+"chunked" | "pallas".
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.activation_sharding import shard_act
+from repro.models.layers import _dense_init, apply_rope, rmsnorm, softcap
+
+CHUNK_THRESHOLD = 2048 * 2048  # Sq * Skv above which the chunked engine kicks in
+DEFAULT_Q_CHUNK = 256
+DEFAULT_KV_CHUNK = 1024
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [B, S_max, KV, D]
+    v: jax.Array  # [B, S_max, KV, D]
+    length: jax.Array  # [] int32 — tokens already in cache
+
+
+def attn_init(key, cfg, cross: bool = False):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 5)
+    params = {
+        "wq": _dense_init(ks[0], (d, h, hd)),
+        "wk": _dense_init(ks[1], (d, kv, hd)),
+        "wv": _dense_init(ks[2], (d, kv, hd)),
+        "wo": _dense_init(ks[3], (h, hd, d), in_axis=(0, 1)),
+    }
+    axes = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.qk_norm:
+        params["q_norm"] = jnp.ones((hd,), jnp.float32)
+        params["k_norm"] = jnp.ones((hd,), jnp.float32)
+        axes["q_norm"] = ("head_dim",)
+        axes["k_norm"] = ("head_dim",)
+    return params, axes
+
+
+def _block_bias(
+    q_pos: jax.Array,  # [B, cq]
+    kv_pos: jax.Array,  # [B, ckv]
+    causal: bool,
+    window: Optional[int],
+    kv_len: Optional[jax.Array],  # [] valid cache length, or None
+) -> jax.Array:
+    """Additive bias [B, cq, ckv] from position blocks."""
+    q = q_pos[:, :, None]
+    k = kv_pos[:, None, :]
+    ok = jnp.ones((q_pos.shape[0], q_pos.shape[1], kv_pos.shape[1]), bool)
+    if causal:
+        ok &= k <= q
+    if window is not None:
+        ok &= k > q - window
+    if kv_len is not None:
+        ok &= k < kv_len
+    return jnp.where(ok, 0.0, -jnp.inf)
+
+
+def _dense_engine(q, k, v, q_pos, kv_pos, causal, window, kv_len, cap):
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    qg = q.reshape(b, sq, kvh, h // kvh, d)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    scores = softcap(scores / math.sqrt(d), cap)
+    bias = _block_bias(q_pos, kv_pos, causal, window, kv_len)
+    scores = scores + bias[:, None, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, h, d)
+
+
+def _chunked_engine(
+    q, k, v, q_pos, kv_pos, causal, window, kv_len, cap,
+    q_chunk=DEFAULT_Q_CHUNK, kv_chunk=DEFAULT_KV_CHUNK,
+):
+    """q-block scan with dense (but possibly sharded) kv per block.
+
+    Peak scores memory is [B, H, cq, Skv] instead of [B, H, Sq, Skv].  Only
+    the *query* axis is re-blocked: kv tensors are consumed whole, so a KV
+    cache sharded over its sequence dim (decode/prefill cells, DESIGN.md
+    section 4) is never reshaped across shards — XLA keeps scores sharded on
+    Skv and the softmax reduces with cheap max/sum collectives.
+
+    The fully-masked causal upper triangle is computed-then-masked (2x FLOPs
+    waste on causal prefill); EXPERIMENTS.md §Perf iterates on this.
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    kvh = k.shape[2]
+    g = h // kvh
+    cq = min(q_chunk, sq)
+    while sq % cq != 0:  # e.g. vision prefixes make sq non-power-of-two
+        cq -= 1
+    nq = sq // cq
+    scale = 1.0 / math.sqrt(d)
+
+    qr = q.reshape(b, nq, cq, kvh, g, d)
+    qp = q_pos.reshape(b, nq, cq)
+
+    def q_block(carry, xq):
+        qb, qpb = xq  # [B, cq, KV, G, D], [B, cq]
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qb, k).astype(jnp.float32)
+        s = softcap(s * scale, cap)
+        bias = _block_bias(qpb, kv_pos, causal, window, kv_len)
+        s = s + bias[:, None, None, :, :]  # [B, KV, G, cq, Skv]
+        m = jnp.max(s, axis=-1, keepdims=True)
+        m = jnp.where(jnp.isfinite(m), m, 0.0)
+        p = jnp.exp(s - m)
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(qb.dtype), v)
+        out = pv.astype(jnp.float32) / jnp.maximum(l, 1e-20)
+        out = jnp.moveaxis(out, 3, 1)  # [B, cq, KV, G, D]
+        return carry, out.astype(qb.dtype)
+
+    # remat per q-block: the layer-level checkpoint recomputes this scan in
+    # the backward pass; without an inner checkpoint every block's softmax
+    # residuals ([B, H, cq, Skv] f32 x nq) would be saved simultaneously.
+    _, outs = jax.lax.scan(
+        jax.checkpoint(q_block), jnp.zeros(()),
+        (jnp.moveaxis(qr, 1, 0), jnp.moveaxis(qp, 1, 0))
+    )
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, d)
+    return out
+
+
+def attention_engine(
+    q, k, v, q_pos, kv_pos, *, causal, window, kv_len, cap, impl="auto"
+):
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        return fa_ops.flash_attention(
+            q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal,
+            window=window, kv_len=kv_len, logit_softcap=cap,
+        )
+    sq, skv = q.shape[1], k.shape[1]
+    if impl == "chunked" or (impl == "auto" and sq > 1 and sq * skv >= CHUNK_THRESHOLD):
+        return _chunked_engine(q, k, v, q_pos, kv_pos, causal, window, kv_len, cap)
+    return _dense_engine(q, k, v, q_pos, kv_pos, causal, window, kv_len, cap)
+
+
+def attn_apply(
+    params,
+    cfg,
+    x: jax.Array,  # [B, Sq, d]
+    positions: jax.Array,  # [B, Sq]
+    mixer: str,  # "global" | "local"
+    cache: Optional[KVCache] = None,
+    update_cache: bool = False,
+    xk: Optional[jax.Array] = None,  # cross-attention source [B, Skv, d]
+    causal: bool = True,
+):
+    """Returns (out [B, Sq, d], new_cache)."""
+    dt = x.dtype
+    b, sq, _ = x.shape
+    impl = getattr(cfg, "attn_impl", "auto")
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    src = xk if xk is not None else x
+    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"].astype(dt))
+    q = shard_act(q, "batch", "act_seq", "act_heads", None)
+    k = shard_act(k, "batch", "act_seq", "kv_heads", None)
+    v = shard_act(v, "batch", "act_seq", "kv_heads", None)
+
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.rmsnorm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.rmsnorm_eps)
+
+    is_cross = xk is not None
+    if not is_cross:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    window = cfg.sliding_window if mixer == "local" else None
+    new_cache = cache
+    if cache is not None and not is_cross:
+        if update_cache:
+            start = cache.length
+            ck = jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, start, 0, 0)
+            )
+            cv = jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, start, 0, 0)
+            )
+            new_cache = KVCache(ck, cv, cache.length + sq)
+        k_all, v_all = new_cache.k.astype(dt), new_cache.v.astype(dt)
+        s_max = k_all.shape[1]
+        kv_pos = jnp.broadcast_to(jnp.arange(s_max)[None, :], (b, s_max))
+        out = attention_engine(
+            q, k_all, v_all, positions, kv_pos,
+            causal=causal, window=window, kv_len=new_cache.length,
+            cap=cfg.attn_logit_softcap, impl=impl,
+        )
+    else:
+        skv = k.shape[1]
+        kv_pos = jnp.broadcast_to(jnp.arange(skv)[None, :], (b, skv))
+        out = attention_engine(
+            q, k, v, positions, kv_pos,
+            causal=causal and not is_cross, window=window, kv_len=None,
+            cap=cfg.attn_logit_softcap, impl=impl,
+        )
+
+    out = shard_act(out, "batch", "act_seq", "act_heads", None)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    out = shard_act(out, "batch", "act_seq", "act_embed")
+    return out, new_cache
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype) -> KVCache:
+    shape = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        length=jnp.zeros((), jnp.int32),
+    )

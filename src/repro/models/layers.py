@@ -1,0 +1,122 @@
+"""Shared neural layers: norms, rotary embeddings, MLPs, embeddings.
+
+Parameters are plain nested dicts; every init returns ``(params, axes)`` where
+``axes`` mirrors the params pytree with logical-axis tuples consumed by
+``repro.models.sharding``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.activation_sharding import shard_act
+
+
+def _dense_init(key, shape, in_axis=0, dtype=jnp.float32):
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else int(
+        math.prod(shape[a] for a in in_axis)
+    )
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- rmsnorm ---
+
+def rmsnorm_init(d: int):
+    return jnp.ones((d,), jnp.float32), ("embed_unsharded",)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * w
+    return out.astype(dt)
+
+
+# ------------------------------------------------------------------- rope ---
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] (or [S])."""
+    freqs = rope_frequencies(x.shape[-1], theta)  # [D/2]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, D/2]
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# -------------------------------------------------------------------- mlp ---
+
+def mlp_init(key, d_model: int, d_ff: int, mlp_type: str):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if mlp_type in ("swiglu", "geglu"):
+        params = {
+            "wg": _dense_init(k1, (d_model, d_ff)),
+            "wu": _dense_init(k2, (d_model, d_ff)),
+            "wd": _dense_init(k3, (d_ff, d_model)),
+        }
+        axes = {
+            "wg": ("embed", "mlp"),
+            "wu": ("embed", "mlp"),
+            "wd": ("mlp", "embed"),
+        }
+    else:  # squared_relu | gelu
+        params = {
+            "wu": _dense_init(k1, (d_model, d_ff)),
+            "wd": _dense_init(k2, (d_ff, d_model)),
+        }
+        axes = {"wu": ("embed", "mlp"), "wd": ("mlp", "embed")}
+    return params, axes
+
+
+def mlp_apply(params, x: jax.Array, mlp_type: str) -> jax.Array:
+    dt = x.dtype
+    if mlp_type in ("swiglu", "geglu"):
+        g = shard_act(x @ params["wg"].astype(dt), "batch", "act_seq", "act_ff")
+        u = shard_act(x @ params["wu"].astype(dt), "batch", "act_seq", "act_ff")
+        act = jax.nn.silu if mlp_type == "swiglu" else jax.nn.gelu
+        h = act(g) * u
+        return h @ params["wd"].astype(dt)
+    h = shard_act(x @ params["wu"].astype(dt), "batch", "act_seq", "act_ff")
+    if mlp_type == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(h, approximate=True)
+    else:
+        raise ValueError(mlp_type)
+    return h @ params["wd"].astype(dt)
+
+
+# -------------------------------------------------------------- embedding ---
+
+def embedding_init(key, vocab: int, d_model: int):
+    emb = jax.random.normal(key, (vocab, d_model)) * (1.0 / math.sqrt(d_model))
+    return emb.astype(jnp.float32), ("vocab", "embed")
+
+
+def embed_tokens(emb: jax.Array, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(emb, tokens, axis=0).astype(dtype)
+
+
+def unembed(emb_or_w: jax.Array, x: jax.Array, cap: Optional[float] = None):
+    logits = x @ emb_or_w.T.astype(x.dtype)
+    return softcap(logits.astype(jnp.float32), cap)

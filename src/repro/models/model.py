@@ -1,0 +1,192 @@
+"""Model facade: init / train-loss / prefill / decode for every assigned arch.
+
+The facade hides the architecture zoo behind four entry points the launcher
+and the PIQUE cascade bank use:
+
+    init_params(key)                    -> (params, logical_axes)
+    loss_fn(params, batch)              -> (loss, metrics)      [train_step]
+    prefill(params, batch, max_len)     -> (logits_last, cache) [serve prefill]
+    decode_step(params, token, cache)   -> (logits, cache)      [serve decode]
+
+Batches are dicts:
+    text    {"tokens": [B,S] int32, "targets": [B,S] int32}
+    vision  + {"image_embeds": [B, n_img, d] } (anyres patch stub)
+    audio   {"frames": [B, S_enc, d], "tokens"/"targets": decoder side}
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as nn
+from repro.models import transformer as tf
+from repro.models.activation_sharding import shard_act
+from repro.models.config import ModelConfig
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- params --
+
+    def init_params(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        emb, emb_axes = nn.embedding_init(ks[0], cfg.vocab_size, cfg.d_model)
+        params: dict = {"embed": emb, "final_ln": nn.rmsnorm_init(cfg.d_model)[0]}
+        axes: dict = {"embed": emb_axes, "final_ln": ("embed_unsharded",)}
+        is_encdec = cfg.encoder is not None
+        params["layers"], axes["layers"] = tf.stack_init(
+            ks[1], cfg, cfg.num_layers, cross=is_encdec
+        )
+        if not cfg.tie_embeddings:
+            w, _ = nn.embedding_init(ks[2], cfg.vocab_size, cfg.d_model)
+            params["unembed"] = w
+            axes["unembed"] = ("vocab", "embed")
+        if is_encdec:
+            enc_cfg = dataclasses.replace(cfg, layer_pattern=("global",), moe=None)
+            params["enc_layers"], axes["enc_layers"] = tf.stack_init(
+                ks[3], enc_cfg, cfg.encoder.num_layers, cross=False
+            )
+            params["enc_ln"] = nn.rmsnorm_init(cfg.d_model)[0]
+            axes["enc_ln"] = ("embed_unsharded",)
+        if cfg.frontend == "vision":
+            # anyres tile projector stub: patch embeds arrive pre-projected;
+            # a single linear adapts them (LLaVA's mm_projector, simplified).
+            params["img_proj"] = nn._dense_init(ks[4], (cfg.d_model, cfg.d_model))
+            axes["img_proj"] = ("embed", "act_embed")
+        return params, axes
+
+    # ------------------------------------------------------------ encoder --
+
+    def _encode(self, params, frames: jax.Array):
+        cfg = self.cfg
+        enc_cfg = dataclasses.replace(cfg, layer_pattern=("global",), moe=None)
+        b, s, _ = frames.shape
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        x = frames.astype(cfg.activation_dtype)
+        x, _, _ = tf.stack_apply(
+            params["enc_layers"], enc_cfg, x, pos, cfg.encoder.num_layers,
+            causal=False,
+        )
+        return nn.rmsnorm(x, params["enc_ln"], cfg.rmsnorm_eps)
+
+    # ------------------------------------------------------------- embed ---
+
+    def _embed_inputs(self, params, batch) -> tuple[jax.Array, jax.Array]:
+        """-> (x [B, S, d], positions [B, S])."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = nn.embed_tokens(params["embed"], tokens, cfg.activation_dtype)
+        if cfg.frontend == "vision" and "image_embeds" in batch:
+            img = batch["image_embeds"].astype(cfg.activation_dtype)
+            img = img @ params["img_proj"].astype(img.dtype)
+            x = jnp.concatenate([img, x], axis=1)
+        b, s, _ = x.shape
+        x = shard_act(x, "batch", "seq", "act_embed")
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        return x, positions
+
+    def _logits(self, params, x: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        x = nn.rmsnorm(x, params["final_ln"], cfg.rmsnorm_eps)
+        w = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        return nn.unembed(w, x, cfg.final_logit_softcap)
+
+    # -------------------------------------------------------------- train --
+
+    def loss_fn(self, params, batch, loss_chunk: int = 1024):
+        cfg = self.cfg
+        enc_out = None
+        if cfg.encoder is not None:
+            enc_out = self._encode(params, batch["frames"])
+        x, positions = self._embed_inputs(params, batch)
+        x, _, aux = tf.stack_apply(
+            params["layers"], cfg, x, positions, cfg.num_layers,
+            enc_out=enc_out, causal=True,
+        )
+        x = nn.rmsnorm(x, params["final_ln"], cfg.rmsnorm_eps)
+
+        targets = batch["targets"]
+        n_img = x.shape[1] - targets.shape[1]
+        if n_img > 0:  # vision prefix carries no LM loss
+            x = x[:, n_img:]
+
+        w = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        b, s, d = x.shape
+        chunk = min(loss_chunk, s)
+        assert s % chunk == 0
+        xc = x.reshape(b, s // chunk, chunk, d).swapaxes(0, 1)
+        tc = targets.reshape(b, s // chunk, chunk).swapaxes(0, 1)
+
+        def ce_chunk(carry, inp):
+            xx, tt = inp
+            logits = nn.unembed(w, xx, cfg.final_logit_softcap)  # [B, c, V] f32
+            logits = shard_act(logits, "batch", None, "act_ff")
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, tt[..., None], axis=-1)[..., 0]
+            return carry + jnp.sum(lse - gold), None
+
+        # remat per chunk: avoid saving [B, chunk, V] logits per scan step
+        total, _ = jax.lax.scan(
+            jax.checkpoint(ce_chunk), jnp.zeros((), jnp.float32), (xc, tc)
+        )
+        ce = total / (b * s)
+        loss = ce
+        metrics = {"ce": ce}
+        if cfg.moe is not None:
+            loss = (
+                loss
+                + cfg.moe.load_balance_loss * aux.lb_loss
+                + cfg.moe.router_z_loss * aux.z_loss
+            )
+            metrics["lb_loss"] = aux.lb_loss
+            metrics["z_loss"] = aux.z_loss
+        metrics["loss"] = loss
+        return loss, metrics
+
+    # -------------------------------------------------------------- serve --
+
+    def prefill(self, params, batch, max_len: int):
+        """Run the prompt, materialize caches sized ``max_len``."""
+        cfg = self.cfg
+        enc_out = None
+        if cfg.encoder is not None:
+            enc_out = self._encode(params, batch["frames"])
+        x, positions = self._embed_inputs(params, batch)
+        cache = tf.init_model_cache(
+            cfg, x.shape[0], max_len, cfg.activation_dtype, enc_out=enc_out
+        )
+        x, cache, _ = tf.stack_apply(
+            params["layers"], cfg, x, positions, cfg.num_layers,
+            cache=cache, update_cache=True, enc_out=enc_out, causal=True,
+        )
+        logits = self._logits(params, x[:, -1:])
+        return logits, cache
+
+    def decode_step(self, params, token: jax.Array, cache: tf.ModelCache):
+        """token: [B, 1] int32. One autoregressive step."""
+        cfg = self.cfg
+        x = nn.embed_tokens(params["embed"], token, cfg.activation_dtype)
+        b = x.shape[0]
+        positions = jnp.broadcast_to(cache.length[None, None], (b, 1)).astype(jnp.int32)
+        x, cache, _ = tf.stack_apply(
+            params["layers"], cfg, x, positions, cfg.num_layers,
+            cache=cache, update_cache=True, enc_out=cache.enc_out, causal=True,
+        )
+        logits = self._logits(params, x)
+        return logits, cache
+
+    # --------------------------------------------------------- shape utils --
+
+    def abstract_params(self, key=None):
+        """eval_shape'd params for AOT lowering (no allocation)."""
+        key = jax.random.PRNGKey(0) if key is None else key
+        shapes = jax.eval_shape(lambda k: self.init_params(k)[0], key)
+        return shapes

@@ -1,0 +1,134 @@
+"""Mixture-of-Experts layer (grok-1: 8e top-2; arctic: 128e top-2 + dense
+residual), TPU-native gather dispatch.
+
+Token-choice top-k gating with expert-capacity truncation: each expert gathers
+its top-C tokens by gate weight (ties to GShard/Switch capacity semantics —
+over-capacity tokens are dropped for that expert).  Dispatch is two gathers +
+two batched GEMMs + one scatter-add: no [T, E, C] one-hot tensors, no host
+control flow, shape-stable under jit/SPMD.
+
+Expert dim shards over the "data" mesh axis when divisible (arctic 128e/16),
+else per-expert weights FSDP-shard (grok 8e) — see sharding.default_rules.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.activation_sharding import shard_act
+from repro.models.layers import _dense_init
+
+
+class MoEAux(NamedTuple):
+    load_balance_loss: jax.Array
+    router_z_loss: jax.Array
+
+
+def moe_init(key, cfg):
+    m = cfg.moe
+    d, f = cfg.d_model, m.d_ff_expert
+    ks = jax.random.split(key, 5)
+    swiglu = cfg.mlp_type in ("swiglu", "geglu")
+    params = {
+        "router": _dense_init(ks[0], (d, m.num_experts)),
+        "wu": _dense_init(ks[1], (m.num_experts, d, f), in_axis=1),
+        "wd": _dense_init(ks[2], (m.num_experts, f, d), in_axis=1),
+    }
+    axes = {
+        "router": ("embed", None),
+        "wu": ("experts", "expert_embed", "mlp"),
+        "wd": ("experts", "mlp", "expert_embed"),
+    }
+    if swiglu:
+        params["wg"] = _dense_init(ks[3], (m.num_experts, d, f), in_axis=1)
+        axes["wg"] = ("experts", "expert_embed", "mlp")
+    return params, axes
+
+
+def expert_capacity(tokens: int, num_experts: int, top_k: int, factor: float) -> int:
+    c = int(math.ceil(factor * tokens * top_k / num_experts))
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def _group_len(s: int, target: int = 4096) -> int:
+    """Largest divisor of s that is <= target (dispatch group length)."""
+    if s <= target:
+        return s
+    best = 1
+    for cand in range(1, target + 1):
+        if s % cand == 0:
+            best = cand
+    return best
+
+
+def moe_apply(params, cfg, x: jax.Array) -> tuple[jax.Array, MoEAux]:
+    """x: [B, S, d] -> (y, aux losses).
+
+    Dispatch is per GROUP (GShard-style): tokens are grouped along (batch,
+    seq-chunk) so all top-k / gather / scatter traffic stays inside the data
+    shard that owns the tokens — no global sorts, no cross-shard gathers.
+    Each expert takes its top-C tokens per group (capacity truncation)."""
+    m = cfg.moe
+    dt = x.dtype
+    b, s, d = x.shape
+    gl = _group_len(s)
+    ng = b * (s // gl)
+    xg_in = shard_act(x.reshape(ng, gl, d), "batch", None, "act_embed")
+
+    logits = (xg_in @ params["router"].astype(dt)).astype(jnp.float32)  # [G,T,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, m.top_k)  # [G, T, k]
+    top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+
+    # gate matrix [G, T, E]: renormalized top-k weights, zero elsewhere
+    gates = jnp.zeros((ng, gl, m.num_experts), jnp.float32)
+    g_ar = jnp.arange(ng)[:, None, None]
+    t_ar = jnp.arange(gl)[None, :, None]
+    gates = gates.at[g_ar, t_ar, top_idx].set(top_vals)
+
+    # --- capacity-truncated dispatch: top-C tokens per (group, expert) -----
+    cap = expert_capacity(gl, m.num_experts, m.top_k, m.capacity_factor)
+    cap = min(cap, gl)
+    sel_w, sel_idx = jax.lax.top_k(
+        jnp.swapaxes(gates, 1, 2), cap
+    )  # [G, E, C] weights + in-group token ids
+    live = (sel_w > 0.0).astype(jnp.float32)
+
+    xe = jnp.take_along_axis(
+        xg_in[:, None, :, :], sel_idx[..., None], axis=2
+    )  # [G, E, C, d]
+    xe = shard_act(xe, "batch", None, None, "act_embed")
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        gproj = jnp.einsum("gecd,edf->gecf", xe, params["wg"].astype(dt))
+        uproj = jnp.einsum("gecd,edf->gecf", xe, params["wu"].astype(dt))
+        act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
+        h = act(gproj) * uproj
+    else:
+        h = jnp.einsum("gecd,edf->gecf", xe, params["wu"].astype(dt))
+        h = (
+            jnp.square(jax.nn.relu(h))
+            if cfg.mlp_type == "squared_relu"
+            else jax.nn.gelu(h)
+        )
+    h = shard_act(h, "batch", None, None, "act_ff")
+    out_e = jnp.einsum("gecf,efd->gecd", h, params["wd"].astype(dt))  # [G,E,C,d]
+    out_e = shard_act(out_e, "batch", None, None, "act_embed")
+    out_e = out_e * (sel_w * live)[..., None].astype(dt)
+
+    y = jnp.zeros((ng, gl, d), dt).at[
+        jnp.arange(ng)[:, None, None], sel_idx
+    ].add(out_e)
+
+    # --- aux losses (Switch-style) ------------------------------------------
+    me = jnp.mean(probs, axis=(0, 1))  # mean router prob per expert
+    routed = jnp.zeros((ng, gl, m.num_experts), jnp.float32).at[
+        g_ar, t_ar, top_idx
+    ].set(1.0)
+    ce = jnp.mean(routed, axis=(0, 1))  # fraction of tokens per expert
+    lb = m.num_experts * jnp.sum(me * ce)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return y.reshape(b, s, d), MoEAux(lb, z)

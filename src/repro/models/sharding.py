@@ -1,0 +1,121 @@
+"""Logical-axis sharding: parameters/activations carry logical axis names;
+a rules table maps them onto mesh axes (MaxText-style, DESIGN.md section 4).
+
+Mesh axes:
+    pod    — outer data axis across pods (DCI)
+    data   — FSDP / batch axis within a pod (ICI)
+    model  — tensor-parallel axis (ICI)
+
+Default rules: TP over heads / d_ff / vocab; FSDP (("pod","data")) over the
+largest remaining weight dim; batch over ("pod","data").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+FSDP_AXES = ("pod", "data")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: dict
+
+    def spec(self, axes: Sequence[Optional[str]]) -> P:
+        out = []
+        used = set()
+        for ax in axes:
+            m = self.rules.get(ax) if ax is not None else None
+            # never map two tensor dims to the same mesh axis
+            key = tuple(m) if isinstance(m, (tuple, list)) else (m,)
+            if m is None or any(k in used for k in key if k is not None):
+                out.append(None)
+            else:
+                out.append(tuple(m) if isinstance(m, (tuple, list)) else m)
+                used.update(k for k in key if k is not None)
+        return P(*out)
+
+    def sharding(self, mesh: Mesh, axes: Sequence[Optional[str]]) -> NamedSharding:
+        return NamedSharding(mesh, self.filter_for_mesh(mesh, self.spec(axes)))
+
+    @staticmethod
+    def filter_for_mesh(mesh: Mesh, spec: P) -> P:
+        """Drop mesh axes absent from `mesh` (single-pod has no 'pod' axis)."""
+        names = set(mesh.axis_names)
+
+        def keep(entry):
+            if entry is None:
+                return None
+            if isinstance(entry, (tuple, list)):
+                kept = tuple(e for e in entry if e in names)
+                return kept if kept else None
+            return entry if entry in names else None
+
+        return P(*[keep(e) for e in spec])
+
+
+def default_rules(
+    mesh: Mesh,
+    num_experts: int | None = None,
+) -> ShardingRules:
+    """Build rules compatible with `mesh` (handles 2-axis single-pod meshes).
+
+    Expert dim shards over "data" when divisible, else stays unsharded and the
+    per-expert weights FSDP over embed (DESIGN.md section 4).
+    """
+    names = set(mesh.axis_names)
+    fsdp = tuple(a for a in FSDP_AXES if a in names)
+    data_size = int(np.prod([mesh.shape[a] for a in fsdp])) if fsdp else 1
+    expert_axis: Optional[str] = None
+    if (
+        num_experts is not None
+        and "data" in names
+        and num_experts % mesh.shape["data"] == 0
+    ):
+        expert_axis = "data"
+    rules = {
+        # activations
+        "batch": fsdp,
+        "seq": None,
+        "act_seq": None,
+        "kv_seq": None,  # long-context decode overrides this to "data"
+        "act_embed": None,
+        "act_heads": "model",
+        "act_ff": "model",
+        # params
+        "embed": fsdp,  # FSDP shard of non-TP weight dim
+        "embed_unsharded": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model",
+        "experts": expert_axis,
+        "expert_embed": fsdp if expert_axis == "data" else fsdp,
+        "layers": None,
+        "conv": None,
+        "state": None,
+        "ssm_heads": "model",
+        "ssm_inner": "model",
+    }
+    # avoid double-mapping when experts took the data axis: expert_embed must
+    # not reuse "data"; fall back to "pod" only (or nothing on single pod).
+    if expert_axis == "data":
+        rules["expert_embed"] = tuple(a for a in fsdp if a != "data")
+    return ShardingRules(rules=rules)
+
+
+def spec_tree_for_params(abstract_params, axes_tree, rules: ShardingRules, mesh):
+    """Map a pytree of logical-axes tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda axes: rules.sharding(mesh, axes),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x
+        ),
+    )

@@ -1,0 +1,232 @@
+"""Mamba-2 (SSD, arXiv:2405.21060) mixer: chunked state-space duality.
+
+Reference implementation in pure jnp (this file): chunk-parallel closed form —
+intra-chunk quadratic term on the MXU + inter-chunk state recurrence via
+lax.scan.  The Pallas kernel in ``repro.kernels.ssd_scan`` computes the
+intra-chunk term with VMEM tiling and is validated against this code.
+
+Single-group (G=1) B/C as in mamba2-370m; state cache for decode is
+(conv_tail [B, W-1, conv_channels], h [B, H, P, N]).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.activation_sharding import shard_act
+from repro.models.layers import _dense_init, rmsnorm
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array  # [B, W-1, di + 2N]
+    h: jax.Array  # [B, H, P, N]
+
+
+def ssm_init(key, cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.num_heads(d)
+    n = s.state_dim
+    conv_ch = di + 2 * n
+    ks = jax.random.split(key, 6)
+    dt = jnp.exp(
+        jax.random.uniform(ks[3], (nh,))
+        * (jnp.log(s.dt_max) - jnp.log(s.dt_min))
+        + jnp.log(s.dt_min)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    params = {
+        "in_proj": _dense_init(ks[0], (d, 2 * di + 2 * n + nh)),
+        "conv_w": _dense_init(ks[1], (s.conv_width, conv_ch), in_axis=0),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm_w": jnp.ones((di,), jnp.float32),
+        "out_proj": _dense_init(ks[2], (di, d)),
+    }
+    axes = {
+        "in_proj": ("embed", "ssm_inner"),
+        "conv_w": ("conv", "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "norm_w": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed"),
+    }
+    return params, axes
+
+
+def _split_proj(cfg, proj):
+    s = cfg.ssm
+    d = cfg.d_model
+    di, n, nh = s.d_inner(d), s.state_dim, s.num_heads(d)
+    z, xbc, dt = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    return z, xbc, dt  # [.., di], [.., di+2n], [.., nh]
+
+
+def _causal_conv(xbc, w, b, cache_tail: Optional[jax.Array] = None):
+    """Depthwise causal conv width W; cache_tail holds the previous W-1 steps."""
+    width = w.shape[0]
+    if cache_tail is None:
+        pad = jnp.zeros(xbc.shape[:1] + (width - 1,) + xbc.shape[2:], xbc.dtype)
+    else:
+        pad = cache_tail.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)  # [B, W-1+S, C]
+    out = sum(
+        full[:, i : i + xbc.shape[1]] * w[i].astype(xbc.dtype)
+        for i in range(width)
+    )
+    out = out + b.astype(xbc.dtype)
+    new_tail = full[:, -(width - 1):] if width > 1 else full[:, :0]
+    return jax.nn.silu(out), new_tail
+
+
+def ssd_chunked(
+    x: jax.Array,  # [B, S, H, P]
+    dt: jax.Array,  # [B, S, H]  (post-softplus)
+    a: jax.Array,  # [H]  (negative)
+    b_mat: jax.Array,  # [B, S, N]
+    c_mat: jax.Array,  # [B, S, N]
+    h0: Optional[jax.Array] = None,  # [B, H, P, N]
+    chunk: int = 256,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunk-parallel SSD: returns (y [B,S,H,P], h_final [B,H,P,N])."""
+    bsz, s, nh, p = x.shape
+    n = b_mat.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    xr = x.reshape(bsz, nc, chunk, nh, p)
+    dtr = dt.reshape(bsz, nc, chunk, nh)
+    br = b_mat.reshape(bsz, nc, chunk, n)
+    cr = c_mat.reshape(bsz, nc, chunk, n)
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, nh, p, n), jnp.float32)
+
+    def per_chunk(h, inp):
+        xc, dtc, bc, cc = inp  # [B,Q,H,P], [B,Q,H], [B,Q,N], [B,Q,N]
+        adt = dtc.astype(jnp.float32) * a  # [B,Q,H] negative increments
+        cum = jnp.cumsum(adt, axis=1)  # [B,Q,H]
+        # intra-chunk: scores[b,h,i,j] = exp(cum_i - cum_j) dt_j (C_i . B_j), j<=i
+        cb = jnp.einsum("bin,bjn->bij", cc.astype(jnp.float32),
+                        bc.astype(jnp.float32))  # [B,Q,Q]
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # [B,Qi,Qj,H]
+        mask = jnp.tril(jnp.ones((xc.shape[1], xc.shape[1]), bool))
+        w = jnp.where(mask[None, :, :, None], decay, 0.0)
+        w = w * cb[:, :, :, None] * dtc[:, None, :, :].astype(jnp.float32)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xc.astype(jnp.float32))
+        # inter-chunk: y_i += C_i . (h * exp(cum_i))
+        y_inter = jnp.einsum(
+            "bin,bhpn,bih->bihp", cc.astype(jnp.float32), h,
+            jnp.exp(cum),
+        )
+        y = y_intra + y_inter
+        # state update
+        tail = jnp.exp(cum[:, -1:, :] - cum)  # [B,Q,H] decay from t to end
+        dx = xc.astype(jnp.float32) * (dtc * tail)[..., None]  # [B,Q,H,P]
+        h_new = h * jnp.exp(cum[:, -1])[:, :, None, None] + jnp.einsum(
+            "bqhp,bqn->bhpn", dx, bc.astype(jnp.float32)
+        )
+        return h_new, y
+
+    xs = (
+        jnp.moveaxis(xr, 1, 0),
+        jnp.moveaxis(dtr, 1, 0),
+        jnp.moveaxis(br, 1, 0),
+        jnp.moveaxis(cr, 1, 0),
+    )
+    h_final, ys = jax.lax.scan(per_chunk, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, nh, p)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_step(
+    x: jax.Array,  # [B, H, P]
+    dt: jax.Array,  # [B, H]
+    a: jax.Array,  # [H]
+    b_vec: jax.Array,  # [B, N]
+    c_vec: jax.Array,  # [B, N]
+    h: jax.Array,  # [B, H, P, N]
+) -> tuple[jax.Array, jax.Array]:
+    """Single decode step of the recurrence."""
+    decay = jnp.exp(dt.astype(jnp.float32) * a)  # [B, H]
+    h_new = h * decay[:, :, None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", x.astype(jnp.float32), b_vec.astype(jnp.float32),
+        dt.astype(jnp.float32),
+    )
+    y = jnp.einsum("bhpn,bn->bhp", h_new, c_vec.astype(jnp.float32))
+    return y.astype(x.dtype), h_new
+
+
+def ssm_apply(
+    params,
+    cfg,
+    x: jax.Array,  # [B, S, d]
+    cache: Optional[SSMCache] = None,
+    update_cache: bool = False,
+):
+    """Full Mamba-2 mixer. Returns (y [B,S,d], new_cache)."""
+    s_cfg = cfg.ssm
+    d = cfg.d_model
+    di, n, nh = s_cfg.d_inner(d), s_cfg.state_dim, s_cfg.num_heads(d)
+    p = s_cfg.head_dim
+    dt_in = x.dtype
+    bsz, seq, _ = x.shape
+
+    proj = shard_act(x @ params["in_proj"].astype(dt_in), "batch", "act_seq", "ssm_inner")
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+
+    conv_tail = cache.conv if cache is not None else None
+    xbc, new_tail = _causal_conv(xbc, params["conv_w"], params["conv_b"], conv_tail)
+    x_in, b_mat, c_mat = jnp.split(xbc, [di, di + n], axis=-1)
+    x_in = x_in.reshape(bsz, seq, nh, p)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+
+    h0 = cache.h if cache is not None else None
+    if seq == 1 and cache is not None:
+        y1, h_new = ssd_step(
+            x_in[:, 0], dt[:, 0], a, b_mat[:, 0], c_mat[:, 0],
+            h0 if h0 is not None else jnp.zeros((bsz, nh, p, n), jnp.float32),
+        )
+        y = y1[:, None]
+    else:
+        y, h_new = ssd_chunked(
+            x_in, dt, a, b_mat, c_mat, h0, chunk=s_cfg.chunk_size
+        )
+    y = y + x_in * params["D"].astype(dt_in)[None, None, :, None]
+    y = y.reshape(bsz, seq, di)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_w"], cfg.rmsnorm_eps)
+    out = shard_act(y @ params["out_proj"].astype(dt_in), "batch", "act_seq", "act_embed")
+
+    new_cache = None
+    if cache is not None and update_cache:
+        new_cache = SSMCache(conv=new_tail.astype(cache.conv.dtype), h=h_new)
+    elif cache is not None:
+        new_cache = cache
+    return out, new_cache
+
+
+def init_ssm_cache(cfg, batch: int, dtype) -> SSMCache:
+    s = cfg.ssm
+    d = cfg.d_model
+    di, n, nh = s.d_inner(d), s.state_dim, s.num_heads(d)
+    return SSMCache(
+        conv=jnp.zeros((batch, s.conv_width - 1, di + 2 * n), dtype),
+        h=jnp.zeros((batch, nh, s.head_dim, n), jnp.float32),
+    )
+
+
+def ssm_cache_axes() -> SSMCache:
+    return SSMCache(
+        conv=("batch", None, "ssm_inner"),
+        h=("batch", "ssm_heads", None, "state"),
+    )

@@ -1,0 +1,91 @@
+"""AdamW + Adafactor-style factored second moments, pure-jax pytree ops.
+
+State dtype is configurable: fp32 moments by default; ``bf16`` moments for
+the >=300B MoE configs so optimizer state fits the per-chip HBM budget at
+256 chips (DESIGN.md section 4).  Sharding of the state follows the params'
+logical axes verbatim.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any  # pytree like params
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: Optional[str] = None  # None: match param dtype promoted to f32
+
+    def _sdt(self, p):
+        if self.state_dtype is not None:
+            return jnp.dtype(self.state_dtype)
+        return jnp.promote_types(p.dtype, jnp.float32)
+
+    def init(self, params) -> AdamWState:
+        mu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=self._sdt(p)), params)
+        nu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=self._sdt(p)), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+
+    def update(self, grads, state: AdamWState, params, lr_scale: jax.Array | float = 1.0):
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - self.lr * lr_scale * delta
+            return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+        g_leaves, treedef = jax.tree.flatten(grads)
+        m_leaves = jax.tree.leaves(state.mu)
+        v_leaves = jax.tree.leaves(state.nu)
+        p_leaves = jax.tree.leaves(params)
+        out = [upd(g, m, v, p) for g, m, v, p in
+               zip(g_leaves, m_leaves, v_leaves, p_leaves)]
+        p_new = jax.tree.unflatten(treedef, [t[0] for t in out])
+        mu = jax.tree.unflatten(treedef, [t[1] for t in out])
+        nu = jax.tree.unflatten(treedef, [t[2] for t in out])
+        return p_new, AdamWState(step=step, mu=mu, nu=nu)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    # scale in the leaf's own dtype: avoids materializing f32 copies of
+    # stacked-layer gradient buffers (GiB-scale at 300B+; see EXPERIMENTS.md)
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+def cosine_schedule(step, base_lr: float, warmup: int, total: int, min_frac=0.1):
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * warm * cos

@@ -1,0 +1,84 @@
+"""Gradient compression for cross-pod (DCI) all-reduce (assignment:
+distributed-optimization tricks).
+
+Two composable schemes, both with error feedback so compression noise is
+re-injected next step instead of lost:
+
+* ``topk_compress`` — per-leaf magnitude top-k sparsification (Deep Gradient
+  Compression style).  Cross-pod traffic drops to k values + k indices.
+* ``int8_compress`` — per-leaf symmetric int8 quantization with stochastic
+  rounding; 4x traffic reduction at fp32, 2x at bf16.
+
+Intended composition at scale: reduce-scatter full-precision within a pod
+(ICI is cheap), compress only the pod-to-pod leg, all-gather after.  The
+driver in launch/train.py applies compression to the pod-axis reduction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressState(NamedTuple):
+    error: Any  # pytree of residuals (error feedback memory)
+
+
+def init_error_feedback(params) -> CompressState:
+    return CompressState(
+        error=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    )
+
+
+def topk_compress(grads, state: CompressState, fraction: float = 0.01):
+    """-> (sparse_grads, new_state, stats). sparse = dense with zeros off-top-k
+    (the dense carrier keeps the demo mesh-friendly; on the wire only the
+    (values, indices) pairs move)."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        flat = g32.reshape(-1)
+        k = max(1, int(flat.shape[0] * fraction))
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        mask = jnp.zeros_like(flat).at[idx].set(1.0)
+        kept = flat * mask
+        return kept.reshape(g32.shape).astype(g.dtype), (g32 - kept.reshape(g32.shape))
+
+    out = [one(g, e) for g, e in zip(jax.tree.leaves(grads),
+                                     jax.tree.leaves(state.error))]
+    treedef = jax.tree.structure(grads)
+    comp = jax.tree.unflatten(treedef, [o[0] for o in out])
+    err = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return comp, CompressState(error=err)
+
+
+def int8_compress(grads, state: CompressState, key: jax.Array):
+    """Symmetric per-leaf int8 + stochastic rounding + error feedback.
+    Returns (dequantized grads, new state) — wire format is (int8, scale)."""
+
+    def one(g, e, k):
+        g32 = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        x = g32 / scale
+        noise = jax.random.uniform(k, x.shape) - 0.5
+        q = jnp.clip(jnp.round(x + noise), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), g32 - deq
+
+    leaves = jax.tree.leaves(grads)
+    keys = jax.random.split(key, len(leaves))
+    out = [one(g, e, k) for g, e, k in
+           zip(leaves, jax.tree.leaves(state.error), keys)]
+    treedef = jax.tree.structure(grads)
+    comp = jax.tree.unflatten(treedef, [o[0] for o in out])
+    err = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return comp, CompressState(error=err)
+
+
+def compression_ratio_topk(num_elements: int, fraction: float) -> float:
+    """Wire bytes ratio: (k * (4 + 4)) / (n * 4)."""
+    k = max(1, int(num_elements * fraction))
+    return (k * 8) / (num_elements * 4)

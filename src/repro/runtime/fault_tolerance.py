@@ -1,0 +1,144 @@
+"""Fault-tolerance runtime: preemption, heartbeats, straggler mitigation,
+elastic rescale decisions (assignment: large-scale runnability).
+
+These are driver-side (host Python) mechanisms — on a real pod each host
+runs this module around the jitted steps; here they are exercised
+deterministically in tests with simulated clocks/failures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from collections import deque
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass
+class PreemptionHandler:
+    """SIGTERM -> finish current step -> checkpoint -> exit cleanly."""
+
+    _requested: bool = False
+    _installed: bool = False
+
+    def install(self):
+        if not self._installed:
+            signal.signal(signal.SIGTERM, self._on_sigterm)
+            self._installed = True
+        return self
+
+    def _on_sigterm(self, signum, frame):
+        self._requested = True
+
+    def request(self):  # test hook / cooperative preemption
+        self._requested = True
+
+    @property
+    def should_stop(self) -> bool:
+        return self._requested
+
+
+@dataclasses.dataclass
+class Heartbeat:
+    """Driver-side liveness tracking of worker shards.
+
+    A worker that misses ``timeout_s`` is declared failed; the driver then
+    triggers restore-from-checkpoint on a shrunken mesh (elastic restart)."""
+
+    num_workers: int
+    timeout_s: float = 60.0
+    clock: Callable[[], float] = time.monotonic
+
+    def __post_init__(self):
+        now = self.clock()
+        self.last_seen = {w: now for w in range(self.num_workers)}
+
+    def beat(self, worker: int, at: Optional[float] = None):
+        self.last_seen[worker] = self.clock() if at is None else at
+
+    def failed_workers(self) -> list[int]:
+        now = self.clock()
+        return [w for w, t in self.last_seen.items() if now - t > self.timeout_s]
+
+    def healthy(self) -> bool:
+        return not self.failed_workers()
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """Per-shard step-time EMAs -> object-partition rebalancing weights.
+
+    PIQUE serving is bulk-synchronous per epoch: the epoch takes as long as
+    its slowest shard.  The monitor tracks an EMA of per-shard epoch times
+    and emits partition weights inversely proportional to measured speed;
+    the serving driver reassigns object ranges accordingly (and the trainer
+    uses the same signal to shrink a straggler's microbatch count)."""
+
+    num_shards: int
+    ema: float = 0.3
+    history: int = 32
+
+    def __post_init__(self):
+        self.times = [None] * self.num_shards
+        self.recent: deque = deque(maxlen=self.history)
+
+    def record(self, shard: int, seconds: float):
+        prev = self.times[shard]
+        self.times[shard] = (
+            seconds if prev is None else (1 - self.ema) * prev + self.ema * seconds
+        )
+        self.recent.append((shard, seconds))
+
+    def speeds(self) -> list[float]:
+        filled = [t for t in self.times if t is not None]
+        default = sum(filled) / len(filled) if filled else 1.0
+        return [1.0 / (t if t is not None else default) for t in self.times]
+
+    def partition_weights(self) -> list[float]:
+        s = self.speeds()
+        tot = sum(s)
+        return [x / tot for x in s]
+
+    def stragglers(self, factor: float = 1.5) -> list[int]:
+        filled = [t for t in self.times if t is not None]
+        if len(filled) < 2:
+            return []
+        med = sorted(filled)[len(filled) // 2]
+        return [
+            i for i, t in enumerate(self.times)
+            if t is not None and t > factor * med
+        ]
+
+    def rebalance_objects(self, num_objects: int) -> list[tuple[int, int]]:
+        """-> per-shard [start, end) ranges proportional to speed."""
+        w = self.partition_weights()
+        bounds = []
+        start = 0
+        for i, wi in enumerate(w):
+            size = int(round(wi * num_objects))
+            if i == self.num_shards - 1:
+                size = num_objects - start
+            bounds.append((start, start + size))
+            start += size
+        return bounds
+
+
+@dataclasses.dataclass
+class ElasticPolicy:
+    """Decide the new mesh when workers fail (power-of-two data shrink)."""
+
+    data_axis: int
+    model_axis: int
+
+    def shrink_for_failures(self, healthy_chips: int) -> tuple[int, int]:
+        """Keep the model axis intact (TP is wired to the layout); shrink the
+        data axis to the largest power of two that fits healthy chips."""
+        data = self.data_axis
+        while data * self.model_axis > healthy_chips and data > 1:
+            data //= 2
+        if data * self.model_axis > healthy_chips:
+            raise RuntimeError(
+                f"cannot fit model axis {self.model_axis} on {healthy_chips} chips"
+            )
+        return data, self.model_axis

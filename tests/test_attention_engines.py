@@ -1,0 +1,62 @@
+"""Dense vs chunked (online-softmax) attention engine equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import _chunked_engine, _dense_engine
+
+
+def _inputs(seed, b=2, sq=128, skv=128, h=4, kv=2, d=16, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, skv, kv, d), dtype)
+    v = jax.random.normal(ks[2], (b, skv, kv, d), dtype)
+    q_pos = jnp.broadcast_to(jnp.arange(skv - sq, skv)[None], (b, sq))
+    kv_pos = jnp.broadcast_to(jnp.arange(skv)[None], (b, skv))
+    return q, k, v, q_pos, kv_pos
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [None, 37])
+@pytest.mark.parametrize("cap", [None, 20.0])
+def test_chunked_matches_dense(causal, window, cap):
+    q, k, v, qp, kp = _inputs(0)
+    dense = _dense_engine(q, k, v, qp, kp, causal, window, None, cap)
+    chunk = _chunked_engine(q, k, v, qp, kp, causal, window, None, cap,
+                            q_chunk=32, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunk),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_matches_dense_with_cache_len():
+    q, k, v, qp, kp = _inputs(1, sq=16, skv=256)
+    kv_len = jnp.asarray(100, jnp.int32)
+    qp = jnp.broadcast_to(jnp.arange(84, 100)[None], (2, 16))
+    dense = _dense_engine(q, k, v, qp, kp, True, None, kv_len, None)
+    chunk = _chunked_engine(q, k, v, qp, kp, True, None, kv_len, None,
+                            q_chunk=16, kv_chunk=32)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunk),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_bf16_reasonable():
+    q, k, v, qp, kp = _inputs(2, dtype=jnp.bfloat16)
+    dense = _dense_engine(q, k, v, qp, kp, True, None, None, None)
+    chunk = _chunked_engine(q, k, v, qp, kp, True, None, None, None,
+                            q_chunk=32, kv_chunk=32)
+    np.testing.assert_allclose(
+        np.asarray(dense, np.float32), np.asarray(chunk, np.float32),
+        rtol=5e-2, atol=5e-2,
+    )
+
+
+def test_fully_masked_rows_are_zero():
+    # a window so small that some early rows see no keys once kv_len clips
+    q, k, v, qp, kp = _inputs(3, sq=8, skv=64)
+    kv_len = jnp.asarray(0, jnp.int32)  # empty cache: everything masked
+    out = _chunked_engine(q, k, v, qp, kp, True, None, kv_len, None,
+                          q_chunk=8, kv_chunk=16)
+    assert np.all(np.isfinite(np.asarray(out)))
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)

@@ -1,0 +1,141 @@
+"""Benefit estimation (Eq. 11, Lemma 4, section 4.3) and plan selection."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import conjunction, Predicate
+from repro.core.benefit import benefit_exact_slow, compute_benefits
+from repro.core.decision_table import fallback_decision_table
+from repro.core.entropy import binary_entropy, inverse_entropy_upper
+from repro.core.plan import select_plan
+from repro.core.state import init_state, refresh_derived
+from repro.core.combine import default_combine_params
+
+
+def _mk_state(seed=0, n=64, p=2, f=4):
+    rng = np.random.default_rng(seed)
+    query = conjunction(*[Predicate(i, 1) for i in range(p)])
+    combine = default_combine_params(jnp.full((p, f), 0.8))
+    stt = init_state(n, p, f)
+    # random partial execution
+    mask = rng.uniform(size=(n, p, f)) < 0.4
+    probs = rng.uniform(0.02, 0.98, size=(n, p, f)).astype(np.float32)
+    stt = dataclasses.replace(
+        stt, exec_mask=jnp.asarray(mask), func_probs=jnp.asarray(probs)
+    )
+    stt = refresh_derived(stt, query, combine)
+    return stt, query, combine
+
+
+def test_benefit_matches_manual_eq11():
+    stt, query, _ = _mk_state()
+    p, f = 2, 4
+    table = fallback_decision_table(p, f, jnp.asarray([0.6, 0.7, 0.8, 0.9]))
+    costs = jnp.asarray(np.tile([0.02, 0.1, 0.4, 0.9], (p, 1)), jnp.float32)
+    out = compute_benefits(stt, query, table, costs,
+                           candidate_mask=jnp.ones((stt.num_objects,), bool))
+    # pick a row and verify by hand
+    i = 5
+    for j in range(p):
+        nf = int(out.next_fn[i, j])
+        if nf < 0:
+            assert not np.isfinite(float(out.benefit[i, j]))
+            continue
+        sid = int(stt.state_id()[i, j])
+        h = float(stt.uncertainty[i, j])
+        b = min(int(h * 10), 9)
+        dh = float(table.delta_h[j, sid, b])
+        h_hat = np.clip(h + dh, 0.0, 1.0)
+        p_hat = float(inverse_entropy_upper(jnp.asarray(h_hat)))
+        old_col = float(stt.pred_prob[i, j])
+        joint = float(stt.joint_prob[i])
+        est = joint / max(old_col, 1e-12) * p_hat if old_col > 0 else 0.0
+        est = np.clip(est, 0.0, 1.0)
+        expect = joint * est / max(float(costs[j, nf]), 1e-9)
+        np.testing.assert_allclose(float(out.benefit[i, j]), expect, rtol=1e-4)
+
+
+def test_exhausted_pairs_are_masked():
+    stt, query, combine = _mk_state()
+    stt = dataclasses.replace(stt, exec_mask=jnp.ones_like(stt.exec_mask))
+    stt = refresh_derived(stt, query, combine)
+    table = fallback_decision_table(2, 4, jnp.asarray([0.6, 0.7, 0.8, 0.9]))
+    costs = jnp.full((2, 4), 0.1)
+    out = compute_benefits(stt, query, table, costs,
+                           candidate_mask=jnp.ones((stt.num_objects,), bool))
+    assert not bool(jnp.any(jnp.isfinite(out.benefit)))
+    assert bool(jnp.all(out.next_fn == -1))
+
+
+def test_candidate_mask_excludes():
+    stt, query, _ = _mk_state()
+    table = fallback_decision_table(2, 4, jnp.asarray([0.6, 0.7, 0.8, 0.9]))
+    costs = jnp.full((2, 4), 0.1)
+    cand = jnp.zeros((stt.num_objects,), bool).at[:5].set(True)
+    out = compute_benefits(stt, query, table, costs, candidate_mask=cand)
+    assert not bool(jnp.any(jnp.isfinite(out.benefit[5:])))
+
+
+def test_best_selection_dominates_table_selection():
+    stt, query, _ = _mk_state(seed=3)
+    table = fallback_decision_table(2, 4, jnp.asarray([0.6, 0.7, 0.8, 0.9]))
+    costs = jnp.asarray(np.tile([0.02, 0.1, 0.4, 0.9], (2, 1)), jnp.float32)
+    cand = jnp.ones((stt.num_objects,), bool)
+    tab = compute_benefits(stt, query, table, costs, cand)
+    best = compute_benefits(stt, query, table, costs, cand, function_selection="best")
+    fin = jnp.isfinite(tab.benefit)
+    assert bool(jnp.all(best.benefit[fin] >= tab.benefit[fin] - 1e-5))
+
+
+def test_plan_selection_order_and_budget():
+    stt, query, _ = _mk_state(seed=1)
+    table = fallback_decision_table(2, 4, jnp.asarray([0.6, 0.7, 0.8, 0.9]))
+    costs = jnp.asarray(np.tile([0.02, 0.1, 0.4, 0.9], (2, 1)), jnp.float32)
+    out = compute_benefits(stt, query, table, costs,
+                           candidate_mask=jnp.ones((stt.num_objects,), bool))
+    plan = select_plan(out, plan_size=16, cost_budget=1.0)
+    b = np.asarray(plan.benefit)
+    assert np.all(np.diff(b) <= 1e-6)  # descending
+    assert float(plan.total_cost()) <= 1.0 + 1e-5
+    # valid triples point at real objects/functions
+    v = np.asarray(plan.valid)
+    assert np.all(np.asarray(plan.func_idx)[v] >= 0)
+
+
+def test_eq11_preserves_exact_benefit_order_lemma4():
+    """Theorem 2 / Lemma 4: Eq. 11 ordering agrees with the literal Eq. 7
+    ordering for the top choice (the one the plan actually takes)."""
+    stt, query, _ = _mk_state(seed=5, n=24)
+    table = fallback_decision_table(2, 4, jnp.asarray([0.6, 0.7, 0.8, 0.9]))
+    costs = jnp.asarray(np.tile([0.02, 0.1, 0.4, 0.9], (2, 1)), jnp.float32)
+    cand = jnp.ones((24,), bool)
+    fast = compute_benefits(stt, query, table, costs, cand)
+    slow = benefit_exact_slow(stt, query, table, costs, candidate_mask=cand)
+    fb = np.asarray(fast.benefit).ravel()
+    sb = np.asarray(slow.benefit).ravel()
+    fin = np.isfinite(fb) & np.isfinite(sb)
+    # rank correlation of top decile (what plan selection consumes)
+    k = max(4, fin.sum() // 10)
+    top_fast = set(np.argsort(-np.where(fin, fb, -np.inf))[:k])
+    top_slow = set(np.argsort(-np.where(fin, sb, -np.inf))[:k])
+    overlap = len(top_fast & top_slow) / k
+    assert overlap >= 0.5
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_benefit_finite_and_nonnegative(seed):
+    stt, query, _ = _mk_state(seed=seed, n=16)
+    table = fallback_decision_table(2, 4, jnp.asarray([0.6, 0.7, 0.8, 0.9]))
+    costs = jnp.full((2, 4), 0.25)
+    out = compute_benefits(stt, query, table, costs,
+                           candidate_mask=jnp.ones((16,), bool))
+    b = np.asarray(out.benefit)
+    fin = np.isfinite(b)
+    assert np.all(b[fin] >= 0.0)
+    assert np.all(np.asarray(out.est_joint) <= 1.0 + 1e-6)

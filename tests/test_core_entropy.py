@@ -1,0 +1,75 @@
+"""Entropy + inverse-entropy LUT (paper Eq. 4/5/8)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.entropy import (
+    binary_entropy,
+    inverse_entropy_lower,
+    inverse_entropy_upper,
+    uncertainty_bin,
+)
+
+
+def test_entropy_endpoints():
+    assert float(binary_entropy(jnp.asarray(0.0))) == 0.0
+    assert float(binary_entropy(jnp.asarray(1.0))) == 0.0
+    np.testing.assert_allclose(float(binary_entropy(jnp.asarray(0.5))), 1.0, atol=1e-6)
+
+
+@given(st.floats(0.0, 1.0))
+@settings(max_examples=200, deadline=None)
+def test_entropy_symmetry(p):
+    a = float(binary_entropy(jnp.asarray(p)))
+    b = float(binary_entropy(jnp.asarray(1.0 - p)))
+    assert abs(a - b) < 1e-6
+
+
+@given(st.floats(0.5, 1.0))
+@settings(max_examples=200, deadline=None)
+def test_inverse_roundtrip_upper(p):
+    h = binary_entropy(jnp.asarray(p, jnp.float32))
+    p_back = float(inverse_entropy_upper(h))
+    # Near p=0.5 the inverse is ill-conditioned (dH/dp -> 0), so check the
+    # roundtrip in h-space there and in p-space elsewhere.
+    if p > 0.52:
+        assert abs(p_back - p) < 2e-3  # LUT + fp32 tolerance
+    else:
+        h_back = float(binary_entropy(jnp.asarray(p_back)))
+        assert abs(h_back - float(h)) < 1e-4
+
+
+def test_inverse_roundtrip_dense_accuracy():
+    # Away from the ill-conditioned h=1 corner, the LUT is accurate in p.
+    p = jnp.linspace(0.52, 1.0, 2001)
+    h = binary_entropy(p)
+    p_back = inverse_entropy_upper(h)
+    assert float(jnp.max(jnp.abs(p_back - p))) < 2e-4
+    # Near 0.5 the inversion is accurate in h.
+    p2 = jnp.linspace(0.5, 0.52, 501)
+    h2 = binary_entropy(p2)
+    h_back = binary_entropy(inverse_entropy_upper(h2))
+    assert float(jnp.max(jnp.abs(h_back - h2))) < 1e-4
+
+
+def test_lower_root_is_complement():
+    h = jnp.asarray([0.2, 0.5, 0.9])
+    np.testing.assert_allclose(
+        np.asarray(inverse_entropy_lower(h)),
+        1.0 - np.asarray(inverse_entropy_upper(h)),
+        rtol=1e-6,
+    )
+
+
+def test_uncertainty_bins_cover_range():
+    h = jnp.asarray([0.0, 0.05, 0.95, 1.0])
+    b = uncertainty_bin(h, 10)
+    assert list(np.asarray(b)) == [0, 0, 9, 9]
+
+
+@given(st.floats(0.0, 1.0), st.integers(2, 32))
+@settings(max_examples=100, deadline=None)
+def test_bin_in_range(h, nbins):
+    b = int(uncertainty_bin(jnp.asarray(h), nbins))
+    assert 0 <= b < nbins

@@ -1,0 +1,166 @@
+"""End-to-end progressive operator behaviour (paper sections 3/4 + Fig. 11)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    OperatorConfig,
+    Predicate,
+    ProgressiveQueryOperator,
+    StaticOrderEvaluator,
+    conjunction,
+    learn_decision_table,
+)
+from repro.core.combine import default_combine_params, fit_combine_weights
+from repro.data.synthetic import make_corpus, split_corpus, truth_answer_mask
+from repro.enrich.simulated import SimulatedBank, preprocess_cheapest
+
+AUCS = [0.60, 0.88, 0.93, 0.97]
+COSTS = [0.023, 0.114, 0.42, 0.949]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = jax.random.PRNGKey(0)
+    query = conjunction(Predicate(0, 1), Predicate(1, 2))
+    corpus = make_corpus(
+        rng, 512 + 512, [0, 1], [1, 2], selectivity=[0.3, 0.4],
+        aucs=AUCS, costs=COSTS,
+    )
+    train, evalc = split_corpus(corpus, 512)
+    combine = fit_combine_weights(
+        train.func_probs, train.truth_pred.astype(jnp.float32), steps=120
+    )
+    table = learn_decision_table(train.func_probs, combine, num_bins=10)
+    truth = truth_answer_mask(evalc, query)
+    bank = SimulatedBank(outputs=evalc.func_probs, costs=evalc.costs)
+    pre_p, pre_m, _ = preprocess_cheapest(evalc.func_probs, evalc.costs)
+    return dict(query=query, combine=combine, table=table, truth=truth,
+                bank=bank, evalc=evalc, pre=(pre_p, pre_m))
+
+
+def _run(setup, cfg, epochs=60):
+    op = ProgressiveQueryOperator(
+        setup["query"], setup["table"], setup["combine"], setup["evalc"].costs,
+        setup["bank"], cfg, truth_mask=setup["truth"],
+    )
+    n = setup["evalc"].truth_pred.shape[0]
+    st0 = op.warm_start(op.init_state(n), *setup["pre"])
+    return op.run(n, num_epochs=epochs, state=st0)
+
+
+def test_quality_improves_over_run(setup):
+    _, hist = _run(setup, OperatorConfig(plan_size=32))
+    assert len(hist) > 3
+    assert hist[-1].true_f1 > hist[0].true_f1
+    assert hist[-1].expected_f > 0
+
+
+def test_cost_accounting_monotone(setup):
+    _, hist = _run(setup, OperatorConfig(plan_size=32))
+    costs = [h.cost_spent for h in hist]
+    assert all(b >= a for a, b in zip(costs, costs[1:]))
+    # plan costs sum to total cost
+    np.testing.assert_allclose(
+        costs[-1], sum(h.plan_cost for h in hist), rtol=1e-4
+    )
+
+
+def test_exhaustion_terminates(setup):
+    state, hist = _run(setup, OperatorConfig(plan_size=512), epochs=100)
+    # every (object, predicate, function) executed at most F times
+    assert bool(jnp.all(state.exec_mask.sum(-1) <= 4))
+    # run stops when nothing remains
+    assert hist[-1].plan_valid == 0 or len(hist) == 100
+    # everything enriched by then
+    assert float(state.exec_mask.mean()) > 0.95
+
+
+def test_budgeted_epochs_respect_budget(setup):
+    cfg = OperatorConfig(plan_size=256, epoch_cost_budget=5.0)
+    _, hist = _run(setup, cfg, epochs=5)
+    for h in hist:
+        assert h.plan_cost <= 5.0 + 1.0  # one-triple slack
+
+
+def test_function_selection_best_no_worse_final(setup):
+    _, h_table = _run(setup, OperatorConfig(plan_size=64), epochs=80)
+    _, h_best = _run(
+        setup, OperatorConfig(plan_size=64, function_selection="best"), epochs=80
+    )
+    assert h_best[-1].true_f1 >= h_table[-1].true_f1 - 0.05
+
+
+def test_caching_raises_initial_quality(setup):
+    """Paper Fig. 11: warmer caches -> higher initial F1."""
+    n = setup["evalc"].truth_pred.shape[0]
+    op = ProgressiveQueryOperator(
+        setup["query"], setup["table"], setup["combine"], setup["evalc"].costs,
+        setup["bank"], OperatorConfig(plan_size=16), truth_mask=setup["truth"],
+    )
+    pre_p, pre_m = setup["pre"]
+    # cache = second function executed on a fraction of objects
+    rng = np.random.default_rng(0)
+    efs = []
+    for frac in (0.0, 0.5, 1.0):
+        mask = np.asarray(pre_m).copy()
+        rows = rng.choice(n, size=int(frac * n), replace=False)
+        mask[rows, :, 3] = True  # cache the strongest function on `frac` objects
+        st = op.warm_start(op.init_state(n), pre_p, jnp.asarray(mask))
+        sel_ef = float(
+            __import__("repro.core.threshold", fromlist=["select_answer"])
+            .select_answer(st.joint_prob).expected_f
+        )
+        efs.append(sel_ef)
+    assert efs[2] > efs[0]  # full cache strictly better than none
+
+
+def test_starvation_guard_prevents_deadlock(setup):
+    # Force the paper's outside-answer restriction; the guard must keep
+    # making progress even when the answer set covers most of the corpus.
+    cfg = OperatorConfig(plan_size=64, candidate_strategy="outside_answer")
+    state, hist = _run(setup, cfg, epochs=100)
+    assert float(state.cost_spent) > 100.0
+
+
+def test_baselines_run_to_completion(setup):
+    for name in ("baseline1", "baseline2", "incremental", "traditional"):
+        ev = StaticOrderEvaluator(
+            name, setup["query"], setup["combine"], setup["evalc"].costs,
+            np.asarray(setup["evalc"].aucs), setup["bank"],
+            OperatorConfig(plan_size=256), truth_mask=setup["truth"],
+        )
+        n = setup["evalc"].truth_pred.shape[0]
+        pre_p, pre_m = setup["pre"]
+        st, hist = ev.run(n, num_epochs=50, cached_probs=pre_p, cached_mask=pre_m)
+        assert len(hist) >= 1
+        assert float(st.cost_spent) > 0
+        if name == "traditional":
+            # withheld until done: all but the last epoch report nothing
+            assert all(h.expected_f == 0.0 for h in hist[:-1])
+
+
+def test_progressive_beats_baseline2_midrun(setup):
+    """Paper Figs. 2-5 (qualitative): ours >= object-major baseline mid-run."""
+    cfg = OperatorConfig(plan_size=64, function_selection="best")
+    _, ours = _run(setup, cfg, epochs=400)
+    ev = StaticOrderEvaluator(
+        "baseline2", setup["query"], setup["combine"], setup["evalc"].costs,
+        np.asarray(setup["evalc"].aucs), setup["bank"], cfg,
+        truth_mask=setup["truth"],
+    )
+    n = setup["evalc"].truth_pred.shape[0]
+    pre_p, pre_m = setup["pre"]
+    _, b2 = ev.run(n, num_epochs=400, cached_probs=pre_p, cached_mask=pre_m)
+
+    def f1_at(hist, c):
+        out = 0.0
+        for h in hist:
+            if h.cost_spent <= c:
+                out = h.true_f1
+        return out
+
+    mid = float(b2[-1].cost_spent) * 0.4
+    assert f1_at(ours, mid) >= f1_at(b2, mid) - 1e-6

@@ -1,0 +1,76 @@
+"""Query AST compilation + probabilistic semantics (paper section 2/3.1)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.query import And, Not, Or, Predicate, compile_query, conjunction
+
+
+def test_paper_joint_probability_example():
+    # Paper section 3.1: Q = (G==Male AND WG==True) OR (Expr != Smile)
+    # p values 0.8, 0.7, 0.9 for the positive predicates ->
+    # (0.8*0.7) + 0.9 - (0.8*0.7)*0.9 = 0.956 ... with Expr != Smile prob 0.9
+    q = compile_query(
+        Or(And(Predicate(0, 0), Predicate(1, 0)), Not(Predicate(2, 0)))
+    )
+    assert q.num_predicates == 3
+    pp = jnp.array([[0.8, 0.7, 0.1]])  # P(Expr==Smile)=0.1 -> P(!=Smile)=0.9
+    val = q.evaluate(pp)
+    np.testing.assert_allclose(np.asarray(val), [0.956], rtol=1e-6)
+
+
+def test_mutually_exclusive_and_is_zero():
+    q = compile_query(And(Predicate(0, 1), Predicate(0, 2)))
+    pp = jnp.array([[0.7, 0.6]])
+    assert float(q.evaluate(pp)[0]) == 0.0
+
+
+def test_mutually_exclusive_or_adds():
+    q = compile_query(Or(Predicate(0, 1), Predicate(0, 2)))
+    pp = jnp.array([[0.3, 0.4]])
+    np.testing.assert_allclose(float(q.evaluate(pp)[0]), 0.7, rtol=1e-6)
+
+
+def test_independent_or_inclusion_exclusion():
+    q = compile_query(Or(Predicate(0, 1), Predicate(1, 1)))
+    pp = jnp.array([[0.3, 0.4]])
+    np.testing.assert_allclose(float(q.evaluate(pp)[0]), 0.3 + 0.4 - 0.12, rtol=1e-6)
+
+
+def test_neq_is_complement():
+    q = compile_query(Predicate(0, 1, "!="))
+    pp = jnp.array([[0.25]])
+    np.testing.assert_allclose(float(q.evaluate(pp)[0]), 0.75, rtol=1e-6)
+
+
+def test_conjunction_fast_path_flag():
+    assert conjunction(Predicate(0, 1), Predicate(1, 2)).is_conjunctive
+    assert not compile_query(Or(Predicate(0, 1), Predicate(1, 2))).is_conjunctive
+    # duplicate tag types in an AND are not a pure independent conjunction
+    assert not compile_query(And(Predicate(0, 1), Predicate(0, 2))).is_conjunctive
+
+
+def test_conjunctive_update_matches_reevaluation():
+    q = conjunction(Predicate(0, 1), Predicate(1, 2), Predicate(2, 0))
+    rng = np.random.default_rng(0)
+    pp = jnp.asarray(rng.uniform(0.05, 0.95, size=(32, 3)), jnp.float32)
+    joint = q.evaluate(pp)
+    new_col = jnp.asarray(rng.uniform(0.05, 0.95, size=(32,)), jnp.float32)
+    fast = q.conjunctive_update(joint, pp[:, 1], new_col)
+    slow = q.evaluate_with_column(pp, 1, new_col)
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(slow), rtol=1e-5)
+
+
+def test_evaluate_with_column_general_query():
+    q = compile_query(Or(And(Predicate(0, 1), Predicate(1, 1)), Predicate(2, 1)))
+    pp = jnp.array([[0.5, 0.5, 0.5], [0.9, 0.1, 0.3]])
+    out = q.evaluate_with_column(pp, 2, jnp.array([1.0, 0.0]))
+    # col 2 = 1 -> OR forces 1; col 2 = 0 -> just the AND part
+    np.testing.assert_allclose(np.asarray(out), [1.0, 0.09], rtol=1e-5)
+
+
+def test_vectorization_over_leading_dims():
+    q = conjunction(Predicate(0, 1), Predicate(1, 1))
+    pp = jnp.ones((4, 5, 2)) * 0.5
+    assert q.evaluate(pp).shape == (4, 5)

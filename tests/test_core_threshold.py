@@ -1,0 +1,93 @@
+"""Theorem-1 / Lemma-1 answer-set selection."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.threshold import (
+    expected_f_curve,
+    expected_f_of_mask,
+    select_answer,
+    select_answer_approx,
+)
+
+
+def _rand_probs(seed, n):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(0.0, 1.0, n).astype(np.float32))
+
+
+def test_curve_unimodal_theorem1():
+    # Theorem 1: E(F) over prefixes rises to a single peak then falls.
+    for seed in range(5):
+        p = -jnp.sort(-_rand_probs(seed, 257))
+        curve = np.asarray(expected_f_curve(p))
+        diffs = np.sign(np.diff(curve))
+        # once it decreases it never increases again
+        dec = np.where(diffs < 0)[0]
+        if len(dec):
+            assert np.all(diffs[dec[0]:] <= 1e-7)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=50, deadline=None)
+def test_selection_is_optimal_prefix(seed):
+    p = _rand_probs(seed, 129)
+    sel = select_answer(p)
+    # optimality against 64 random masks of every size
+    rng = np.random.default_rng(seed)
+    best = float(sel.expected_f)
+    for _ in range(64):
+        k = rng.integers(1, 129)
+        mask = np.zeros(129, bool)
+        mask[rng.choice(129, size=k, replace=False)] = True
+        ef = float(expected_f_of_mask(p, jnp.asarray(mask)))
+        assert ef <= best + 1e-5
+
+
+def test_selection_matches_bruteforce_prefix():
+    p = _rand_probs(3, 200)
+    sel = select_answer(p)
+    sorted_desc = -np.sort(-np.asarray(p))
+    cs = np.cumsum(sorted_desc)
+    k = sorted_desc.sum()
+    m = np.arange(1, 201)
+    curve = 2 * cs / (k + m)
+    m_star = int(np.argmax(curve))
+    assert int(sel.size) == m_star + 1
+    np.testing.assert_allclose(float(sel.expected_f), curve[m_star], rtol=1e-5)
+
+
+def test_mask_consistent_with_threshold():
+    p = _rand_probs(7, 333)
+    sel = select_answer(p)
+    mask = np.asarray(sel.mask)
+    thr = float(sel.threshold)
+    assert np.all(np.asarray(p)[mask] >= thr - 1e-7)
+    assert int(mask.sum()) == int(sel.size)
+
+
+def test_approx_close_to_exact():
+    for seed in range(8):
+        p = _rand_probs(seed, 4096)
+        exact = select_answer(p)
+        approx = select_answer_approx(p, bins=4096)
+        assert abs(float(exact.expected_f) - float(approx.expected_f)) < 2e-3
+
+
+def test_alpha_weighting():
+    p = _rand_probs(11, 100)
+    # Paper Eq. 2: F_a = (1+a) Pre Rec / (a Pre + Rec); a -> 0 recovers pure
+    # precision, so the selected set shrinks to the most confident objects.
+    s_pre = select_answer(p, alpha=1e-3)
+    s_f1 = select_answer(p, alpha=1.0)
+    assert int(s_pre.size) <= int(s_f1.size)
+    assert float(s_pre.expected_precision) >= float(s_f1.expected_precision) - 1e-6
+
+
+def test_equal_probabilities_select_everything():
+    # Diffuse/uniform case: with all P equal, every prefix has equal precision
+    # and larger recall -> optimal set is the whole corpus.
+    p = jnp.full((50,), 0.3)
+    sel = select_answer(p)
+    assert int(sel.size) == 50

@@ -1,0 +1,236 @@
+"""Pallas kernel validation (interpret mode) vs pure-jnp oracles, swept over
+shapes and dtypes (assignment deliverable c)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.decode_attention import ops as da_ops
+from repro.kernels.decode_attention import ref as da_ref
+from repro.kernels.ssd_scan import ops as ssd_ops
+from repro.kernels.ssd_scan import ref as ssd_ref
+from repro.kernels.enrich_score import ops as es_ops
+from repro.core import Predicate, conjunction
+from repro.core.benefit import compute_benefits
+from repro.core.combine import default_combine_params
+from repro.core.decision_table import fallback_decision_table, learn_decision_table
+from repro.core.state import init_state, refresh_derived
+
+
+# ------------------------------------------------------------ flash attn ---
+
+def _fa_inputs(seed, b, sq, skv, h, kv, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, skv, kv, d), dtype)
+    v = jax.random.normal(ks[2], (b, skv, kv, d), dtype)
+    return q, k, v
+
+
+FA_CASES = [
+    # b, sq, skv, h, kv, d, causal, window, softcap, dtype
+    (1, 128, 128, 4, 2, 32, True, None, None, jnp.float32),
+    (2, 256, 256, 4, 4, 64, True, None, 50.0, jnp.float32),
+    (1, 128, 128, 8, 2, 32, True, 48, None, jnp.float32),
+    (2, 128, 128, 4, 1, 64, False, None, None, jnp.float32),
+    (1, 256, 256, 4, 2, 32, True, None, None, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES)
+def test_flash_attention_matches_ref(case):
+    b, sq, skv, h, kv, d, causal, window, cap, dtype = case
+    q, k, v = _fa_inputs(0, b, sq, skv, h, kv, d, dtype)
+    kv_len = jnp.asarray([skv], jnp.int32)
+    out = fa_ops.flash_attention(
+        q, k, v, kv_len, causal=causal, window=window, logit_softcap=cap,
+        block_q=64, block_kv=64, interpret=True,
+    )
+    qm = jnp.transpose(q, (0, 2, 1, 3)).reshape(b * h, sq, d)
+    km = jnp.transpose(k, (0, 2, 1, 3)).reshape(b * kv, skv, d)
+    vm = jnp.transpose(v, (0, 2, 1, 3)).reshape(b * kv, skv, d)
+    ref = fa_ref.reference_bhsd(
+        qm, km, vm, kv_len, num_q_heads=h, num_kv_heads=kv,
+        causal=causal, window=window, softcap=cap,
+    )
+    ref = jnp.transpose(ref.reshape(b, h, sq, d), (0, 2, 1, 3))
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_flash_attention_partial_kv_len():
+    b, sq, skv, h, kv, d = 1, 64, 256, 4, 2, 32
+    q, k, v = _fa_inputs(1, b, sq, skv, h, kv, d, jnp.float32)
+    kv_len = jnp.asarray([100], jnp.int32)
+    out = fa_ops.flash_attention(
+        q, k, v, kv_len, causal=True, q_offset_from_kv_len=True,
+        block_q=64, block_kv=64, interpret=True,
+    )
+    qm = jnp.transpose(q, (0, 2, 1, 3)).reshape(b * h, sq, d)
+    km = jnp.transpose(k, (0, 2, 1, 3)).reshape(b * kv, skv, d)
+    vm = jnp.transpose(v, (0, 2, 1, 3)).reshape(b * kv, skv, d)
+    ref = fa_ref.reference_bhsd(
+        qm, km, vm, kv_len, num_q_heads=h, num_kv_heads=kv,
+        causal=True, q_offset_from_kv_len=True,
+    )
+    ref = jnp.transpose(ref.reshape(b, h, sq, d), (0, 2, 1, 3))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------ decode attn ---
+
+DA_CASES = [
+    (2, 256, 4, 2, 32, None, None, 4, jnp.float32),
+    (1, 512, 8, 2, 64, 30.0, None, 8, jnp.float32),
+    (2, 256, 4, 4, 32, None, 128, 4, jnp.float32),
+    (1, 256, 4, 2, 32, None, None, 4, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", DA_CASES)
+def test_decode_attention_matches_ref(case):
+    b, skv, h, kv, d, cap, window, ns, dtype = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, skv, kv, d), dtype)
+    v = jax.random.normal(ks[2], (b, skv, kv, d), dtype)
+    kv_len = jnp.asarray([skv * 3 // 4], jnp.int32)
+    out = da_ops.decode_attention(
+        q, k, v, kv_len, softcap=cap, window=window, num_splits=ns,
+        interpret=True,
+    )
+    ref = da_ref.reference_decode(q, k, v, kv_len, softcap=cap, window=window)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_decode_combine_partials_algebra():
+    """Split-combine must be exact regardless of split count."""
+    b, skv, h, kv, d = 1, 512, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, d))
+    k = jax.random.normal(ks[1], (b, skv, kv, d))
+    v = jax.random.normal(ks[2], (b, skv, kv, d))
+    kv_len = jnp.asarray([skv], jnp.int32)
+    outs = [
+        np.asarray(da_ops.decode_attention(q, k, v, kv_len, num_splits=ns,
+                                           interpret=True))
+        for ns in (1, 2, 8)
+    ]
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------------ SSD ----
+
+SSD_CASES = [
+    (2, 128, 32, 16, 32, jnp.float32),  # bh, s, p, n, chunk
+    (4, 256, 64, 16, 64, jnp.float32),
+    (1, 64, 32, 8, 64, jnp.float32),
+    (2, 128, 32, 16, 32, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_scan_matches_recurrence(case):
+    bh, s, p, n, chunk, dtype = case
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    x = jax.random.normal(ks[0], (bh, s, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bh, s))) * 0.1
+    a = -jnp.exp(jax.random.normal(ks[2], (bh,)) * 0.3)
+    b_mat = jax.random.normal(ks[3], (bh, s, n), dtype)
+    c_mat = jax.random.normal(ks[4], (bh, s, n), dtype)
+    y, h = ssd_ops.ssd_scan(x, dt, a, b_mat, c_mat, chunk=chunk, interpret=True)
+    y_ref, h_ref = ssd_ref.reference_ssd(x, dt, a, b_mat, c_mat)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), rtol=tol, atol=tol)
+
+
+def test_ssd_scan_with_initial_state():
+    bh, s, p, n = 2, 64, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(4), 6)
+    x = jax.random.normal(ks[0], (bh, s, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bh, s))) * 0.1
+    a = -jnp.exp(jax.random.normal(ks[2], (bh,)) * 0.3)
+    b_mat = jax.random.normal(ks[3], (bh, s, n))
+    c_mat = jax.random.normal(ks[4], (bh, s, n))
+    h0 = jax.random.normal(ks[5], (bh, p, n))
+    y, h = ssd_ops.ssd_scan(x, dt, a, b_mat, c_mat, h0, chunk=32, interpret=True)
+    y_ref, h_ref = ssd_ref.reference_ssd(x, dt, a, b_mat, c_mat, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------- enrich score ---
+
+def _mk_state(seed, n, p, f, query):
+    rng = np.random.default_rng(seed)
+    combine = default_combine_params(jnp.full((p, f), 0.8))
+    stt = init_state(n, p, f)
+    mask = rng.uniform(size=(n, p, f)) < 0.5
+    probs = rng.uniform(0.02, 0.98, size=(n, p, f)).astype(np.float32)
+    stt = dataclasses.replace(
+        stt, exec_mask=jnp.asarray(mask), func_probs=jnp.asarray(probs)
+    )
+    return refresh_derived(stt, query, combine)
+
+
+@pytest.mark.parametrize("n,p,f", [(64, 2, 4), (200, 3, 4), (33, 1, 3)])
+def test_enrich_score_matches_reference(n, p, f):
+    query = conjunction(*[Predicate(i, 1) for i in range(p)])
+    stt = _mk_state(0, n, p, f, query)
+    table = fallback_decision_table(p, f, jnp.linspace(0.6, 0.9, f))
+    costs = jnp.asarray(
+        np.tile(np.linspace(0.05, 0.9, f), (p, 1)), jnp.float32
+    )
+    cand = jnp.asarray(np.random.default_rng(1).uniform(size=n) < 0.7)
+    ref = compute_benefits(stt, query, table, costs, candidate_mask=cand)
+    out = es_ops.fused_benefits(stt, query, table, costs, candidate_mask=cand,
+                                interpret=True)
+    fin = np.isfinite(np.asarray(ref.benefit))
+    assert (fin == np.isfinite(np.asarray(out.benefit))).all()
+    np.testing.assert_allclose(
+        np.asarray(out.benefit)[fin], np.asarray(ref.benefit)[fin],
+        rtol=5e-3, atol=5e-3,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out.next_fn)[fin], np.asarray(ref.next_fn)[fin]
+    )
+    np.testing.assert_allclose(
+        np.asarray(out.est_joint)[fin], np.asarray(ref.est_joint)[fin],
+        rtol=5e-3, atol=5e-3,
+    )
+
+
+def test_enrich_score_with_learned_table():
+    from repro.data.synthetic import make_corpus
+    rng = jax.random.PRNGKey(5)
+    query = conjunction(Predicate(0, 1), Predicate(1, 2))
+    corpus = make_corpus(rng, 512, [0, 1], [1, 2], aucs=[0.6, 0.8, 0.9, 0.95])
+    combine = default_combine_params(corpus.aucs)
+    table = learn_decision_table(corpus.func_probs, combine)
+    stt = _mk_state(2, 256, 2, 4, query)
+    costs = corpus.costs
+    ref = compute_benefits(stt, query, table, costs,
+                           candidate_mask=jnp.ones(256, bool))
+    out = es_ops.fused_benefits(stt, query, table, costs,
+                                candidate_mask=jnp.ones(256, bool),
+                                interpret=True)
+    fin = np.isfinite(np.asarray(ref.benefit))
+    np.testing.assert_allclose(
+        np.asarray(out.benefit)[fin], np.asarray(ref.benefit)[fin],
+        rtol=5e-3, atol=5e-3,
+    )
