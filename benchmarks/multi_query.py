@@ -1,0 +1,229 @@
+"""Multi-query dedup benchmark: shared engine vs Q independent operators.
+
+Measures quality-vs-cost for Q concurrent overlapping queries served two ways:
+
+* **shared** — one ``MultiQueryEngine`` over a shared enrichment substrate
+  with cross-query plan dedup (this repo's multi-tenant path);
+* **independent** — Q stand-alone ``ProgressiveQueryOperator`` instances, each
+  re-deriving every enrichment for itself (the paper's single-query operator
+  deployed naively per tenant).
+
+Queries are conjunctions of ``preds_per_query`` predicates drawn from a small
+global schema, so predicate overlap — and therefore the dedup win — grows
+with Q: at Q=16 over 6 predicates most pairs are requested by several tenants
+and the shared substrate executes each (object, predicate, function) triple
+once instead of once per tenant.
+
+Reported per Q: total enrichment cost for every query to reach its target
+expected F-alpha — 95% of the query's *converged* (full-execution) E(F),
+which is identical under both serving modes — plus the savings ratio.
+
+    PYTHONPATH=src python -m benchmarks.multi_query [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    MultiQueryConfig,
+    MultiQueryEngine,
+    OperatorConfig,
+    Predicate,
+    ProgressiveQueryOperator,
+    build_query_set,
+    conjunction,
+    learn_decision_table,
+)
+from repro.core.combine import fit_combine_weights, subset_columns as combine_subset
+from repro.data.synthetic import make_corpus, split_corpus, truth_answer_mask
+from repro.enrich.simulated import (
+    SimulatedBank,
+    preprocess_cheapest,
+    subset_columns as bank_subset,
+)
+
+# sts regime (benchmarks.common.REGIMES): steep quality curve -> fast runs
+AUCS = (0.60, 0.88, 0.93, 0.97)
+COSTS = (0.01, 0.05, 0.2, 0.5)
+SELECTIVITY = 0.15
+
+
+def _build_global(n: int, num_preds: int, seed: int = 0, train: int = 1024):
+    preds = [Predicate(i, 1) for i in range(num_preds)]
+    corpus = make_corpus(
+        jax.random.PRNGKey(seed), n + train,
+        [p.tag_type for p in preds], [p.tag for p in preds],
+        selectivity=[SELECTIVITY] * num_preds, aucs=AUCS, costs=COSTS,
+    )
+    tr, evalc = split_corpus(corpus, train)
+    combine = fit_combine_weights(
+        tr.func_probs, tr.truth_pred.astype(jnp.float32), steps=150
+    )
+    table = learn_decision_table(tr.func_probs, combine, num_bins=10)
+    bank = SimulatedBank(outputs=evalc.func_probs, costs=evalc.costs)
+    pre = preprocess_cheapest(evalc.func_probs, evalc.costs)[:2]
+    return preds, evalc, bank, combine, table, pre
+
+
+def _sample_queries(preds, num_queries: int, preds_per_query: int, seed: int = 1):
+    """Zipfian predicate popularity: tenant queries concentrate on a few hot
+    predicates (the shape of real multi-tenant traffic), so cross-query
+    overlap — and the dedup opportunity — grows with Q."""
+    rng = np.random.default_rng(seed)
+    weights = 1.0 / (1.0 + np.arange(len(preds)))
+    weights /= weights.sum()
+    out = []
+    for _ in range(num_queries):
+        k = min(preds_per_query, len(preds))
+        cols = sorted(rng.choice(len(preds), size=k, replace=False, p=weights))
+        out.append((cols, conjunction(*[preds[c] for c in cols])))
+    return out
+
+
+def _converged_targets(queries, bank, combine, table, frac=0.95):
+    """Per-query E(F) target: ``frac`` of the full-execution expected F.
+
+    The converged state (every triple executed) is the same under shared and
+    independent serving, so it anchors a fair cost-to-quality comparison —
+    and it is computable in closed form, no epochs needed.
+    """
+    from repro.core.combine import combine_probabilities
+    from repro.core.threshold import select_answer
+
+    full = jnp.ones(bank.outputs.shape, bool)
+    pred_prob = combine_probabilities(combine, bank.outputs, full)  # [N, P]
+    targets = []
+    for cols, _ in queries:
+        joint = jnp.prod(pred_prob[:, jnp.asarray(cols, jnp.int32)], axis=-1)
+        targets.append(frac * float(select_answer(joint).expected_f))
+    return targets
+
+
+def _cost_to_targets(costs, per_query_f, targets):
+    """Substrate cost at the epoch when the LAST query first holds its target.
+
+    -> (cost, reached_all).  Falls back to the final cost when some query
+    never reaches inside the epoch cap.
+    """
+    q = len(per_query_f[0])
+    first = [None] * q
+    for e, fs in enumerate(per_query_f):
+        for i in range(q):
+            if first[i] is None and fs[i] >= targets[i]:
+                first[i] = e
+    if any(x is None for x in first):
+        return float(costs[-1]), False
+    return float(costs[max(first)]), True
+
+
+def run_shared(queries, preds, bank, combine, table, pre, n, targets, epochs, plan_size):
+    query_set = build_query_set(
+        [q for _, q in queries], global_predicates=[p.positive() for p in preds]
+    )
+    engine = MultiQueryEngine(
+        query_set, table, combine, bank.costs, bank,
+        MultiQueryConfig(plan_size=plan_size, function_selection="best"),
+    )
+    state = engine.warm_start(engine.init_state(n), *pre)
+    costs, fs, walls = [], [], []
+    for _ in range(epochs):
+        t0 = time.perf_counter()
+        state, sel, plans, merged, _, _ = engine.run_epoch(state)
+        walls.append(time.perf_counter() - t0)
+        costs.append(float(state.cost_spent))
+        fs.append([float(x) for x in sel.expected_f])
+        if int(merged.num_valid()) == 0:
+            break
+        if all(f >= t for f, t in zip(fs[-1], targets)):
+            break
+    cost, reached = _cost_to_targets(costs, fs, targets)
+    return cost, reached, float(np.mean(walls) * 1e6)
+
+
+def run_independent(queries, bank, combine, table, pre, n, targets, epochs, plan_size):
+    """Q stand-alone operators, each over its query-local predicate columns."""
+    pre_probs, pre_mask = pre
+    total = 0.0
+    reached_all = True
+    for (cols, query), target in zip(queries, targets):
+        local_query = conjunction(*[Predicate(i, 1) for i in range(len(cols))])
+        # relabel onto local columns: the operator neither knows nor cares
+        # about the global schema — only the column data matters
+        b = bank_subset(bank, cols)
+        op = ProgressiveQueryOperator(
+            local_query, table.subset(cols), combine_subset(combine, cols),
+            b.costs, b,
+            OperatorConfig(plan_size=plan_size, function_selection="best"),
+        )
+        cols_arr = jnp.asarray(cols, jnp.int32)
+        state = op.warm_start(
+            op.init_state(n), pre_probs[:, cols_arr], pre_mask[:, cols_arr]
+        )
+        cost, reached = None, False
+        for _ in range(epochs):
+            state, sel, plan, _ = op.run_epoch(state)
+            if float(sel.expected_f) >= target:
+                cost, reached = float(state.cost_spent), True
+                break
+            if int(plan.num_valid()) == 0:
+                break
+        if not reached:
+            cost = float(state.cost_spent)
+            reached_all = False
+        total += cost
+    return total, reached_all
+
+
+def bench_multi_query(small: bool = True):
+    n = 256 if small else 1024
+    qs = (1, 4, 16) if small else (1, 4, 16, 64)
+    epochs = 40 if small else 120
+    plan_size = 64
+    num_preds = 6
+    preds, evalc, bank, combine, table, pre = _build_global(n, num_preds)
+
+    rows = []
+    for q in qs:
+        queries = _sample_queries(preds, q, preds_per_query=2)
+        targets = _converged_targets(queries, bank, combine, table)
+        shared_cost, shared_ok, epoch_us = run_shared(
+            queries, preds, bank, combine, table, pre, n, targets, epochs, plan_size
+        )
+        indep_cost, indep_ok = run_independent(
+            queries, bank, combine, table, pre, n, targets, epochs, plan_size
+        )
+        ratio = indep_cost / max(shared_cost, 1e-9)
+        rows.append(
+            dict(
+                name=f"multi_query_Q{q}",
+                us_per_call=epoch_us,
+                derived=(
+                    f"shared_cost={shared_cost:.1f}"
+                    f";indep_cost={indep_cost:.1f}"
+                    f";savings_ratio={ratio:.2f}"
+                    f";target_reached={'yes' if shared_ok and indep_ok else 'partial'}"
+                ),
+            )
+        )
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    for r in bench_multi_query(small=not args.full):
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,6 +19,7 @@ def main(argv=None) -> int:
     small = not args.full
 
     from benchmarks import paper_figures as pf
+    from benchmarks.multi_query import bench_multi_query
     from benchmarks.roofline import bench_roofline
 
     benches = [
@@ -31,6 +32,7 @@ def main(argv=None) -> int:
         ("fig9", pf.bench_fig9_scalability),
         ("fig11", pf.bench_fig11_caching),
         ("kernel", pf.bench_kernel_enrich),
+        ("multiq", bench_multi_query),
         ("roofline", bench_roofline),
     ]
 

@@ -1,0 +1,1 @@
+"""PIQUE reproduction: progressive query operator as a JAX/Pallas serving system."""

@@ -1,7 +1,25 @@
 """PIQUE core: the paper's progressive query operator, vectorized for TPU."""
 
-from repro.core.query import EQ, NEQ, And, Not, Or, Predicate, compile_query, conjunction
-from repro.core.state import EnrichmentState, init_state, refresh_derived
+from repro.core.query import (
+    EQ,
+    NEQ,
+    And,
+    Not,
+    Or,
+    Predicate,
+    compile_query,
+    conjunction,
+    global_predicate_space,
+    reindex_query,
+)
+from repro.core.state import (
+    EnrichmentState,
+    PerQueryState,
+    SharedSubstrate,
+    init_state,
+    init_substrate,
+    refresh_derived,
+)
 from repro.core.decision_table import (
     DecisionTable,
     fallback_decision_table,
@@ -9,15 +27,28 @@ from repro.core.decision_table import (
 )
 from repro.core.threshold import select_answer, select_answer_approx
 from repro.core.benefit import compute_benefits
-from repro.core.plan import Plan, select_plan
+from repro.core.plan import Plan, merge_plans_dedup, select_plan
 from repro.core.operator import OperatorConfig, ProgressiveQueryOperator
+from repro.core.multi_query import (
+    MultiEpochStats,
+    MultiQueryConfig,
+    MultiQueryEngine,
+    MultiQueryState,
+    QuerySet,
+    build_query_set,
+)
 from repro.core.baselines import StaticOrderEvaluator
 
 __all__ = [
     "EQ", "NEQ", "And", "Not", "Or", "Predicate", "compile_query", "conjunction",
-    "EnrichmentState", "init_state", "refresh_derived",
+    "global_predicate_space", "reindex_query",
+    "EnrichmentState", "SharedSubstrate", "PerQueryState",
+    "init_state", "init_substrate", "refresh_derived",
     "DecisionTable", "fallback_decision_table", "learn_decision_table",
     "select_answer", "select_answer_approx", "compute_benefits",
-    "Plan", "select_plan", "OperatorConfig", "ProgressiveQueryOperator",
+    "Plan", "select_plan", "merge_plans_dedup",
+    "OperatorConfig", "ProgressiveQueryOperator",
+    "MultiQueryEngine", "MultiQueryConfig", "MultiQueryState", "MultiEpochStats",
+    "QuerySet", "build_query_set",
     "StaticOrderEvaluator",
 ]

@@ -63,6 +63,15 @@ def reliability_weights_from_auc(auc: jax.Array, prior_default: float = 0.75) ->
     return jnp.maximum(_logit(jnp.clip(auc, 0.5 + 1e-3, 1 - 1e-3)), 1e-3)
 
 
+def subset_columns(params: CombineParams, cols) -> CombineParams:
+    """Combine params restricted to a subset of predicate columns (pairs with
+    ``DecisionTable.subset`` for independent-operator baselines)."""
+    cols = jnp.asarray(cols, jnp.int32)
+    return CombineParams(
+        weights=params.weights[cols], bias=params.bias[cols], rho=params.rho[cols]
+    )
+
+
 def default_combine_params(auc: jax.Array) -> CombineParams:
     """auc: [P, F] per-(predicate, function) quality -> prior combine params."""
     return CombineParams(

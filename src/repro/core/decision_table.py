@@ -59,6 +59,20 @@ class DecisionTable:
         b = entropy_lib.uncertainty_bin(uncertainty, self.num_bins)
         return self.delta_h_all[pred_idx, state_id, b]
 
+    def subset(self, cols) -> "DecisionTable":
+        """Table restricted to a subset of predicate rows.
+
+        Lets a single-query operator run over a query-local predicate space
+        while sharing the offline learning pass with the global multi-query
+        table (used by the Q-independent-operators baseline)."""
+        cols = jnp.asarray(cols, jnp.int32)
+        return DecisionTable(
+            next_fn=self.next_fn[cols],
+            delta_h=self.delta_h[cols],
+            delta_h_all=None if self.delta_h_all is None else self.delta_h_all[cols],
+            num_bins=self.num_bins,
+        )
+
 
 def enumerate_states(num_functions: int) -> np.ndarray:
     """[2^F, F] bool table of state bitmask -> executed-function indicator."""

@@ -1,0 +1,504 @@
+"""Multi-query batched PIQUE engine: Q concurrent queries, one shared corpus.
+
+The paper's operator (``core.operator``) serves one query; its §5 cache only
+helps *successive* queries.  At serving scale the win comes from sharing
+enrichment across *concurrent* consumers (IDEA, Wang & Carey 2019): most
+tenants' queries overlap on popular predicates, so the same (object,
+predicate, function) triples keep getting requested.  This engine runs Q
+queries in lockstep epochs over one ``SharedSubstrate``:
+
+* raw tagging outputs / exec bits / cost live once in the substrate — a triple
+  is executed and charged once no matter how many queries want it;
+* per-query derived state (``pred_prob`` / ``uncertainty`` / ``joint_prob`` /
+  ``in_answer``) is stacked on a leading ``[Q, ...]`` axis; plan generation
+  and Theorem-1 answer selection are vmapped over it;
+* the Q per-query plans are merged with **cross-query dedup**
+  (``plan.merge_plans_dedup``): duplicate triples execute once in the bank and
+  their outputs fan back out to every requesting query through the substrate;
+* newly admitted queries warm-start from the substrate via the existing
+  ``state.with_cached_state`` path, so a popular corpus serves its Q+1'th
+  tenant nearly for free.
+
+Both execution backends (``SimulatedBank``, ``ModelCascadeBank``) plug in
+unchanged: they only ever see the merged plan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import operator as operator_lib
+from repro.core import plan as plan_lib
+from repro.core import query as query_lib
+from repro.core import state as state_lib
+from repro.core import threshold as threshold_lib
+from repro.core.benefit import NEG_INF, TripleBenefits, estimate_pred_prob_after
+from repro.core.combine import CombineParams, combine_probabilities
+from repro.core.decision_table import DecisionTable
+from repro.core.entropy import binary_entropy
+from repro.core.metrics import true_f_alpha
+from repro.core.query import CompiledQuery
+from repro.core.state import PerQueryState, SharedSubstrate
+
+
+# --------------------------------------------------------------- query set --
+
+
+@dataclasses.dataclass(frozen=True)
+class QuerySet:
+    """Q compiled queries re-homed onto one global predicate space.
+
+    ``pred_mask[q, j]`` says query q references global predicate column j;
+    columns outside the mask never earn benefit for q and never contribute to
+    its entropy statistics.  ``evaluate_batched`` maps ``[Q, ..., P]``
+    predicate probabilities to ``[Q, ...]`` joint probabilities — a closed-form
+    masked product when every query is conjunctive (the paper's Q1-Q5 shape),
+    an unrolled per-query evaluation otherwise.
+    """
+
+    queries: tuple  # tuple[CompiledQuery] — original, local predicate spaces
+    reindexed: tuple  # tuple[CompiledQuery] — global predicate space
+    global_predicates: tuple  # tuple[Predicate]
+    pred_mask: jax.Array  # [Q, P] bool
+    all_conjunctive: bool
+
+    @property
+    def num_queries(self) -> int:
+        return len(self.queries)
+
+    @property
+    def num_predicates(self) -> int:
+        return len(self.global_predicates)
+
+    def evaluate_batched(self, pred_prob: jax.Array) -> jax.Array:
+        """[Q, ..., P] predicate probabilities -> [Q, ...] joint probabilities."""
+        if self.all_conjunctive:
+            shape = (self.num_queries,) + (1,) * (pred_prob.ndim - 2) + (-1,)
+            mask = self.pred_mask.reshape(shape)
+            return jnp.prod(jnp.where(mask, pred_prob, 1.0), axis=-1)
+        return jnp.stack(
+            [q.evaluate(pred_prob[i]) for i, q in enumerate(self.reindexed)]
+        )
+
+    def add(self, query: CompiledQuery) -> "QuerySet":
+        """Extend with one query whose predicates already exist in the space.
+
+        The substrate's P axis is fixed at engine construction, so admission
+        cannot grow the global space — build the initial set with every
+        predicate the corpus supports (the corpus schema, not the current
+        tenants) when late admission is expected.
+        """
+        return build_query_set(
+            self.queries + (query,), global_predicates=self.global_predicates
+        )
+
+
+def build_query_set(
+    queries: Sequence[CompiledQuery],
+    global_predicates: Optional[Sequence] = None,
+) -> QuerySet:
+    queries = tuple(queries)
+    if global_predicates is None:
+        global_predicates = query_lib.global_predicate_space(queries)
+    global_predicates = tuple(global_predicates)
+    reindexed = tuple(
+        query_lib.reindex_query(q, global_predicates) for q in queries
+    )
+    p = len(global_predicates)
+    index = {pred: j for j, pred in enumerate(global_predicates)}
+    mask = jnp.zeros((len(queries), p), bool)
+    for i, q in enumerate(queries):
+        cols = jnp.asarray([index[pred] for pred in q.predicates], jnp.int32)
+        mask = mask.at[i, cols].set(True)
+    return QuerySet(
+        queries=queries,
+        reindexed=reindexed,
+        global_predicates=global_predicates,
+        pred_mask=mask,
+        all_conjunctive=all(q.is_conjunctive for q in queries),
+    )
+
+
+# ------------------------------------------------------------ engine state --
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MultiQueryState:
+    substrate: SharedSubstrate
+    per_query: PerQueryState
+
+    @property
+    def num_queries(self) -> int:
+        return self.per_query.num_queries
+
+    @property
+    def cost_spent(self) -> jax.Array:
+        return self.substrate.cost_spent
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiQueryConfig:
+    plan_size: int = 256  # per-query plan capacity
+    merged_capacity: Optional[int] = None  # None: Q * plan_size (lossless merge)
+    epoch_cost_budget: Optional[float] = None  # applied to the merged plan
+    alpha: float = 1.0
+    answer_mode: str = "exact"  # "exact" | "approx"
+    candidate_strategy: str = "auto"  # "outside_answer" | "all" | "auto"
+    function_selection: str = "table"  # "table" (paper) | "best" (beyond-paper)
+    prior: float = 0.5
+
+
+@dataclasses.dataclass
+class MultiEpochStats:
+    epoch: int
+    cost_spent: float  # cumulative substrate spend (shared across queries)
+    epoch_cost: float  # cost newly charged this epoch (post-dedup)
+    requested_cost: float  # sum of per-query plan costs before dedup
+    expected_f: list  # [Q] per-query E(F_alpha)
+    answer_size: list  # [Q]
+    true_f: Optional[list]  # [Q] against ground truth, when available
+    plan_valid: list  # [Q] valid triples each query requested
+    merged_valid: int  # unique triples actually executed
+    wall_time_s: float
+
+    @property
+    def dedup_savings(self) -> float:
+        """Cost the cross-query merge avoided this epoch."""
+        return self.requested_cost - self.epoch_cost
+
+    @property
+    def mean_expected_f(self) -> float:
+        return sum(self.expected_f) / max(len(self.expected_f), 1)
+
+
+# ------------------------------------------------------------------ engine --
+
+
+class MultiQueryEngine:
+    """Lockstep progressive evaluation of Q queries over one shared corpus."""
+
+    def __init__(
+        self,
+        query_set: QuerySet,
+        table: DecisionTable,
+        combine_params: CombineParams,
+        costs: jax.Array,  # [P, F] over the GLOBAL predicate space
+        bank,  # TaggingBank: .execute(plan) -> [K] probs
+        config: MultiQueryConfig = MultiQueryConfig(),
+        truth_masks: Optional[jax.Array] = None,  # [Q, N] bool (metrics only)
+    ):
+        if config.function_selection == "best" and not query_set.all_conjunctive:
+            raise NotImplementedError(
+                "function_selection='best' requires an all-conjunctive query set"
+            )
+        self.query_set = query_set
+        self.table = table
+        self.combine_params = combine_params
+        self.costs = jnp.asarray(costs, jnp.float32)
+        self.bank = bank
+        self.config = config
+        self.truth_masks = truth_masks
+        self._plan_fn = jax.jit(self._plan_epoch)
+        self._update_fn = jax.jit(self._apply_and_select)
+
+    # ---- derived-state maintenance -----------------------------------------
+
+    def _derive(self, substrate: SharedSubstrate) -> tuple[jax.Array, ...]:
+        """Shared recombination + batched joint: the fan-out step.
+
+        ``pred_prob`` / ``uncertainty`` are query-independent under shared
+        combine params, so they are computed once and broadcast onto the Q
+        axis; only the joint probability differs per query.
+        """
+        q = self.query_set.num_queries
+        pred_prob = combine_probabilities(
+            self.combine_params,
+            substrate.func_probs,
+            substrate.exec_mask,
+            prior=self.config.prior,
+        )  # [N, P]
+        pp_q = jnp.broadcast_to(pred_prob[None], (q,) + pred_prob.shape)
+        unc_q = jnp.broadcast_to(binary_entropy(pred_prob)[None], pp_q.shape)
+        joint = self.query_set.evaluate_batched(pp_q)  # [Q, N]
+        return pp_q, unc_q, joint
+
+    def _select_answers(self, joint_prob: jax.Array) -> threshold_lib.AnswerSelection:
+        if self.config.answer_mode == "approx":
+            fn = functools.partial(
+                threshold_lib.select_answer_approx, alpha=self.config.alpha
+            )
+        else:
+            fn = functools.partial(threshold_lib.select_answer, alpha=self.config.alpha)
+        return jax.vmap(fn)(joint_prob)
+
+    def init_state(self, num_objects: int) -> MultiQueryState:
+        sub = state_lib.init_substrate(
+            num_objects,
+            self.query_set.num_predicates,
+            self.costs.shape[1],
+            prior=self.config.prior,
+        )
+        pp, unc, joint = self._derive(sub)
+        sel = self._select_answers(joint)
+        return MultiQueryState(
+            substrate=sub,
+            per_query=PerQueryState(
+                pred_prob=pp, uncertainty=unc, joint_prob=joint, in_answer=sel.mask
+            ),
+        )
+
+    def warm_start(
+        self,
+        state: MultiQueryState,
+        cached_probs: jax.Array,  # [N, P, F]
+        cached_mask: jax.Array,  # [N, P, F] bool
+    ) -> MultiQueryState:
+        """Merge a pre-executed cache into the substrate (paper §6.1
+        Initialization Step / §5 caching) and re-derive every query's state."""
+        sub = state.substrate
+        merged_mask = sub.exec_mask | cached_mask
+        merged_probs = jnp.where(cached_mask, cached_probs, sub.func_probs)
+        sub = SharedSubstrate(
+            func_probs=merged_probs, exec_mask=merged_mask, cost_spent=sub.cost_spent
+        )
+        pp, unc, joint = self._derive(sub)
+        sel = self._select_answers(joint)
+        return MultiQueryState(
+            substrate=sub,
+            per_query=PerQueryState(
+                pred_prob=pp, uncertainty=unc, joint_prob=joint, in_answer=sel.mask
+            ),
+        )
+
+    def admit(
+        self,
+        state: MultiQueryState,
+        query: CompiledQuery,
+        truth_mask: Optional[jax.Array] = None,
+    ) -> MultiQueryState:
+        """Admit a new tenant mid-flight, warm-started from the substrate.
+
+        Routes through ``state.with_cached_state`` with the substrate as the
+        cache (paper §5): the query's first answer set already reflects every
+        enrichment earlier tenants paid for.  Q grows by one, which re-traces
+        the jitted stages at the new shape.
+        """
+        if self.config.function_selection == "best" and not query.is_conjunctive:
+            raise NotImplementedError(
+                "function_selection='best' requires an all-conjunctive query set"
+            )
+        if (self.truth_masks is not None) != (truth_mask is not None):
+            raise ValueError(
+                "admit(): truth_mask must be provided iff the engine tracks "
+                "truth_masks (construct the engine without them to opt out)"
+            )
+        rq = query_lib.reindex_query(query, self.query_set.global_predicates)
+        sub = state.substrate
+        fresh = state_lib.init_state(
+            sub.num_objects,
+            self.query_set.num_predicates,
+            sub.num_functions,
+            prior=self.config.prior,
+        )
+        warm = state_lib.with_cached_state(
+            fresh, rq, self.combine_params, sub.func_probs, sub.exec_mask,
+            prior=self.config.prior,
+        )
+        if self.config.answer_mode == "approx":
+            sel = threshold_lib.select_answer_approx(warm.joint_prob, self.config.alpha)
+        else:
+            sel = threshold_lib.select_answer(warm.joint_prob, self.config.alpha)
+        self.query_set = self.query_set.add(query)
+        per = state.per_query
+        new_per = PerQueryState(
+            pred_prob=jnp.concatenate([per.pred_prob, warm.pred_prob[None]]),
+            uncertainty=jnp.concatenate([per.uncertainty, warm.uncertainty[None]]),
+            joint_prob=jnp.concatenate([per.joint_prob, warm.joint_prob[None]]),
+            in_answer=jnp.concatenate([per.in_answer, sel.mask[None]]),
+        )
+        if self.truth_masks is not None:
+            self.truth_masks = jnp.concatenate([self.truth_masks, truth_mask[None]])
+        self._plan_fn = jax.jit(self._plan_epoch)
+        self._update_fn = jax.jit(self._apply_and_select)
+        return MultiQueryState(substrate=sub, per_query=new_per)
+
+    # ---- jitted stages ------------------------------------------------------
+
+    def _benefits_batched(self, state: MultiQueryState) -> TripleBenefits:
+        """Vectorized Eq. 11 with [Q, N, P] leaves over the global space.
+
+        The decision-table lookup keys on the *shared* exec bitmask — a triple
+        executed for query A is "already run" for query B (write-once
+        semantics surfacing in planning).  Columns outside a query's
+        ``pred_mask`` earn -inf so no tenant pays for predicates it never
+        asked about.
+        """
+        cfg = self.config
+        sub = state.substrate
+        per = state.per_query
+        n, p = sub.num_objects, sub.num_predicates
+        state_id = sub.state_id()  # [N, P] shared
+        pred_idx = jnp.broadcast_to(jnp.arange(p, dtype=jnp.int32)[None], (n, p))
+        pred_mask = self.query_set.pred_mask  # [Q, P]
+
+        if cfg.function_selection == "best" and self.table.delta_h_all is not None:
+            # all-conjunctive only (checked in __init__): price every
+            # remaining function with the O(1) conjunctive joint update.
+            dh_all = self.table.lookup_all(pred_idx, state_id, per.uncertainty)
+            # index arrays broadcast: [N,P] x [Q,N,P] -> [Q,N,P,F]
+            _, p_hat_all = estimate_pred_prob_after(
+                per.pred_prob[..., None],
+                jnp.where(jnp.isfinite(dh_all), dh_all, 0.0),
+            )
+            cost = jnp.maximum(jnp.broadcast_to(self.costs, dh_all.shape[1:]), 1e-9)
+            cost = jnp.broadcast_to(cost[None], dh_all.shape)
+            est_joint_all = jnp.clip(
+                self.query_set.reindexed[0].conjunctive_update(
+                    per.joint_prob[:, :, None, None],
+                    per.pred_prob[..., None],
+                    p_hat_all,
+                ),
+                0.0,
+                1.0,
+            )
+            ben_all = per.joint_prob[:, :, None, None] * est_joint_all / cost
+            ben_all = jnp.where(jnp.isfinite(dh_all), ben_all, NEG_INF)
+            nf = jnp.argmax(ben_all, axis=-1).astype(jnp.int32)  # [Q, N, P]
+            benefit = jnp.max(ben_all, axis=-1)
+            est_joint = jnp.take_along_axis(est_joint_all, nf[..., None], -1)[..., 0]
+            cost = jnp.take_along_axis(cost, nf[..., None], -1)[..., 0]
+            nf = jnp.where(jnp.isfinite(benefit), nf, -1)
+        else:
+            nf, dh = self.table.lookup(pred_idx, state_id, per.uncertainty)  # [Q,N,P]
+            _, p_hat = estimate_pred_prob_after(per.pred_prob, dh)
+            if self.query_set.all_conjunctive:
+                est_joint = self.query_set.reindexed[0].conjunctive_update(
+                    per.joint_prob[..., None], per.pred_prob, p_hat
+                )
+            else:
+                est_joint = jnp.stack(
+                    [
+                        jnp.stack(
+                            [
+                                rq.evaluate_with_column(
+                                    per.pred_prob[i], c, p_hat[i, :, c]
+                                )
+                                for c in range(p)
+                            ],
+                            axis=-1,
+                        )
+                        for i, rq in enumerate(self.query_set.reindexed)
+                    ]
+                )
+            est_joint = jnp.clip(est_joint, 0.0, 1.0)
+            fn_safe = jnp.maximum(nf, 0)
+            cost = jnp.maximum(self.costs[pred_idx, fn_safe], 1e-9)  # [Q, N, P]
+            benefit = per.joint_prob[..., None] * est_joint / cost  # Eq. 11
+
+        valid = (nf >= 0) & pred_mask[:, None, :]
+        benefit = jnp.where(valid, benefit, NEG_INF)
+
+        cand = jax.vmap(
+            lambda u, a, m: operator_lib.candidate_mask(
+                u, a, cfg.candidate_strategy, pred_mask=m
+            )
+        )(per.uncertainty, per.in_answer, pred_mask)  # [Q, N]
+        benefit = jax.vmap(
+            lambda b, c: operator_lib.restrict_benefits(b, c, cfg.plan_size)
+        )(benefit, cand)
+        return TripleBenefits(benefit=benefit, next_fn=nf, est_joint=est_joint, cost=cost)
+
+    def _plan_epoch(self, state: MultiQueryState) -> tuple[plan_lib.Plan, plan_lib.Plan]:
+        """-> (per-query plans [Q, K], merged deduplicated plan [M])."""
+        cfg = self.config
+        benefits = self._benefits_batched(state)
+        plans = jax.vmap(
+            functools.partial(plan_lib.select_plan, plan_size=cfg.plan_size)
+        )(benefits)
+        merged = plan_lib.merge_plans_dedup(
+            plans,
+            self.query_set.num_predicates,
+            self.costs.shape[1],
+            capacity=cfg.merged_capacity,
+            cost_budget=cfg.epoch_cost_budget,
+        )
+        return plans, merged
+
+    def _apply_and_select(
+        self,
+        state: MultiQueryState,
+        merged: plan_lib.Plan,
+        outputs: jax.Array,  # [M] raw probabilities from the bank
+    ):
+        sub = state_lib.apply_outputs_to_substrate(
+            state.substrate,
+            merged.object_idx,
+            merged.pred_idx,
+            merged.func_idx,
+            outputs,
+            merged.cost,
+            merged.valid,
+        )
+        pp, unc, joint = self._derive(sub)
+        sel = self._select_answers(joint)
+        per = PerQueryState(
+            pred_prob=pp, uncertainty=unc, joint_prob=joint, in_answer=sel.mask
+        )
+        return MultiQueryState(substrate=sub, per_query=per), sel
+
+    # ---- public driver ------------------------------------------------------
+
+    def run_epoch(self, state: MultiQueryState):
+        t0 = time.perf_counter()
+        plans, merged = self._plan_fn(state)
+        outputs = self.bank.execute(merged)
+        prev_cost = float(state.substrate.cost_spent)
+        state, sel = self._update_fn(state, merged, outputs)
+        wall = time.perf_counter() - t0
+        return state, sel, plans, merged, wall, prev_cost
+
+    def run(
+        self,
+        num_objects: int,
+        num_epochs: int,
+        state: Optional[MultiQueryState] = None,
+        stop_when_exhausted: bool = True,
+    ) -> tuple[MultiQueryState, list]:
+        if state is None:
+            state = self.init_state(num_objects)
+        history: list[MultiEpochStats] = []
+        for e in range(num_epochs):
+            state, sel, plans, merged, wall, prev_cost = self.run_epoch(state)
+            tf = None
+            if self.truth_masks is not None:
+                tf = [
+                    float(true_f_alpha(sel.mask[i], self.truth_masks[i], self.config.alpha))
+                    for i in range(state.num_queries)
+                ]
+            merged_valid = int(merged.num_valid())
+            history.append(
+                MultiEpochStats(
+                    epoch=e,
+                    cost_spent=float(state.substrate.cost_spent),
+                    epoch_cost=float(state.substrate.cost_spent) - prev_cost,
+                    requested_cost=float(
+                        jnp.sum(jnp.where(plans.valid, plans.cost, 0.0))
+                    ),
+                    expected_f=[float(x) for x in sel.expected_f],
+                    answer_size=[int(x) for x in sel.size],
+                    true_f=tf,
+                    plan_valid=[int(x) for x in jnp.sum(plans.valid, axis=1)],
+                    merged_valid=merged_valid,
+                    wall_time_s=wall,
+                )
+            )
+            if stop_when_exhausted and merged_valid == 0:
+                break
+        return state, history

@@ -48,6 +48,56 @@ class OperatorConfig:
     prior: float = 0.5
 
 
+def candidate_mask(
+    uncertainty: jax.Array,  # [N, P]
+    in_answer: jax.Array,  # [N] bool
+    strategy: str,
+    pred_mask: Optional[jax.Array] = None,  # [P] bool: predicates the query uses
+) -> jax.Array:
+    """[N] bool candidate restriction (§4.1 + the beyond-paper "auto" widening).
+
+    ``pred_mask`` restricts the uncertainty aggregate to the query's own
+    predicate columns — required in the multi-query engine where ``P`` spans
+    the global predicate space and a query must not let other tenants'
+    columns drag its entropy statistics around.
+    """
+    if strategy == "all":
+        return jnp.ones(in_answer.shape, bool)
+    if strategy == "auto":
+        # Beyond-paper hardening (DESIGN.md section 8): the paper's
+        # outside-answer restriction (section 4.1) assumes the answer set is
+        # small/precise.  With diffuse early probabilities, Theorem-1
+        # selection admits most of the corpus and the restriction would
+        # refine only the hopeless tail.  "auto" additionally admits
+        # inside-answer objects that are still uncertain (entropy above
+        # the corpus median) so precision errors inside the set can be
+        # fixed; it reduces to the paper rule once the set sharpens.
+        if pred_mask is None:
+            mean_h = jnp.mean(uncertainty, axis=-1)  # [N]
+        else:
+            denom = jnp.maximum(jnp.sum(pred_mask), 1)
+            mean_h = jnp.sum(jnp.where(pred_mask[None, :], uncertainty, 0.0), -1) / denom
+        med = jnp.median(mean_h)
+        return (~in_answer) | (mean_h >= jnp.maximum(med, 0.35))
+    return ~in_answer  # "outside_answer" — paper section 4.1 (Fig. 7 benchmarks)
+
+
+def restrict_benefits(
+    benefit: jax.Array,  # [N, P]
+    cand: jax.Array,  # [N] bool
+    plan_size: int,
+) -> jax.Array:
+    """Apply the candidate restriction with a starvation guard: never leave
+    fewer valid triples than one plan; widen back to all objects when the
+    restriction would."""
+    restricted = jnp.where(cand[:, None], benefit, -jnp.inf)
+    n_valid = jnp.sum(jnp.isfinite(restricted))
+    use_restricted = n_valid >= jnp.minimum(
+        plan_size, jnp.sum(jnp.isfinite(benefit))
+    )
+    return jnp.where(use_restricted, restricted, benefit)
+
+
 @dataclasses.dataclass
 class EpochStats:
     epoch: int
@@ -108,31 +158,10 @@ class ProgressiveQueryOperator:
                 state, self.query, self.table, self.costs, every,
                 function_selection=cfg.function_selection,
             )
-        if cfg.candidate_strategy == "all":
-            cand = every
-        elif cfg.candidate_strategy == "auto":
-            # Beyond-paper hardening (DESIGN.md section 8): the paper's
-            # outside-answer restriction (section 4.1) assumes the answer set is
-            # small/precise.  With diffuse early probabilities, Theorem-1
-            # selection admits most of the corpus and the restriction would
-            # refine only the hopeless tail.  "auto" additionally admits
-            # inside-answer objects that are still uncertain (entropy above
-            # the corpus median) so precision errors inside the set can be
-            # fixed; it reduces to the paper rule once the set sharpens.
-            mean_h = jnp.mean(state.uncertainty, axis=-1)  # [N]
-            med = jnp.median(mean_h)
-            cand = (~state.in_answer) | (mean_h >= jnp.maximum(med, 0.35))
-        else:  # "outside_answer" — paper section 4.1, used by Fig. 7 benchmarks
-            cand = ~state.in_answer
-        # Starvation guard: the restriction must never leave fewer valid
-        # triples than one plan; widen to all objects when it would.
-        restricted = jnp.where(cand[:, None], benefits.benefit, -jnp.inf)
-        n_valid = jnp.sum(jnp.isfinite(restricted))
-        use_restricted = n_valid >= jnp.minimum(
-            cfg.plan_size, jnp.sum(jnp.isfinite(benefits.benefit))
+        cand = candidate_mask(state.uncertainty, state.in_answer, cfg.candidate_strategy)
+        benefits = benefits._replace(
+            benefit=restrict_benefits(benefits.benefit, cand, cfg.plan_size)
         )
-        final_benefit = jnp.where(use_restricted, restricted, benefits.benefit)
-        benefits = benefits._replace(benefit=final_benefit)
         return plan_lib.select_plan(benefits, cfg.plan_size, cfg.epoch_cost_budget)
 
     def _apply_and_select(
@@ -171,7 +200,8 @@ class ProgressiveQueryOperator:
     def warm_start(self, state, cached_probs, cached_mask):
         """Apply a previous query's cache (paper section 5 / Fig. 11)."""
         st = state_lib.with_cached_state(
-            state, self.query, self.combine_params, cached_probs, cached_mask
+            state, self.query, self.combine_params, cached_probs, cached_mask,
+            prior=self.config.prior,
         )
         sel = self._select_answer(st.joint_prob)
         return dataclasses.replace(st, in_answer=sel.mask)

@@ -91,6 +91,55 @@ def merge_sharded_plans(plans: Plan, plan_size: int) -> Plan:
     return jax.tree.map(lambda x: x[idx], flat)
 
 
+def merge_plans_dedup(
+    plans: Plan,
+    num_predicates: int,
+    num_functions: int,
+    capacity: int | None = None,
+    cost_budget: float | jax.Array | None = None,
+) -> Plan:
+    """Merge Q per-query plans [Q, K] into one deduplicated plan (§5 cache
+    generalized to intra-epoch sharing across concurrent queries).
+
+    Duplicate (object, predicate, function) triples — the same enrichment
+    wanted by several queries this epoch — survive exactly once, keeping the
+    highest benefit any query assigned them; the executed output fans back out
+    to every requesting query through the shared substrate.  Shape-stable
+    under jit: encode each triple as a scalar key, lexsort by (key, -benefit),
+    keep first occurrences, compact by top-k benefit.
+
+    Keys are int32: callers need N * P * F < 2**31 (true at every corpus scale
+    this repo runs; the sharded path splits N long before that bound binds).
+    """
+    flat = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), plans)
+    total = flat.object_idx.shape[0]
+    if capacity is None:
+        capacity = total
+    capacity = min(capacity, total)
+    sentinel = jnp.iinfo(jnp.int32).max
+    key = (
+        flat.object_idx * jnp.int32(num_predicates) + flat.pred_idx
+    ) * jnp.int32(num_functions) + flat.func_idx
+    key = jnp.where(flat.valid, key, sentinel)
+    # primary: key ascending; secondary: benefit descending, so the first
+    # occurrence of each key is the max-benefit copy across queries
+    order = jnp.lexsort((-flat.benefit, key))
+    k_sorted = key[order]
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), k_sorted[1:] != k_sorted[:-1]]
+    )
+    uniq = first & (k_sorted != sentinel)
+    score = jnp.where(uniq, flat.benefit[order], -jnp.inf)
+    top_vals, top_idx = jax.lax.top_k(score, capacity)
+    sel = order[top_idx]
+    merged = jax.tree.map(lambda x: x[sel], flat)
+    valid = jnp.isfinite(top_vals)
+    if cost_budget is not None:
+        csum = jnp.cumsum(jnp.where(valid, merged.cost, 0.0))
+        valid = valid & (csum <= cost_budget)
+    return merged._replace(valid=valid)
+
+
 def static_plan_from_order(
     object_order: jax.Array,  # [M] object indices in execution order
     pred_of_slot: jax.Array,  # [M]

@@ -227,3 +227,50 @@ def conjunction(*predicates: Predicate) -> CompiledQuery:
     if len(predicates) == 1:
         return compile_query(predicates[0])
     return compile_query(And(*predicates))
+
+
+def global_predicate_space(
+    queries: Sequence[CompiledQuery],
+) -> tuple["Predicate", ...]:
+    """Union of distinct positive predicates across queries, first-seen order.
+
+    The multi-query engine keys one shared substrate by this space: every
+    query's predicates map to columns of the same [N, P_global, F] tensors, so
+    enrichment executed for one query is immediately visible to all others.
+    """
+    out: list = []
+    for q in queries:
+        for p in q.predicates:
+            if p not in out:
+                out.append(p)
+    return tuple(out)
+
+
+def reindex_query(
+    query: CompiledQuery, global_predicates: Sequence["Predicate"]
+) -> CompiledQuery:
+    """Re-home a compiled query onto a global predicate space.
+
+    The returned query evaluates over ``[..., P_global]`` predicate tensors by
+    gathering its own columns first; ``predicates`` becomes the global tuple so
+    ``num_predicates`` matches the shared substrate.  Every predicate of
+    ``query`` must appear in ``global_predicates``.
+    """
+    cols = []
+    index = {p: i for i, p in enumerate(global_predicates)}
+    for p in query.predicates:
+        if p not in index:
+            raise ValueError(f"query predicate {p} missing from global space")
+        cols.append(index[p])
+    cols_arr = jnp.asarray(cols, jnp.int32)
+    inner = query.evaluate
+
+    def evaluate_global(pred_probs: jax.Array) -> jax.Array:
+        return inner(pred_probs[..., cols_arr])
+
+    return CompiledQuery(
+        ast=query.ast,
+        predicates=tuple(global_predicates),
+        is_conjunctive=query.is_conjunctive,
+        evaluate=evaluate_global,
+    )

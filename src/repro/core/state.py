@@ -16,6 +16,15 @@ over the ``("pod", "data")`` mesh axes:
 endian packing of ``exec_mask`` — keeping one canonical representation avoids
 the paper's Appendix-C triple bookkeeping entirely: *all* updates are O(1)
 vectorized writes followed by recombination of the touched columns.
+
+Multi-query split (``repro.core.multi_query``): the raw tensors above divide
+into a **shared substrate** (``func_probs`` / ``exec_mask`` / ``cost_spent``)
+written once per (object, predicate, function) triple no matter how many
+queries requested it, and **per-query derived state** (``pred_prob`` /
+``uncertainty`` / ``joint_prob`` / ``in_answer``) stacked on a leading
+``[Q, ...]`` axis.  ``SharedSubstrate`` + ``PerQueryState`` here are those two
+halves; the single-query ``EnrichmentState`` remains the fused Q=1 view used
+by ``ProgressiveQueryOperator``.
 """
 
 from __future__ import annotations
@@ -29,6 +38,141 @@ import jax.numpy as jnp
 from repro.core import combine as combine_lib
 from repro.core import entropy as entropy_lib
 from repro.core.query import CompiledQuery
+
+
+def _pack_state_id(exec_mask: jax.Array) -> jax.Array:
+    """[..., P] int32 little-endian packing of an [..., P, F] exec mask."""
+    f = exec_mask.shape[-1]
+    weights = 2 ** jnp.arange(f, dtype=jnp.int32)
+    return jnp.sum(exec_mask.astype(jnp.int32) * weights, axis=-1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SharedSubstrate:
+    """The query-independent half of enrichment state.
+
+    One substrate backs every concurrent query over a corpus: raw tagging
+    outputs and the executed-function bitmask are facts about (object,
+    predicate, function) triples, not about any particular query, so they are
+    written exactly once and every query's derived state is recombined from
+    them.  ``cost_spent`` is the aggregate pay-as-you-go spend — a triple is
+    charged only the first time it executes (the paper's §5 cache, made the
+    only write path).
+    """
+
+    func_probs: jax.Array  # [N, P, F] f32 (0.5 where unexecuted)
+    exec_mask: jax.Array  # [N, P, F] bool
+    cost_spent: jax.Array  # [] f32
+
+    @property
+    def num_objects(self) -> int:
+        return self.func_probs.shape[0]
+
+    @property
+    def num_predicates(self) -> int:
+        return self.func_probs.shape[1]
+
+    @property
+    def num_functions(self) -> int:
+        return self.func_probs.shape[2]
+
+    def state_id(self) -> jax.Array:
+        """[N, P] int32 decision-table key."""
+        return _pack_state_id(self.exec_mask)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PerQueryState:
+    """Per-query derived state for Q concurrent queries, stacked on axis 0.
+
+    Everything here is recomputable from ``SharedSubstrate`` + the query set +
+    combine params; it is materialized so plan generation and answer selection
+    vmap over the leading ``Q`` axis.  Under shared combine params
+    ``pred_prob`` / ``uncertainty`` are identical across queries, so the Q
+    axis costs Q-fold memory for those two leaves; if that ever binds at
+    large (N, Q), store them once at [N, P] and broadcast inside the vmapped
+    consumers (they only differ per query once per-tenant combine params or
+    priors exist).
+    """
+
+    pred_prob: jax.Array  # [Q, N, P] f32
+    uncertainty: jax.Array  # [Q, N, P] f32
+    joint_prob: jax.Array  # [Q, N] f32
+    in_answer: jax.Array  # [Q, N] bool
+
+    @property
+    def num_queries(self) -> int:
+        return self.joint_prob.shape[0]
+
+
+def init_substrate(
+    num_objects: int,
+    num_predicates: int,
+    num_functions: int,
+    prior: float = 0.5,
+    dtype=jnp.float32,
+) -> SharedSubstrate:
+    n, p, f = num_objects, num_predicates, num_functions
+    return SharedSubstrate(
+        func_probs=jnp.full((n, p, f), prior, dtype),
+        exec_mask=jnp.zeros((n, p, f), bool),
+        cost_spent=jnp.zeros((), dtype),
+    )
+
+
+def apply_outputs_to_substrate(
+    substrate: SharedSubstrate,
+    object_idx: jax.Array,  # [K] int32, may contain PAD entries
+    pred_idx: jax.Array,  # [K] int32
+    func_idx: jax.Array,  # [K] int32
+    probs: jax.Array,  # [K] f32
+    cost: jax.Array,  # [K] f32
+    valid: jax.Array,  # [K] bool
+) -> SharedSubstrate:
+    """Scatter executed triples into the substrate with write-once charging.
+
+    A triple whose exec bit is already set contributes no additional cost —
+    re-deriving an enrichment some earlier query (or epoch) paid for is free
+    by construction, which is what makes Q overlapping queries cost ~1x, not
+    Qx.  Callers are still expected to dedup within a plan (see
+    ``plan.merge_plans_dedup``); this guard covers cross-epoch repeats.
+    """
+    n = substrate.num_objects
+    obj_safe = jnp.clip(object_idx, 0, n - 1)
+    already = substrate.exec_mask[obj_safe, pred_idx, func_idx]
+    chargeable = valid & ~already
+    obj = jnp.where(valid, object_idx, n)  # out-of-range drops the scatter
+    fp = substrate.func_probs.at[obj, pred_idx, func_idx].set(
+        probs, mode="drop", unique_indices=False
+    )
+    em = substrate.exec_mask.at[obj, pred_idx, func_idx].set(
+        True, mode="drop", unique_indices=False
+    )
+    return SharedSubstrate(
+        func_probs=fp,
+        exec_mask=em,
+        cost_spent=substrate.cost_spent + jnp.sum(jnp.where(chargeable, cost, 0.0)),
+    )
+
+
+def derive_query_state(
+    substrate: SharedSubstrate,
+    query: CompiledQuery,
+    combine_params: combine_lib.CombineParams,
+    prior: float = 0.5,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(pred_prob [N,P], uncertainty [N,P], joint_prob [N]) for one query.
+
+    This is the warm-start path: a newly admitted query's first derived state
+    already reflects every enrichment the substrate has accumulated (paper §5
+    "Caching", generalized to the always-on shared substrate).
+    """
+    pred_prob = combine_lib.combine_probabilities(
+        combine_params, substrate.func_probs, substrate.exec_mask, prior=prior
+    )
+    return pred_prob, entropy_lib.binary_entropy(pred_prob), query.evaluate(pred_prob)
 
 
 @jax.tree_util.register_dataclass
@@ -56,9 +200,25 @@ class EnrichmentState:
 
     def state_id(self) -> jax.Array:
         """[N, P] int32 little-endian packing of exec_mask (decision-table key)."""
-        f = self.exec_mask.shape[-1]
-        weights = (2 ** jnp.arange(f, dtype=jnp.int32))[None, None, :]
-        return jnp.sum(self.exec_mask.astype(jnp.int32) * weights, axis=-1)
+        return _pack_state_id(self.exec_mask)
+
+    @property
+    def substrate(self) -> SharedSubstrate:
+        """The query-independent half of this state (shared-substrate view)."""
+        return SharedSubstrate(
+            func_probs=self.func_probs,
+            exec_mask=self.exec_mask,
+            cost_spent=self.cost_spent,
+        )
+
+    def with_substrate(self, substrate: SharedSubstrate) -> "EnrichmentState":
+        """Replace the substrate half (derived fields left stale — refresh after)."""
+        return dataclasses.replace(
+            self,
+            func_probs=substrate.func_probs,
+            exec_mask=substrate.exec_mask,
+            cost_spent=substrate.cost_spent,
+        )
 
 
 def init_state(
@@ -87,14 +247,11 @@ def refresh_derived(
     prior: float = 0.5,
 ) -> EnrichmentState:
     """Recompute pred_prob / uncertainty / joint_prob from raw outputs + mask."""
-    pred_prob = combine_lib.combine_probabilities(
-        combine_params, state.func_probs, state.exec_mask, prior=prior
+    pred_prob, uncertainty, joint = derive_query_state(
+        state.substrate, query, combine_params, prior=prior
     )
     return dataclasses.replace(
-        state,
-        pred_prob=pred_prob,
-        uncertainty=entropy_lib.binary_entropy(pred_prob),
-        joint_prob=query.evaluate(pred_prob),
+        state, pred_prob=pred_prob, uncertainty=uncertainty, joint_prob=joint
     )
 
 
@@ -114,23 +271,14 @@ def apply_function_outputs(
     Implements the paper's Appendix-C update: set the state bit, record the raw
     probability, then recombine + re-entropy + re-joint only the touched rows
     (we recombine all rows — it is a cheap fused elementwise pass and avoids
-    gather/scatter irregularity; see DESIGN.md section 3).
+    gather/scatter irregularity; see DESIGN.md section 3).  The scatter +
+    charging goes through the shared-substrate path, so re-executed triples
+    are free here exactly as in the multi-query engine.
     """
-    n = state.num_objects
-    obj = jnp.where(valid, object_idx, n)  # out-of-range drops the scatter
-    fp = state.func_probs.at[obj, pred_idx, func_idx].set(
-        probs, mode="drop", unique_indices=False
+    sub = apply_outputs_to_substrate(
+        state.substrate, object_idx, pred_idx, func_idx, probs, cost, valid
     )
-    em = state.exec_mask.at[obj, pred_idx, func_idx].set(
-        True, mode="drop", unique_indices=False
-    )
-    new = dataclasses.replace(
-        state,
-        func_probs=fp,
-        exec_mask=em,
-        cost_spent=state.cost_spent + jnp.sum(jnp.where(valid, cost, 0.0)),
-    )
-    return refresh_derived(new, query, combine_params)
+    return refresh_derived(state.with_substrate(sub), query, combine_params)
 
 
 def with_cached_state(
@@ -139,6 +287,7 @@ def with_cached_state(
     combine_params: combine_lib.CombineParams,
     cached_probs: jax.Array,  # [N, P, F]
     cached_mask: jax.Array,  # [N, P, F] bool
+    prior: float = 0.5,
 ) -> EnrichmentState:
     """Warm-start from a previous query's cache (paper section 5, "Caching").
 
@@ -148,4 +297,4 @@ def with_cached_state(
     merged_mask = state.exec_mask | cached_mask
     merged_probs = jnp.where(cached_mask, cached_probs, state.func_probs)
     new = dataclasses.replace(state, func_probs=merged_probs, exec_mask=merged_mask)
-    return refresh_derived(new, query, combine_params)
+    return refresh_derived(new, query, combine_params, prior=prior)

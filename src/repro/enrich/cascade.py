@@ -183,8 +183,22 @@ class ModelCascadeBank:
             self._jitted[key] = jax.jit(lvl.apply_fn)
         return self._jitted[key]
 
+    def subset(self, cols) -> "ModelCascadeBank":
+        """Bank restricted to a subset of predicate columns (shares cascade
+        params and features; used for independent-operator baselines against
+        the multi-query engine)."""
+        return ModelCascadeBank(
+            cascades=[self.cascades[int(c)] for c in cols],
+            features=self.features,
+        )
+
     def execute(self, plan: Plan) -> jax.Array:
-        """Group triples by (predicate, function) and run batched forwards."""
+        """Group triples by (predicate, function) and run batched forwards.
+
+        Works unchanged for single-query plans and for the multi-query
+        engine's merged deduplicated plans — each unique triple runs one
+        forward pass regardless of how many queries requested it.
+        """
         obj = np.asarray(plan.object_idx)
         prd = np.asarray(plan.pred_idx)
         fns = np.asarray(plan.func_idx)

@@ -28,6 +28,17 @@ class SimulatedBank:
         return self.outputs[obj, plan.pred_idx, fn]
 
 
+def subset_columns(bank: SimulatedBank, cols) -> SimulatedBank:
+    """Restrict a bank to a subset of predicate columns.
+
+    Used to build the Q-independent-operators baseline against the multi-query
+    engine: each stand-alone operator sees only its own query's predicates,
+    exactly as if it had been deployed without the shared substrate.
+    """
+    cols = jnp.asarray(cols, jnp.int32)
+    return SimulatedBank(outputs=bank.outputs[:, cols], costs=bank.costs[cols])
+
+
 def preprocess_cheapest(outputs: jax.Array, costs: jax.Array):
     """Paper section 6.1 "Initialization Step": the cheapest function of every
     tag type runs on all objects before any query arrives.

@@ -6,8 +6,19 @@ inference -> answer selection, streaming progressively better answer sets.
 Integrates the runtime fault-tolerance pieces: straggler-aware object
 partitions and cooperative preemption.
 
+Two serving modes:
+
+* single-tenant (``--queries 1``, the paper's operator): one
+  ``ProgressiveQueryOperator`` per request;
+* multi-tenant (``--queries Q``): Q concurrent queries over one shared
+  enrichment substrate via ``core.multi_query.MultiQueryEngine`` — duplicate
+  (object, predicate, function) work across tenants executes once per epoch
+  and fans out, reporting per-query and aggregate F-alpha trajectories plus
+  the cost the cross-query dedup avoided.
+
 CPU-scale usage (examples/serve_progressive.py drives this):
     python -m repro.launch.serve --objects 512 --epochs 40
+    python -m repro.launch.serve --objects 256 --preds 3 --queries 8
 """
 
 from __future__ import annotations
@@ -23,9 +34,12 @@ import numpy as np
 
 from repro.configs.archs import get_config
 from repro.core import (
+    MultiQueryConfig,
+    MultiQueryEngine,
     OperatorConfig,
     Predicate,
     ProgressiveQueryOperator,
+    build_query_set,
     conjunction,
     learn_decision_table,
 )
@@ -45,22 +59,26 @@ class ServeReport:
     history: list
 
 
-def build_server(
-    num_objects: int = 512,
-    num_preds: int = 1,
-    backbone_arch: Optional[str] = "qwen3-1.7b",
-    seed: int = 0,
+def _offline_phase(
+    num_objects: int,
+    num_preds: int,
+    backbone_arch: Optional[str],
+    seed: int,
+    train_size: int = 512,
 ):
-    """-> (operator, corpus, truth).  Trains the cascade probes offline."""
+    """Corpus + cascade training + combine/table learning over the GLOBAL
+    predicate space (shared by single- and multi-tenant serving).
+
+    -> (preds, evalc, bank, combine, table, qualities)
+    """
     rng = jax.random.PRNGKey(seed)
     preds = [Predicate(i, 1) for i in range(num_preds)]
-    query = conjunction(*preds)
     corpus = make_corpus(
-        rng, num_objects + 512, [p.tag_type for p in preds],
+        rng, num_objects + train_size, [p.tag_type for p in preds],
         [p.tag for p in preds], selectivity=[0.3] * num_preds,
         feature_dim=64,
     )
-    train, evalc = split_corpus(corpus, 512)
+    train, evalc = split_corpus(corpus, train_size)
 
     backbone_cfg = get_config(backbone_arch, smoke=True) if backbone_arch else None
     cascades = []
@@ -95,13 +113,64 @@ def build_server(
     )
     table = learn_decision_table(train_outputs, combine, num_bins=10,
                                  costs=bank.costs, cost_normalized=True)
+    return preds, evalc, bank, combine, table, qualities
 
+
+def build_server(
+    num_objects: int = 512,
+    num_preds: int = 1,
+    backbone_arch: Optional[str] = "qwen3-1.7b",
+    seed: int = 0,
+):
+    """-> (operator, corpus, truth).  Trains the cascade probes offline."""
+    preds, evalc, bank, combine, table, qualities = _offline_phase(
+        num_objects, num_preds, backbone_arch, seed
+    )
+    query = conjunction(*preds)
     truth = truth_answer_mask(evalc, query)
     cfg = OperatorConfig(plan_size=64, function_selection="best")
     op = ProgressiveQueryOperator(
         query, table, combine, bank.costs, bank, cfg, truth_mask=truth
     )
     return op, evalc, truth, qualities
+
+
+def build_multi_server(
+    num_objects: int = 512,
+    num_preds: int = 3,
+    num_queries: int = 8,
+    backbone_arch: Optional[str] = "qwen3-1.7b",
+    seed: int = 0,
+    preds_per_query: int = 2,
+):
+    """Multi-tenant server: Q overlapping conjunctive queries, one substrate.
+
+    Tenants draw random predicate subsets from the corpus schema, so popular
+    predicates are requested by many queries — the workload shape where
+    cross-query dedup pays.  -> (engine, corpus, truths, qualities, queries)
+    """
+    preds, evalc, bank, combine, table, qualities = _offline_phase(
+        num_objects, num_preds, backbone_arch, seed
+    )
+    rng = np.random.default_rng(seed + 1)
+    queries = []
+    for _ in range(num_queries):
+        k = min(max(1, preds_per_query), num_preds)
+        cols = rng.choice(num_preds, size=k, replace=False)
+        queries.append(conjunction(*[preds[c] for c in sorted(cols)]))
+    query_set = build_query_set(
+        queries, global_predicates=[p.positive() for p in preds]
+    )
+    # truth_pred columns are the GLOBAL predicate columns — evaluate the
+    # reindexed queries, not the local-space originals
+    truths = jnp.stack(
+        [truth_answer_mask(evalc, rq) for rq in query_set.reindexed]
+    )
+    cfg = MultiQueryConfig(plan_size=64, function_selection="best")
+    engine = MultiQueryEngine(
+        query_set, table, combine, bank.costs, bank, cfg, truth_masks=truths
+    )
+    return engine, evalc, truths, qualities, queries
 
 
 def serve_query(
@@ -146,19 +215,120 @@ def serve_query(
     )
 
 
+@dataclasses.dataclass
+class MultiServeReport:
+    epochs: int
+    num_queries: int
+    cost_spent: float  # shared substrate spend
+    requested_cost: float  # what the tenants would have paid without dedup
+    expected_f: list  # [Q] final per-query E(F_alpha)
+    true_f: Optional[list]  # [Q]
+    wall_s: float
+    history: list  # per-epoch dicts with per-query + aggregate trajectories
+
+    @property
+    def dedup_savings(self) -> float:
+        return self.requested_cost - self.cost_spent
+
+    @property
+    def mean_expected_f(self) -> float:
+        return sum(self.expected_f) / max(len(self.expected_f), 1)
+
+
+def serve_queries(
+    engine: MultiQueryEngine,
+    num_objects: int,
+    epochs: int = 40,
+    preemption: Optional[PreemptionHandler] = None,
+    target_expected_f: Optional[float] = None,
+) -> MultiServeReport:
+    """Multi-tenant progressive evaluation: lockstep epochs over Q queries.
+
+    ``target_expected_f`` terminates early once the *mean* per-query E(F)
+    reaches the target (each tenant still gets its own trajectory in the
+    history for per-query SLO accounting).
+    """
+    state = engine.init_state(num_objects)
+    t0 = time.perf_counter()
+    history = []
+    requested = 0.0
+    for e in range(epochs):
+        if preemption is not None and preemption.should_stop:
+            break
+        state, sel, plans, merged, wall, prev_cost = engine.run_epoch(state)
+        requested += float(jnp.sum(jnp.where(plans.valid, plans.cost, 0.0)))
+        per_query_f = [float(x) for x in sel.expected_f]
+        mean_f = sum(per_query_f) / len(per_query_f)
+        history.append(
+            dict(
+                epoch=e,
+                cost=float(state.cost_spent),
+                requested_cost=requested,
+                expected_f=per_query_f,
+                mean_expected_f=mean_f,
+                sizes=[int(x) for x in sel.size],
+                merged_valid=int(merged.num_valid()),
+            )
+        )
+        if int(merged.num_valid()) == 0:
+            break
+        if target_expected_f is not None and mean_f >= target_expected_f:
+            break
+    tf = None
+    if engine.truth_masks is not None and history:
+        from repro.core.metrics import true_f_alpha
+
+        tf = [
+            float(true_f_alpha(state.per_query.in_answer[i], engine.truth_masks[i],
+                               engine.config.alpha))
+            for i in range(state.num_queries)
+        ]
+    return MultiServeReport(
+        epochs=len(history),
+        num_queries=engine.query_set.num_queries,
+        cost_spent=float(state.cost_spent),
+        requested_cost=requested,
+        expected_f=history[-1]["expected_f"] if history else [],
+        true_f=tf,
+        wall_s=time.perf_counter() - t0,
+        history=history,
+    )
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--objects", type=int, default=512)
     ap.add_argument("--preds", type=int, default=1)
     ap.add_argument("--epochs", type=int, default=40)
     ap.add_argument("--backbone", default="qwen3-1.7b")
+    ap.add_argument("--queries", type=int, default=1,
+                    help=">1 serves Q concurrent queries over one shared substrate")
+    ap.add_argument("--preds-per-query", type=int, default=2)
     args = ap.parse_args(argv)
+
+    handler = PreemptionHandler().install()
+    if args.queries > 1:
+        engine, corpus, truths, qualities, queries = build_multi_server(
+            args.objects, args.preds, args.queries, args.backbone,
+            preds_per_query=args.preds_per_query,
+        )
+        print(f"[serve] cascade qualities (AUC): {qualities}")
+        report = serve_queries(engine, args.objects, args.epochs, handler)
+        tf = ([f"{x:.3f}" for x in report.true_f] if report.true_f else "n/a")
+        print(
+            f"[serve] {report.num_queries} queries x {report.epochs} epochs, "
+            f"cost={report.cost_spent:.4f}s-model "
+            f"(requested {report.requested_cost:.4f}, dedup saved "
+            f"{report.dedup_savings:.4f}), mean E(F1)={report.mean_expected_f:.3f}, "
+            f"per-query E(F1)={[f'{x:.3f}' for x in report.expected_f]}, "
+            f"true F1={tf}, wall={report.wall_s:.1f}s"
+        )
+        return 0
 
     op, corpus, truth, qualities = build_server(
         args.objects, args.preds, args.backbone
     )
     print(f"[serve] cascade qualities (AUC): {qualities}")
-    handler = PreemptionHandler().install()
     report = serve_query(op, args.objects, args.epochs, handler)
     print(
         f"[serve] {report.epochs} epochs, cost={report.cost_spent:.4f}s-model, "

@@ -1,0 +1,67 @@
+"""Minimal stand-in for ``hypothesis`` when it isn't installed (offline CI).
+
+Implements exactly the API surface this suite uses — ``given``, ``settings``,
+``strategies.floats`` / ``strategies.integers`` — by running each property
+test on a small fixed grid of deterministic examples (bounds, midpoints, an
+off-center interior point) instead of randomized search.  Far weaker than real
+hypothesis, but it keeps every property checked on representative inputs when
+the dependency cannot be fetched; install ``hypothesis`` (the ``[test]``
+extra) to get full coverage.
+"""
+
+from __future__ import annotations
+
+
+class _Strategy:
+    def __init__(self, examples):
+        self.examples = list(examples)
+
+
+class _Strategies:
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kwargs):
+        lo, hi = float(min_value), float(max_value)
+        span = hi - lo
+        out = [lo, lo + 0.5 * span, hi, lo + span / 3.0]
+        seen, uniq = set(), []
+        for v in out:
+            if v not in seen:
+                seen.add(v)
+                uniq.append(v)
+        return _Strategy(uniq)
+
+    @staticmethod
+    def integers(min_value=0, max_value=100, **_kwargs):
+        lo, hi = int(min_value), int(max_value)
+        out = sorted({lo, (lo + hi) // 2, hi, lo + (hi - lo) // 3})
+        return _Strategy(out)
+
+
+st = strategies = _Strategies()
+
+
+def given(*strats):
+    def deco(fn):
+        # NOTE: no functools.wraps — it would expose the original signature
+        # (via __wrapped__) and pytest would mistake strategy-bound params
+        # for fixtures.  The wrapper must look zero-argument.
+        def wrapper():
+            grids = [s.examples for s in strats]
+            n = max(len(g) for g in grids)
+            for i in range(n):
+                vals = [g[i % len(g)] for g in grids]
+                fn(*vals)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco
+
+
+def settings(**_kwargs):
+    def deco(fn):
+        return fn
+
+    return deco

@@ -12,6 +12,10 @@ from repro.configs.archs import ARCHS, SMOKES, get_config
 from repro.models.model import Model
 from repro.models.transformer import init_model_cache
 
+# full-arch forward/train sweeps take minutes on CPU; excluded from the
+# default CI tier via `-m "not slow"`
+pytestmark = pytest.mark.slow
+
 BATCH, SEQ = 2, 32
 
 

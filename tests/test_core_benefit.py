@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline CI: fixed-example property testing
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import conjunction, Predicate
 from repro.core.benefit import benefit_exact_slow, compute_benefits

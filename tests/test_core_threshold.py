@@ -2,7 +2,10 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline CI: fixed-example property testing
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.threshold import (
     expected_f_curve,

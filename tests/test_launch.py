@@ -82,6 +82,7 @@ def test_spec_never_reuses_mesh_axis():
 
 
 @pytest.mark.parametrize("shape_name", ["train_4k", "prefill_32k", "decode_32k"])
+@pytest.mark.slow
 def test_small_mesh_lower_compile(shape_name):
     """Every step kind lowers+compiles on an 8-device mesh in a subprocess
     (keeps this process single-device)."""
@@ -114,6 +115,7 @@ def test_small_mesh_lower_compile(shape_name):
     assert "ALL_OK" in out.stdout, out.stderr[-3000:]
 
 
+@pytest.mark.slow
 def test_train_loop_descends_and_checkpoints(tmp_path):
     from repro.launch.train import train_loop
 
@@ -137,6 +139,7 @@ def test_train_loop_descends_and_checkpoints(tmp_path):
     assert hist2[0]["step"] == 10
 
 
+@pytest.mark.slow
 def test_serve_driver_end_to_end():
     from repro.launch.serve import build_server, serve_query
 
@@ -152,6 +155,7 @@ def test_serve_driver_end_to_end():
     assert report.true_f1 is not None and report.true_f1 > 0.2
 
 
+@pytest.mark.slow
 def test_serve_early_termination_budget():
     from repro.launch.serve import build_server, serve_query
 

@@ -1,0 +1,263 @@
+"""Multi-query engine: shared-substrate write-once semantics, cross-query
+plan dedup, and vmapped answer selection vs independent operators."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    MultiQueryConfig,
+    MultiQueryEngine,
+    OperatorConfig,
+    Or,
+    Predicate,
+    ProgressiveQueryOperator,
+    build_query_set,
+    compile_query,
+    conjunction,
+    fallback_decision_table,
+)
+from repro.core.combine import default_combine_params, subset_columns as combine_subset
+from repro.core.plan import Plan, merge_plans_dedup
+from repro.core.state import apply_outputs_to_substrate, init_substrate
+from repro.data.synthetic import make_corpus
+from repro.enrich.simulated import SimulatedBank, subset_columns as bank_subset
+
+P_GLOBAL, F, N = 4, 4, 160
+
+
+def _world(seed=0, selectivity=(0.3, 0.4, 0.25, 0.35)):
+    preds = [Predicate(i, 1) for i in range(P_GLOBAL)]
+    corpus = make_corpus(
+        jax.random.PRNGKey(seed), N, [p.tag_type for p in preds],
+        [p.tag for p in preds], selectivity=list(selectivity),
+    )
+    bank = SimulatedBank(outputs=corpus.func_probs, costs=corpus.costs)
+    combine = default_combine_params(corpus.aucs)
+    table = fallback_decision_table(P_GLOBAL, F, corpus.aucs)
+    return preds, corpus, bank, combine, table
+
+
+def _engine(queries, preds, bank, combine, table, **cfg_kw):
+    qset = build_query_set(queries, global_predicates=[p.positive() for p in preds])
+    cfg = MultiQueryConfig(**{"plan_size": 32, **cfg_kw})
+    return MultiQueryEngine(qset, table, combine, bank.costs, bank, cfg)
+
+
+# ----------------------------------------------- shared substrate semantics --
+
+
+def test_substrate_write_once_marks_all_queries():
+    """Executing a triple for query A marks it executed for query B."""
+    preds, corpus, bank, combine, table = _world()
+    qa = conjunction(preds[0], preds[1])
+    qb = conjunction(preds[1], preds[2])
+    eng = _engine([qa, qb], preds, bank, combine, table)
+    state = eng.init_state(N)
+
+    # execute (object 7, predicate 1, function 2) — predicate 1 is shared
+    sub = apply_outputs_to_substrate(
+        state.substrate,
+        jnp.asarray([7]), jnp.asarray([1]), jnp.asarray([2]),
+        jnp.asarray([0.9]), jnp.asarray([0.5]), jnp.asarray([True]),
+    )
+    assert bool(sub.exec_mask[7, 1, 2])
+    # the decision-table key both queries plan from reflects the write
+    assert int(sub.state_id()[7, 1]) == 4  # bit 2 set
+
+    # planning for BOTH queries must see the function as unavailable: the
+    # chosen next function for (7, pred 1) can never be the executed one
+    state = dataclasses.replace(state, substrate=sub)
+    pp, unc, joint = eng._derive(sub)
+    per = dataclasses.replace(
+        state.per_query, pred_prob=pp, uncertainty=unc, joint_prob=joint
+    )
+    state = dataclasses.replace(state, per_query=per)
+    benefits = eng._benefits_batched(state)
+    assert int(benefits.next_fn[0, 7, 1]) != 2
+    assert int(benefits.next_fn[1, 7, 1]) != 2
+
+
+def test_substrate_charges_each_triple_once():
+    """Re-executing an already-executed triple adds no cost."""
+    sub = init_substrate(8, 2, 3)
+    args = (
+        jnp.asarray([3]), jnp.asarray([1]), jnp.asarray([0]),
+        jnp.asarray([0.8]), jnp.asarray([2.5]), jnp.asarray([True]),
+    )
+    sub1 = apply_outputs_to_substrate(sub, *args)
+    assert float(sub1.cost_spent) == pytest.approx(2.5)
+    sub2 = apply_outputs_to_substrate(sub1, *args)
+    assert float(sub2.cost_spent) == pytest.approx(2.5)
+    # invalid lanes never charge or write
+    sub3 = apply_outputs_to_substrate(
+        sub1,
+        jnp.asarray([4]), jnp.asarray([0]), jnp.asarray([1]),
+        jnp.asarray([0.7]), jnp.asarray([9.0]), jnp.asarray([False]),
+    )
+    assert float(sub3.cost_spent) == pytest.approx(2.5)
+    assert not bool(sub3.exec_mask[4, 0, 1])
+
+
+# ------------------------------------------------------- cross-query dedup --
+
+
+def test_merge_plans_dedup_no_duplicates_keeps_max_benefit():
+    def plan(obj, prd, fn, ben, valid):
+        k = len(obj)
+        return Plan(
+            object_idx=jnp.asarray(obj, jnp.int32),
+            pred_idx=jnp.asarray(prd, jnp.int32),
+            func_idx=jnp.asarray(fn, jnp.int32),
+            benefit=jnp.asarray(ben, jnp.float32),
+            cost=jnp.full((k,), 1.0, jnp.float32),
+            valid=jnp.asarray(valid, bool),
+        )
+
+    p0 = plan([5, 3, 9], [0, 1, 0], [2, 2, 1], [5.0, 4.0, 3.0], [1, 1, 1])
+    p1 = plan([5, 3, 7], [0, 1, 1], [2, 2, 0], [7.0, 1.0, 2.0], [1, 1, 0])
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), p0, p1)
+    merged = merge_plans_dedup(stacked, num_predicates=2, num_functions=3)
+
+    keys = [
+        (int(o), int(p), int(f))
+        for o, p, f, v in zip(
+            merged.object_idx, merged.pred_idx, merged.func_idx, merged.valid
+        )
+        if bool(v)
+    ]
+    assert len(keys) == len(set(keys)), "merged plan contains duplicate triples"
+    assert set(keys) == {(5, 0, 2), (3, 1, 2), (9, 0, 1)}
+    # duplicate (5,0,2) kept the max benefit across queries
+    i = keys.index((5, 0, 2))
+    assert float(merged.benefit[i]) == pytest.approx(7.0)
+    # budget masks the cheapest-benefit tail
+    budgeted = merge_plans_dedup(
+        stacked, num_predicates=2, num_functions=3, cost_budget=2.0
+    )
+    assert int(budgeted.num_valid()) == 2
+
+
+def test_duplicate_queries_cost_like_one():
+    """Q identical queries cost ~1x a single query, not Qx."""
+    preds, corpus, bank, combine, table = _world()
+    q = conjunction(preds[0], preds[1])
+
+    eng1 = _engine([q], preds, bank, combine, table)
+    s1, h1 = eng1.run(N, 5)
+
+    eng4 = _engine([q] * 4, preds, bank, combine, table)
+    s4, h4 = eng4.run(N, 5)
+
+    assert float(s4.cost_spent) == pytest.approx(float(s1.cost_spent), rel=1e-5)
+    # every epoch's merged plan matched the single-query volume
+    for a, b in zip(h1, h4):
+        assert b.merged_valid == a.merged_valid
+        # and the dedup accounting shows ~4x requested vs executed
+        assert b.requested_cost == pytest.approx(4 * a.requested_cost, rel=1e-4)
+    # all four tenants got identical answers
+    for i in range(1, 4):
+        np.testing.assert_array_equal(
+            np.asarray(s4.per_query.in_answer[i]),
+            np.asarray(s4.per_query.in_answer[0]),
+        )
+
+
+# ----------------------------------- equivalence to independent operators --
+
+
+@pytest.mark.parametrize("strategy", ["all", "auto"])
+def test_matches_independent_operators_on_disjoint_predicates(strategy):
+    """Vmapped plan/selection == Q stand-alone operators when nothing overlaps."""
+    preds, corpus, bank, combine, table = _world()
+    cols_per_query = [[0, 1], [2, 3]]
+    queries = [conjunction(*[preds[c] for c in cols]) for cols in cols_per_query]
+    epochs = 5
+
+    eng = _engine(
+        queries, preds, bank, combine, table,
+        candidate_strategy=strategy, function_selection="table",
+    )
+    mstate = eng.init_state(N)
+    m_ef = []
+    for _ in range(epochs):
+        mstate, sel, plans, merged, _, _ = eng.run_epoch(mstate)
+        m_ef.append([float(x) for x in sel.expected_f])
+
+    indep_cost = 0.0
+    for qi, cols in enumerate(cols_per_query):
+        local_q = conjunction(*[Predicate(i, 1) for i in range(len(cols))])
+        b = bank_subset(bank, cols)
+        op = ProgressiveQueryOperator(
+            local_q, table.subset(cols), combine_subset(combine, cols),
+            b.costs, b,
+            OperatorConfig(
+                plan_size=32, candidate_strategy=strategy,
+                function_selection="table",
+            ),
+        )
+        st = op.init_state(N)
+        for e in range(epochs):
+            st, sel, plan, _ = op.run_epoch(st)
+            assert float(sel.expected_f) == pytest.approx(m_ef[e][qi], abs=1e-5)
+        np.testing.assert_array_equal(
+            np.asarray(mstate.per_query.in_answer[qi]), np.asarray(st.in_answer)
+        )
+        indep_cost += float(st.cost_spent)
+    assert float(mstate.cost_spent) == pytest.approx(indep_cost, rel=1e-5)
+
+
+# ------------------------------------------------- admission + general ASTs --
+
+
+def test_admission_warm_starts_from_substrate():
+    preds, corpus, bank, combine, table = _world()
+    eng = _engine([conjunction(preds[0], preds[1])], preds, bank, combine, table)
+    state = eng.init_state(N)
+    for _ in range(3):
+        state, *_ = eng.run_epoch(state)
+    spent = float(state.cost_spent)
+
+    state = eng.admit(state, conjunction(preds[1], preds[2]))
+    assert eng.query_set.num_queries == 2
+    assert state.per_query.num_queries == 2
+    assert float(state.cost_spent) == pytest.approx(spent)  # admission is free
+    # the admitted query's derived state reflects prior enrichment of its
+    # shared predicate column: joint != cold prior wherever pred 1 was enriched
+    enriched = np.asarray(state.substrate.exec_mask[:, 1, :].any(axis=-1))
+    assert enriched.any()
+    joint_new = np.asarray(state.per_query.joint_prob[1])
+    assert not np.allclose(joint_new[enriched], 0.25)
+    # and the engine keeps running with Q=2
+    state, sel, plans, merged, _, _ = eng.run_epoch(state)
+    assert sel.mask.shape[0] == 2
+
+    # contract guards: truth-mask symmetry, 'best' needs conjunctive tenants
+    with pytest.raises(ValueError):
+        eng.admit(state, conjunction(preds[3]), truth_mask=jnp.zeros((N,), bool))
+    eng_best = _engine(
+        [conjunction(preds[0])], preds, bank, combine, table,
+        function_selection="best",
+    )
+    st_b = eng_best.init_state(N)
+    with pytest.raises(NotImplementedError):
+        eng_best.admit(st_b, compile_query(Or(preds[0], preds[1])))
+
+
+def test_non_conjunctive_query_set_runs():
+    preds, corpus, bank, combine, table = _world()
+    q_or = compile_query(Or(preds[0], preds[2]))
+    q_and = conjunction(preds[1], preds[3])
+    eng = _engine([q_or, q_and], preds, bank, combine, table)
+    assert not eng.query_set.all_conjunctive
+    state, hist = eng.run(N, 3)
+    assert len(hist) == 3
+    # OR semantics: joint = p0 + p2 - p0 p2 over the global columns
+    pp = state.per_query.pred_prob[0]
+    expect = pp[:, 0] + pp[:, 2] - pp[:, 0] * pp[:, 2]
+    np.testing.assert_allclose(
+        np.asarray(state.per_query.joint_prob[0]), np.asarray(expect), rtol=1e-5
+    )
