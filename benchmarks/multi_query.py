@@ -17,6 +17,9 @@ once instead of once per tenant.
 Reported per Q: total enrichment cost for every query to reach its target
 expected F-alpha — 95% of the query's *converged* (full-execution) E(F),
 which is identical under both serving modes — plus the savings ratio.
+Machine-readable results (epochs/sec, triples/sec, dedup savings) are
+written to ``BENCH_multi_query.json`` so the trajectory is tracked across
+PRs.
 
     PYTHONPATH=src python -m benchmarks.multi_query [--full]
 """
@@ -24,6 +27,7 @@ which is identical under both serving modes — plus the savings ratio.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -133,18 +137,30 @@ def run_shared(queries, preds, bank, combine, table, pre, n, targets, epochs, pl
     )
     state = engine.warm_start(engine.init_state(n), *pre)
     costs, fs, walls = [], [], []
+    triples = 0
+    requested = 0.0
     for _ in range(epochs):
         t0 = time.perf_counter()
         state, sel, plans, merged, _, _ = engine.run_epoch(state)
         walls.append(time.perf_counter() - t0)
         costs.append(float(state.cost_spent))
         fs.append([float(x) for x in sel.expected_f])
+        triples += int(merged.num_valid())
+        requested += float(jnp.sum(jnp.where(plans.valid, plans.cost, 0.0)))
         if int(merged.num_valid()) == 0:
             break
         if all(f >= t for f, t in zip(fs[-1], targets)):
             break
     cost, reached = _cost_to_targets(costs, fs, targets)
-    return cost, reached, float(np.mean(walls) * 1e6)
+    stats = dict(
+        epochs=len(walls),
+        epochs_per_sec=len(walls) / max(sum(walls), 1e-9),
+        triples_per_sec=triples / max(sum(walls), 1e-9),
+        executed_triples=triples,
+        requested_cost=requested,
+        dedup_savings_cost=requested - float(state.cost_spent),
+    )
+    return cost, reached, float(np.mean(walls) * 1e6), stats
 
 
 def run_independent(queries, bank, combine, table, pre, n, targets, epochs, plan_size):
@@ -181,7 +197,7 @@ def run_independent(queries, bank, combine, table, pre, n, targets, epochs, plan
     return total, reached_all
 
 
-def bench_multi_query(small: bool = True):
+def bench_multi_query(small: bool = True, out_path: str = "BENCH_multi_query.json"):
     n = 256 if small else 1024
     qs = (1, 4, 16) if small else (1, 4, 16, 64)
     epochs = 40 if small else 120
@@ -190,10 +206,11 @@ def bench_multi_query(small: bool = True):
     preds, evalc, bank, combine, table, pre = _build_global(n, num_preds)
 
     rows = []
+    json_rows = []
     for q in qs:
         queries = _sample_queries(preds, q, preds_per_query=2)
         targets = _converged_targets(queries, bank, combine, table)
-        shared_cost, shared_ok, epoch_us = run_shared(
+        shared_cost, shared_ok, epoch_us, stats = run_shared(
             queries, preds, bank, combine, table, pre, n, targets, epochs, plan_size
         )
         indep_cost, indep_ok = run_independent(
@@ -212,6 +229,27 @@ def bench_multi_query(small: bool = True):
                 ),
             )
         )
+        json_rows.append(
+            dict(
+                num_queries=q,
+                shared_cost=shared_cost,
+                indep_cost=indep_cost,
+                savings_ratio=ratio,
+                target_reached=bool(shared_ok and indep_ok),
+                **stats,
+            )
+        )
+    payload = dict(
+        benchmark="multi_query_dedup",
+        config=dict(
+            num_objects=n, epochs_cap=epochs, plan_size=plan_size,
+            num_preds=num_preds, small=small,
+        ),
+        rows=json_rows,
+    )
+    with open(out_path, "w") as fh:
+        json.dump(payload, fh, indent=1, sort_keys=True)
+        fh.write("\n")
     return rows
 
 

@@ -19,9 +19,12 @@ def main(argv=None) -> int:
     small = not args.full
 
     from benchmarks import paper_figures as pf
+    from benchmarks.epoch_superstep import bench_epoch_superstep
     from benchmarks.multi_query import bench_multi_query
     from benchmarks.roofline import bench_roofline
 
+    # "multiq" and "epoch" additionally write machine-readable JSON
+    # (BENCH_multi_query.json / BENCH_epoch.json) for cross-PR tracking.
     benches = [
         ("table1", pf.bench_table1),
         ("fig2", pf.bench_fig2_gain),
@@ -33,6 +36,7 @@ def main(argv=None) -> int:
         ("fig11", pf.bench_fig11_caching),
         ("kernel", pf.bench_kernel_enrich),
         ("multiq", bench_multi_query),
+        ("epoch", bench_epoch_superstep),
         ("roofline", bench_roofline),
     ]
 

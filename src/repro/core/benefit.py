@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from repro.core import entropy as entropy_lib
 from repro.core import threshold as threshold_lib
 from repro.core.decision_table import DecisionTable
-from repro.core.query import CompiledQuery
+from repro.core.query import CompiledQuery, conjunctive_joint_update
 from repro.core.state import EnrichmentState
 
 NEG_INF = -jnp.inf
@@ -146,6 +146,80 @@ def compute_benefits(
     valid = valid & candidate_mask[:, None]
     benefit = jnp.where(valid, benefit, NEG_INF)
     return TripleBenefits(benefit=benefit, next_fn=nf, est_joint=est_joint, cost=cost)
+
+
+def compute_benefits_batched(
+    pred_prob: jax.Array,  # [N, P] shared predicate probabilities
+    uncertainty: jax.Array,  # [N, P] shared binary entropy of pred_prob
+    state_id: jax.Array,  # [N, P] int32 shared decision-table key
+    joint_prob: jax.Array,  # [Q, N] per-query joint probabilities
+    table: DecisionTable,
+    costs: jax.Array,  # [P, F]
+    function_selection: str = "table",  # "table" | "best"
+) -> TripleBenefits:
+    """Multi-query Eq. 11 over a shared substrate: [Q, N, P] leaves.
+
+    The conjunctive fast path of the multi-query engine.  Everything keyed on
+    the substrate alone — table lookup, p_hat inversion, per-function costs —
+    is computed ONCE at [N, P(, F)] and broadcast onto the Q axis; only the
+    joint-probability update is per-query.  This is the jnp oracle the
+    batched Pallas kernel (``repro.kernels.enrich_score``) is checked
+    against; the kernel additionally fuses the ``"best"``-mode argmax over F
+    so the [Q, N, P, F] intermediate below never reaches HBM.
+
+    Validity/candidate masking (pred_mask, §4.1 restriction) is the caller's
+    job: returned benefits are unmasked except for exhausted triples.
+    """
+    n, p = pred_prob.shape
+    q = joint_prob.shape[0]
+    pred_idx = jnp.broadcast_to(jnp.arange(p, dtype=jnp.int32)[None, :], (n, p))
+
+    if function_selection == "best":
+        assert table.delta_h_all is not None, "table learned without delta_h_all"
+        dh_all = table.lookup_all(pred_idx, state_id, uncertainty)  # [N, P, F]
+        _, p_hat_all = estimate_pred_prob_after(
+            pred_prob[..., None], jnp.where(jnp.isfinite(dh_all), dh_all, 0.0)
+        )
+        cost = jnp.maximum(jnp.broadcast_to(costs[None], dh_all.shape), 1e-9)
+        est_all = jnp.clip(
+            conjunctive_joint_update(
+                joint_prob[:, :, None, None],
+                pred_prob[None, :, :, None],
+                p_hat_all[None],
+            ),
+            0.0,
+            1.0,
+        )  # [Q, N, P, F]
+        ben_all = joint_prob[:, :, None, None] * est_all / cost[None]
+        ben_all = jnp.where(jnp.isfinite(dh_all)[None], ben_all, NEG_INF)
+        nf = jnp.argmax(ben_all, axis=-1).astype(jnp.int32)  # [Q, N, P]
+        benefit = jnp.max(ben_all, axis=-1)
+        est_joint = jnp.take_along_axis(est_all, nf[..., None], axis=-1)[..., 0]
+        cost_q = jnp.take_along_axis(
+            jnp.broadcast_to(cost[None], est_all.shape), nf[..., None], axis=-1
+        )[..., 0]
+        nf = jnp.where(jnp.isfinite(benefit), nf, -1)
+        return TripleBenefits(
+            benefit=benefit, next_fn=nf, est_joint=est_joint, cost=cost_q
+        )
+
+    nf, dh = table.lookup(pred_idx, state_id, uncertainty)  # [N, P] each
+    _, p_hat = estimate_pred_prob_after(pred_prob, dh)
+    est_joint = jnp.clip(
+        conjunctive_joint_update(
+            joint_prob[:, :, None], pred_prob[None], p_hat[None]
+        ),
+        0.0,
+        1.0,
+    )  # [Q, N, P]
+    cost = jnp.maximum(costs[pred_idx, jnp.maximum(nf, 0)], 1e-9)  # [N, P]
+    benefit = joint_prob[:, :, None] * est_joint / cost[None]
+    return TripleBenefits(
+        benefit=benefit,
+        next_fn=jnp.broadcast_to(nf[None], (q, n, p)),
+        est_joint=est_joint,
+        cost=jnp.broadcast_to(cost[None], (q, n, p)),
+    )
 
 
 def benefit_exact_slow(

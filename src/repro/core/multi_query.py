@@ -32,7 +32,9 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import benefit as benefit_lib
 from repro.core import operator as operator_lib
 from repro.core import plan as plan_lib
 from repro.core import query as query_lib
@@ -60,6 +62,13 @@ class QuerySet:
     predicate probabilities to ``[Q, ...]`` joint probabilities — a closed-form
     masked product when every query is conjunctive (the paper's Q1-Q5 shape),
     an unrolled per-query evaluation otherwise.
+
+    ``unique_rows`` / ``unique_index`` group tenants whose reindexed query is
+    IDENTICAL (multi-tenant traffic concentrates on hot queries, so U <<< Q
+    at scale): derived per-query compute whose inputs are query + substrate
+    only — Theorem-1 answer selection, candidate restriction — runs once per
+    distinct query at [U, ...] and fans out by gather, bitwise identical to
+    the Q-fold computation.
     """
 
     queries: tuple  # tuple[CompiledQuery] — original, local predicate spaces
@@ -67,6 +76,8 @@ class QuerySet:
     global_predicates: tuple  # tuple[Predicate]
     pred_mask: jax.Array  # [Q, P] bool
     all_conjunctive: bool
+    unique_rows: jax.Array  # [U] int32: first tenant row of each distinct query
+    unique_index: jax.Array  # [Q] int32: tenant row -> distinct-query group
 
     @property
     def num_queries(self) -> int:
@@ -75,6 +86,10 @@ class QuerySet:
     @property
     def num_predicates(self) -> int:
         return len(self.global_predicates)
+
+    @property
+    def num_unique(self) -> int:
+        return self.unique_rows.shape[0]
 
     def evaluate_batched(self, pred_prob: jax.Array) -> jax.Array:
         """[Q, ..., P] predicate probabilities -> [Q, ...] joint probabilities."""
@@ -116,12 +131,24 @@ def build_query_set(
     for i, q in enumerate(queries):
         cols = jnp.asarray([index[pred] for pred in q.predicates], jnp.int32)
         mask = mask.at[i, cols].set(True)
+    # group tenants by reindexed AST (frozen dataclasses: hashable, by-value)
+    groups: dict = {}
+    unique_rows: list = []
+    unique_index: list = []
+    for i, rq in enumerate(reindexed):
+        g = groups.get(rq.ast)
+        if g is None:
+            g = groups[rq.ast] = len(unique_rows)
+            unique_rows.append(i)
+        unique_index.append(g)
     return QuerySet(
         queries=queries,
         reindexed=reindexed,
         global_predicates=global_predicates,
         pred_mask=mask,
         all_conjunctive=all(q.is_conjunctive for q in queries),
+        unique_rows=jnp.asarray(unique_rows, jnp.int32),
+        unique_index=jnp.asarray(unique_index, jnp.int32),
     )
 
 
@@ -153,6 +180,13 @@ class MultiQueryConfig:
     candidate_strategy: str = "auto"  # "outside_answer" | "all" | "auto"
     function_selection: str = "table"  # "table" (paper) | "best" (beyond-paper)
     prior: float = 0.5
+    backend: str = "jnp"  # "jnp" | "pallas" (fused batched scoring kernel)
+    pallas_interpret: Optional[bool] = None  # None: interpret iff CPU
+    # >1: plan selection runs hierarchically over this many object shards
+    # (per-shard top-k + exact cross-shard merge), byte-identical to the
+    # unsharded path; the emulated-shard program is what each ("pod", "data")
+    # mesh device runs under shard_map at pod scale.
+    num_shards: int = 1
 
 
 @dataclasses.dataclass
@@ -166,7 +200,8 @@ class MultiEpochStats:
     true_f: Optional[list]  # [Q] against ground truth, when available
     plan_valid: list  # [Q] valid triples each query requested
     merged_valid: int  # unique triples actually executed
-    wall_time_s: float
+    wall_time_s: float  # scan driver: total wall / epochs (amortized)
+    answer_mask: Optional[np.ndarray] = None  # [Q, N] when collect_masks
 
     @property
     def dedup_savings(self) -> float:
@@ -198,6 +233,14 @@ class MultiQueryEngine:
             raise NotImplementedError(
                 "function_selection='best' requires an all-conjunctive query set"
             )
+        if config.backend == "pallas" and not query_set.all_conjunctive:
+            raise NotImplementedError(
+                "backend='pallas' covers the conjunctive fast path only"
+            )
+        if config.backend not in ("jnp", "pallas"):
+            raise ValueError(f"unknown backend: {config.backend!r}")
+        if config.num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
         self.query_set = query_set
         self.table = table
         self.combine_params = combine_params
@@ -207,6 +250,7 @@ class MultiQueryEngine:
         self.truth_masks = truth_masks
         self._plan_fn = jax.jit(self._plan_epoch)
         self._update_fn = jax.jit(self._apply_and_select)
+        self._scan_cache: dict = {}
 
     # ---- derived-state maintenance -----------------------------------------
 
@@ -230,15 +274,29 @@ class MultiQueryEngine:
         return pp_q, unc_q, joint
 
     def _select_answers(self, joint_prob: jax.Array) -> threshold_lib.AnswerSelection:
+        """Theorem-1 selection per DISTINCT query, fanned out to tenants.
+
+        Selection depends only on the query's joint probabilities, which are
+        identical for duplicate tenants, so the per-query sort (the epoch's
+        costliest reduction) runs U times, not Q times — bitwise identical to
+        the Q-fold vmap by construction.
+        """
         if self.config.answer_mode == "approx":
             fn = functools.partial(
                 threshold_lib.select_answer_approx, alpha=self.config.alpha
             )
         else:
             fn = functools.partial(threshold_lib.select_answer, alpha=self.config.alpha)
-        return jax.vmap(fn)(joint_prob)
+        qs = self.query_set
+        sel_u = jax.vmap(fn)(joint_prob[qs.unique_rows])
+        return jax.tree.map(lambda x: x[qs.unique_index], sel_u)
 
     def init_state(self, num_objects: int) -> MultiQueryState:
+        if self.config.num_shards > 1 and num_objects % self.config.num_shards:
+            raise ValueError(
+                f"num_objects={num_objects} must divide evenly over "
+                f"num_shards={self.config.num_shards}"
+            )
         sub = state_lib.init_substrate(
             num_objects,
             self.query_set.num_predicates,
@@ -290,9 +348,13 @@ class MultiQueryEngine:
         enrichment earlier tenants paid for.  Q grows by one, which re-traces
         the jitted stages at the new shape.
         """
-        if self.config.function_selection == "best" and not query.is_conjunctive:
+        if (
+            self.config.function_selection == "best"
+            or self.config.backend == "pallas"
+        ) and not query.is_conjunctive:
             raise NotImplementedError(
-                "function_selection='best' requires an all-conjunctive query set"
+                "function_selection='best' / backend='pallas' require an "
+                "all-conjunctive query set"
             )
         if (self.truth_masks is not None) != (truth_mask is not None):
             raise ValueError(
@@ -327,6 +389,7 @@ class MultiQueryEngine:
             self.truth_masks = jnp.concatenate([self.truth_masks, truth_mask[None]])
         self._plan_fn = jax.jit(self._plan_epoch)
         self._update_fn = jax.jit(self._apply_and_select)
+        self._scan_cache.clear()  # Q (and truth_masks) changed shape
         return MultiQueryState(substrate=sub, per_query=new_per)
 
     # ---- jitted stages ------------------------------------------------------
@@ -339,64 +402,65 @@ class MultiQueryEngine:
         semantics surfacing in planning).  Columns outside a query's
         ``pred_mask`` earn -inf so no tenant pays for predicates it never
         asked about.
+
+        Conjunctive query sets route through the shared-substrate fast path
+        (``benefit.compute_benefits_batched`` or the fused Pallas kernel per
+        ``config.backend``): substrate-keyed quantities are computed once at
+        [N, P] and only the joint update carries the Q axis.  ``pred_prob`` /
+        ``uncertainty`` are query-independent under shared combine params
+        (see ``PerQueryState``), so row 0 stands in for every query.
         """
         cfg = self.config
         sub = state.substrate
         per = state.per_query
         n, p = sub.num_objects, sub.num_predicates
         state_id = sub.state_id()  # [N, P] shared
-        pred_idx = jnp.broadcast_to(jnp.arange(p, dtype=jnp.int32)[None], (n, p))
         pred_mask = self.query_set.pred_mask  # [Q, P]
 
-        if cfg.function_selection == "best" and self.table.delta_h_all is not None:
-            # all-conjunctive only (checked in __init__): price every
-            # remaining function with the O(1) conjunctive joint update.
-            dh_all = self.table.lookup_all(pred_idx, state_id, per.uncertainty)
-            # index arrays broadcast: [N,P] x [Q,N,P] -> [Q,N,P,F]
-            _, p_hat_all = estimate_pred_prob_after(
-                per.pred_prob[..., None],
-                jnp.where(jnp.isfinite(dh_all), dh_all, 0.0),
+        if self.query_set.all_conjunctive:
+            mode = (
+                "best"
+                if cfg.function_selection == "best"
+                and self.table.delta_h_all is not None
+                else "table"
             )
-            cost = jnp.maximum(jnp.broadcast_to(self.costs, dh_all.shape[1:]), 1e-9)
-            cost = jnp.broadcast_to(cost[None], dh_all.shape)
-            est_joint_all = jnp.clip(
-                self.query_set.reindexed[0].conjunctive_update(
-                    per.joint_prob[:, :, None, None],
-                    per.pred_prob[..., None],
-                    p_hat_all,
-                ),
-                0.0,
-                1.0,
-            )
-            ben_all = per.joint_prob[:, :, None, None] * est_joint_all / cost
-            ben_all = jnp.where(jnp.isfinite(dh_all), ben_all, NEG_INF)
-            nf = jnp.argmax(ben_all, axis=-1).astype(jnp.int32)  # [Q, N, P]
-            benefit = jnp.max(ben_all, axis=-1)
-            est_joint = jnp.take_along_axis(est_joint_all, nf[..., None], -1)[..., 0]
-            cost = jnp.take_along_axis(cost, nf[..., None], -1)[..., 0]
-            nf = jnp.where(jnp.isfinite(benefit), nf, -1)
-        else:
-            nf, dh = self.table.lookup(pred_idx, state_id, per.uncertainty)  # [Q,N,P]
-            _, p_hat = estimate_pred_prob_after(per.pred_prob, dh)
-            if self.query_set.all_conjunctive:
-                est_joint = self.query_set.reindexed[0].conjunctive_update(
-                    per.joint_prob[..., None], per.pred_prob, p_hat
+            if cfg.backend == "pallas":
+                from repro.kernels.enrich_score import ops as es_ops
+
+                tb = es_ops.fused_benefits_batched(
+                    per.pred_prob[0], per.uncertainty[0], state_id,
+                    per.joint_prob, self.table, self.costs,
+                    function_selection=mode,
+                    interpret=cfg.pallas_interpret,
                 )
             else:
-                est_joint = jnp.stack(
-                    [
-                        jnp.stack(
-                            [
-                                rq.evaluate_with_column(
-                                    per.pred_prob[i], c, p_hat[i, :, c]
-                                )
-                                for c in range(p)
-                            ],
-                            axis=-1,
-                        )
-                        for i, rq in enumerate(self.query_set.reindexed)
-                    ]
+                tb = benefit_lib.compute_benefits_batched(
+                    per.pred_prob[0], per.uncertainty[0], state_id,
+                    per.joint_prob, self.table, self.costs,
+                    function_selection=mode,
                 )
+            benefit, nf, est_joint, cost = tb
+        else:
+            # General ASTs: per-query column-substitution re-evaluation.
+            pred_idx = jnp.broadcast_to(
+                jnp.arange(p, dtype=jnp.int32)[None], (n, p)
+            )
+            nf, dh = self.table.lookup(pred_idx, state_id, per.uncertainty)
+            _, p_hat = estimate_pred_prob_after(per.pred_prob, dh)
+            est_joint = jnp.stack(
+                [
+                    jnp.stack(
+                        [
+                            rq.evaluate_with_column(
+                                per.pred_prob[i], c, p_hat[i, :, c]
+                            )
+                            for c in range(p)
+                        ],
+                        axis=-1,
+                    )
+                    for i, rq in enumerate(self.query_set.reindexed)
+                ]
+            )
             est_joint = jnp.clip(est_joint, 0.0, 1.0)
             fn_safe = jnp.maximum(nf, 0)
             cost = jnp.maximum(self.costs[pred_idx, fn_safe], 1e-9)  # [Q, N, P]
@@ -405,29 +469,71 @@ class MultiQueryEngine:
         valid = (nf >= 0) & pred_mask[:, None, :]
         benefit = jnp.where(valid, benefit, NEG_INF)
 
-        cand = jax.vmap(
+        # Candidate restriction per DISTINCT query (its inputs — uncertainty,
+        # answer membership, pred_mask — are identical for duplicate tenants),
+        # fanned back out by gather; kills the per-tenant median sorts of the
+        # "auto" strategy under hot-query traffic.
+        ui, inv = self.query_set.unique_rows, self.query_set.unique_index
+        cand_u = jax.vmap(
             lambda u, a, m: operator_lib.candidate_mask(
                 u, a, cfg.candidate_strategy, pred_mask=m
             )
-        )(per.uncertainty, per.in_answer, pred_mask)  # [Q, N]
+        )(per.uncertainty[ui], per.in_answer[ui], pred_mask[ui])  # [U, N]
+        cand = cand_u[inv]  # [Q, N]
         benefit = jax.vmap(
             lambda b, c: operator_lib.restrict_benefits(b, c, cfg.plan_size)
         )(benefit, cand)
         return TripleBenefits(benefit=benefit, next_fn=nf, est_joint=est_joint, cost=cost)
 
+    def _select_plans(self, benefits: TripleBenefits) -> plan_lib.Plan:
+        """Per-query plan selection, optionally sharded over the object axis.
+
+        With ``num_shards=S``: every shard top-ks its own [N/S, P] slice (the
+        per-device program under a ("pod", "data") shard_map — emulated here
+        with a reshape + vmap, which lowers to the identical local compute),
+        then the survivors reduce through the EXACT cross-shard merge, so the
+        result is byte-identical to the unsharded top-k on every valid lane.
+        """
+        cfg = self.config
+        sel = functools.partial(plan_lib.select_plan, plan_size=cfg.plan_size)
+        if cfg.num_shards <= 1:
+            return jax.vmap(sel)(benefits)
+        s = cfg.num_shards
+        q, n, p = benefits.benefit.shape
+        per_shard = n // s
+
+        def reshard(x):  # [Q, N, P] -> [S, Q, N/S, P]
+            return x.reshape(q, s, per_shard, p).transpose(1, 0, 2, 3)
+
+        local = TripleBenefits(*(reshard(x) for x in benefits))
+        local_plans = jax.vmap(jax.vmap(sel))(local)  # [S, Q, K]
+        offsets = (jnp.arange(s, dtype=jnp.int32) * per_shard)[:, None, None]
+        local_plans = local_plans._replace(
+            object_idx=local_plans.object_idx + offsets
+        )
+        by_query = jax.tree.map(
+            lambda x: x.transpose(1, 0, 2), local_plans
+        )  # [Q, S, K]
+        return jax.vmap(
+            functools.partial(
+                plan_lib.merge_sharded_plans_exact,
+                plan_size=cfg.plan_size,
+                num_predicates=self.query_set.num_predicates,
+            )
+        )(by_query)
+
     def _plan_epoch(self, state: MultiQueryState) -> tuple[plan_lib.Plan, plan_lib.Plan]:
         """-> (per-query plans [Q, K], merged deduplicated plan [M])."""
         cfg = self.config
         benefits = self._benefits_batched(state)
-        plans = jax.vmap(
-            functools.partial(plan_lib.select_plan, plan_size=cfg.plan_size)
-        )(benefits)
+        plans = self._select_plans(benefits)
         merged = plan_lib.merge_plans_dedup(
             plans,
             self.query_set.num_predicates,
             self.costs.shape[1],
             capacity=cfg.merged_capacity,
             cost_budget=cfg.epoch_cost_budget,
+            num_objects=state.substrate.num_objects,
         )
         return plans, merged
 
@@ -453,6 +559,118 @@ class MultiQueryEngine:
         )
         return MultiQueryState(substrate=sub, per_query=per), sel
 
+    # ---- fused scan superstep ----------------------------------------------
+
+    def _superstep(self, state: MultiQueryState, collect_masks: bool):
+        """One plan -> execute -> apply epoch as a pure scan body.
+
+        Only valid when ``bank.execute`` is traceable (``supports_scan``,
+        e.g. the simulated bank's gather); the model-cascade bank batches at
+        the Python level and stays on the loop driver.
+        """
+        plans, merged = self._plan_epoch(state)
+        outputs = self.bank.execute(merged)
+        prev_cost = state.substrate.cost_spent
+        new_state, sel = self._apply_and_select(state, merged, outputs)
+        stats = dict(
+            cost_spent=new_state.substrate.cost_spent,
+            epoch_cost=new_state.substrate.cost_spent - prev_cost,
+            requested_cost=jnp.sum(jnp.where(plans.valid, plans.cost, 0.0)),
+            expected_f=sel.expected_f,
+            answer_size=sel.size,
+            plan_valid=jnp.sum(plans.valid, axis=1),
+            merged_valid=merged.num_valid(),
+        )
+        if self.truth_masks is not None:
+            stats["true_f"] = jax.vmap(
+                lambda m, t: true_f_alpha(m, t, self.config.alpha)
+            )(sel.mask, self.truth_masks)
+        if collect_masks:
+            stats["answer_mask"] = sel.mask
+        return new_state, stats
+
+    def _get_scan_fn(self, num_epochs: int, collect_masks: bool, donate: bool):
+        """Jitted scan over epochs, with optional buffer donation.
+
+        Donating the ``MultiQueryState`` argument lets XLA update the
+        substrate (the [N, P, F] tensors that dominate memory) in place
+        across the whole run instead of holding the pre-run copy alive.
+        Only states the driver created itself are donated: a caller-passed
+        state must stay readable after the run (loop-driver contract), and
+        CPU does not implement donation at all.
+        """
+        key = (num_epochs, collect_masks, donate)
+        if key not in self._scan_cache:
+
+            def run_fn(state):
+                return jax.lax.scan(
+                    lambda s, _: self._superstep(s, collect_masks),
+                    state,
+                    None,
+                    length=num_epochs,
+                )
+
+            argnums = (0,) if donate else ()
+            self._scan_cache[key] = jax.jit(run_fn, donate_argnums=argnums)
+        return self._scan_cache[key]
+
+    def run_scan(
+        self,
+        num_objects: int,
+        num_epochs: int,
+        state: Optional[MultiQueryState] = None,
+        stop_when_exhausted: bool = True,
+        collect_masks: bool = False,
+    ) -> tuple[MultiQueryState, list]:
+        """Run ``num_epochs`` epochs as ONE device dispatch (jitted lax.scan).
+
+        Eliminates the per-epoch dispatch + host-sync overhead of the loop
+        driver: per-epoch stats are accumulated on-device and crossed to the
+        host once at the end.  The scan has static length — epochs after
+        exhaustion are no-ops (nothing left to plan, nothing charged) and
+        their stats are trimmed to match the loop driver's early break.
+        Per-epoch ``wall_time_s`` is the amortized total (the scan has no
+        per-epoch host clock by construction).
+        """
+        donate = state is None and jax.default_backend() != "cpu"
+        if state is None:
+            state = self.init_state(num_objects)
+        fn = self._get_scan_fn(num_epochs, collect_masks, donate)
+        t0 = time.perf_counter()
+        state, stats = fn(state)
+        stats = jax.device_get(stats)  # the run's single host sync
+        state = jax.block_until_ready(state)
+        wall = time.perf_counter() - t0
+        history: list[MultiEpochStats] = []
+        for e in range(num_epochs):
+            merged_valid = int(stats["merged_valid"][e])
+            history.append(
+                MultiEpochStats(
+                    epoch=e,
+                    cost_spent=float(stats["cost_spent"][e]),
+                    epoch_cost=float(stats["epoch_cost"][e]),
+                    requested_cost=float(stats["requested_cost"][e]),
+                    expected_f=[float(x) for x in stats["expected_f"][e]],
+                    answer_size=[int(x) for x in stats["answer_size"][e]],
+                    true_f=(
+                        [float(x) for x in stats["true_f"][e]]
+                        if "true_f" in stats
+                        else None
+                    ),
+                    plan_valid=[int(x) for x in stats["plan_valid"][e]],
+                    merged_valid=merged_valid,
+                    wall_time_s=wall / num_epochs,
+                    answer_mask=(
+                        np.asarray(stats["answer_mask"][e])
+                        if collect_masks
+                        else None
+                    ),
+                )
+            )
+            if stop_when_exhausted and merged_valid == 0:
+                break
+        return state, history
+
     # ---- public driver ------------------------------------------------------
 
     def run_epoch(self, state: MultiQueryState):
@@ -470,7 +688,24 @@ class MultiQueryEngine:
         num_epochs: int,
         state: Optional[MultiQueryState] = None,
         stop_when_exhausted: bool = True,
+        driver: str = "auto",  # "auto" | "scan" | "loop"
     ) -> tuple[MultiQueryState, list]:
+        """Progressive evaluation for ``num_epochs`` epochs.
+
+        ``driver="auto"`` picks the fused scan superstep whenever the bank's
+        ``execute`` is traceable (``supports_scan``, the simulated bank) and
+        falls back to the per-epoch Python loop otherwise (the model-cascade
+        bank, which batches real model inference outside jit).
+        """
+        if driver == "auto":
+            driver = "scan" if getattr(self.bank, "supports_scan", False) else "loop"
+        if driver == "scan":
+            return self.run_scan(
+                num_objects, num_epochs, state=state,
+                stop_when_exhausted=stop_when_exhausted,
+            )
+        if driver != "loop":
+            raise ValueError(f"unknown driver: {driver!r}")
         if state is None:
             state = self.init_state(num_objects)
         history: list[MultiEpochStats] = []

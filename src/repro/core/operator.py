@@ -134,6 +134,7 @@ class ProgressiveQueryOperator:
         self._benefit_fn = benefit_fn
         self._plan_fn = jax.jit(self._plan_epoch)
         self._update_fn = jax.jit(self._apply_and_select)
+        self._scan_cache: dict = {}
 
     # ---- jitted stages ------------------------------------------------------
 
@@ -214,13 +215,99 @@ class ProgressiveQueryOperator:
         wall = time.perf_counter() - t0
         return state, sel, plan, wall
 
-    def run(
+    # ---- fused scan superstep ----------------------------------------------
+
+    def _superstep(self, state: state_lib.EnrichmentState, _):
+        """One plan -> execute -> apply epoch as a pure scan body (simulated
+        bank only: ``execute`` must be traceable)."""
+        plan = self._plan_epoch(state)
+        outputs = self.bank.execute(plan)
+        new_state, sel = self._apply_and_select(state, plan, outputs)
+        stats = dict(
+            cost_spent=new_state.cost_spent,
+            expected_f=sel.expected_f,
+            answer_size=sel.size,
+            plan_cost=plan.total_cost(),
+            plan_valid=plan.num_valid(),
+        )
+        if self.truth_mask is not None:
+            stats["true_f1"] = true_f_alpha(
+                sel.mask, self.truth_mask, self.config.alpha
+            )
+        return new_state, stats
+
+    def _get_scan_fn(self, num_epochs: int, donate: bool):
+        # Donation lets XLA update the [N, P, F] state in place over the whole
+        # run; only driver-created states are donated — a caller-passed state
+        # must stay readable after the run — and CPU has no donation at all.
+        key = (num_epochs, donate)
+        if key not in self._scan_cache:
+
+            def run_fn(state):
+                return jax.lax.scan(self._superstep, state, None, length=num_epochs)
+
+            argnums = (0,) if donate else ()
+            self._scan_cache[key] = jax.jit(run_fn, donate_argnums=argnums)
+        return self._scan_cache[key]
+
+    def run_scan(
         self,
         num_objects: int,
         num_epochs: int,
         state: Optional[state_lib.EnrichmentState] = None,
         stop_when_exhausted: bool = True,
     ) -> tuple[state_lib.EnrichmentState, list[EpochStats]]:
+        """All epochs in ONE device dispatch (jitted lax.scan; no per-epoch
+        host syncs).  Post-exhaustion epochs are no-ops and are trimmed from
+        the history to match the loop driver's early break; ``wall_time_s``
+        is the amortized total."""
+        donate = state is None and jax.default_backend() != "cpu"
+        if state is None:
+            state = self.init_state(num_objects)
+        fn = self._get_scan_fn(num_epochs, donate)
+        t0 = time.perf_counter()
+        state, stats = fn(state)
+        stats = jax.device_get(stats)  # the run's single host sync
+        state = jax.block_until_ready(state)
+        wall = time.perf_counter() - t0
+        history: list[EpochStats] = []
+        for e in range(num_epochs):
+            n_valid = int(stats["plan_valid"][e])
+            history.append(
+                EpochStats(
+                    epoch=e,
+                    cost_spent=float(stats["cost_spent"][e]),
+                    expected_f=float(stats["expected_f"][e]),
+                    answer_size=int(stats["answer_size"][e]),
+                    true_f1=(
+                        float(stats["true_f1"][e]) if "true_f1" in stats else None
+                    ),
+                    plan_cost=float(stats["plan_cost"][e]),
+                    plan_valid=n_valid,
+                    wall_time_s=wall / num_epochs,
+                )
+            )
+            if stop_when_exhausted and n_valid == 0:
+                break
+        return state, history
+
+    def run(
+        self,
+        num_objects: int,
+        num_epochs: int,
+        state: Optional[state_lib.EnrichmentState] = None,
+        stop_when_exhausted: bool = True,
+        driver: str = "auto",  # "auto" | "scan" | "loop"
+    ) -> tuple[state_lib.EnrichmentState, list[EpochStats]]:
+        if driver == "auto":
+            driver = "scan" if getattr(self.bank, "supports_scan", False) else "loop"
+        if driver == "scan":
+            return self.run_scan(
+                num_objects, num_epochs, state=state,
+                stop_when_exhausted=stop_when_exhausted,
+            )
+        if driver != "loop":
+            raise ValueError(f"unknown driver: {driver!r}")
         if state is None:
             state = self.init_state(num_objects)
         history: list[EpochStats] = []

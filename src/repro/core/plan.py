@@ -8,11 +8,17 @@ shape-stable under jit.
 Sharded operation (objects split over ("pod", "data")) uses hierarchical
 selection: each shard takes its local top-k, the (k x shards) survivors are
 all-gathered and reduced to the global top-k.  Exactness: benefit selection is
-a global top-k, and the max over shards of per-shard top-k covers it.
+a global top-k, and the max over shards of per-shard top-k covers it.  The
+exact variants below additionally reproduce the UNSHARDED tie-breaking order
+(benefit descending, then ascending global flat index / triple key), so the
+sharded planning path is byte-identical to the single-device path on every
+valid lane — ``canonicalize_plan`` masks the don't-care invalid lanes so the
+identity is testable with ``np.array_equal``.
 """
 
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -42,6 +48,29 @@ class Plan(NamedTuple):
         return jnp.sum(jnp.where(self.valid, self.cost, 0.0))
 
 
+def canonicalize_plan(plan: Plan) -> Plan:
+    """Mask don't-care invalid lanes to fixed sentinels.
+
+    Invalid lanes carry whatever the selection machinery left behind (top-k
+    fill, shard-local leftovers); execution never reads them.  Canonical form
+    makes plans from different-but-equivalent selection paths (sharded vs
+    unsharded, scan vs loop) comparable with ``np.array_equal``.
+    """
+    v = plan.valid
+
+    def mask_i(x):
+        return jnp.where(v, x, jnp.int32(-1))
+
+    return Plan(
+        object_idx=mask_i(plan.object_idx),
+        pred_idx=mask_i(plan.pred_idx),
+        func_idx=mask_i(plan.func_idx),
+        benefit=jnp.where(v, plan.benefit, -jnp.inf),
+        cost=jnp.where(v, plan.cost, 0.0),
+        valid=v,
+    )
+
+
 def select_plan(
     benefits: TripleBenefits,
     plan_size: int,
@@ -51,7 +80,9 @@ def select_plan(
 
     One triple per (object, predicate) pair exists (the decision table already
     picked the function), so the flattened matrix IS the candidate triple set
-    Triples_i of §4.2.
+    Triples_i of §4.2.  Ordering contract: descending benefit, ties broken by
+    ascending flat (object * P + predicate) index — ``merge_sharded_plans_exact``
+    reproduces it across shards.
     """
     n, p = benefits.benefit.shape
     flat = benefits.benefit.reshape(-1)
@@ -82,7 +113,9 @@ def merge_sharded_plans(plans: Plan, plan_size: int) -> Plan:
 
     ``plans`` leaves carry a leading shard axis (e.g. from shard_map +
     all_gather).  Used by the distributed operator; unit-testable on CPU by
-    stacking local plans.
+    stacking local plans.  Top-k-equivalent but not order-identical to the
+    unsharded plan on ties; use ``merge_sharded_plans_exact`` when downstream
+    consumers (cross-query dedup) need byte-stable ordering.
     """
     flat = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), plans)
     score = jnp.where(flat.valid, flat.benefit, -jnp.inf)
@@ -91,36 +124,93 @@ def merge_sharded_plans(plans: Plan, plan_size: int) -> Plan:
     return jax.tree.map(lambda x: x[idx], flat)
 
 
+def merge_sharded_plans_exact(
+    plans: Plan, plan_size: int, num_predicates: int
+) -> Plan:
+    """Reduce per-shard plans [S, K] -> the plan ``select_plan`` would produce
+    on the unsharded benefit matrix, byte-identical on every valid lane.
+
+    ``select_plan`` orders by (benefit desc, flat object*P+pred asc); a
+    lexsort over the gathered shard survivors reproduces exactly that, so the
+    hierarchy is not merely top-k-equivalent but order-identical — required
+    for the downstream cross-query dedup (which top-ks in this order) to be
+    byte-stable under sharding.  Object indices must already be global.
+    """
+    flat = jax.tree.map(lambda x: x.reshape(-1), plans)
+    score = jnp.where(flat.valid, flat.benefit, -jnp.inf)
+    tie = flat.object_idx * jnp.int32(num_predicates) + flat.pred_idx
+    tie = jnp.where(flat.valid, tie, jnp.iinfo(jnp.int32).max)
+    order = jnp.lexsort((tie, -score))
+    k = min(plan_size, score.shape[0])
+    return jax.tree.map(lambda x: x[order[:k]], flat)
+
+
+def _triple_keys(
+    plan: Plan,
+    num_predicates: int,
+    num_functions: int,
+    num_objects: int | None = None,
+):
+    """Scalar (object, predicate, function) keys for flattened plan entries.
+
+    Guards the key-space width: with int32 keys, callers need
+    N * P * F < 2**31.  Passing ``num_objects`` makes the bound checked —
+    promoting to int64 when the runtime allows it (jax_enable_x64) and
+    raising a clear error instead of silently wrapping otherwise.
+    """
+    dtype = jnp.int32
+    if num_objects is not None:
+        key_space = int(num_objects) * int(num_predicates) * int(num_functions)
+        if key_space >= 2**31:
+            if jax.config.jax_enable_x64:
+                dtype = jnp.int64
+            else:
+                raise ValueError(
+                    f"triple key space N*P*F = {key_space} >= 2**31 overflows "
+                    "the int32 dedup keys in merge_plans_dedup; enable "
+                    "jax_enable_x64 for int64 keys or shard the object axis "
+                    "(merge_plans_dedup_sharded) before merging"
+                )
+    key = (
+        plan.object_idx.astype(dtype) * num_predicates + plan.pred_idx
+    ) * num_functions + plan.func_idx
+    sentinel = jnp.iinfo(dtype).max
+    return jnp.where(plan.valid, key, sentinel), sentinel
+
+
 def merge_plans_dedup(
     plans: Plan,
     num_predicates: int,
     num_functions: int,
     capacity: int | None = None,
     cost_budget: float | jax.Array | None = None,
+    num_objects: int | None = None,
 ) -> Plan:
-    """Merge Q per-query plans [Q, K] into one deduplicated plan (§5 cache
-    generalized to intra-epoch sharing across concurrent queries).
+    """Merge per-query plans (any leading axes, e.g. [Q, K] or [S, Q, K]) into
+    one deduplicated plan (§5 cache generalized to intra-epoch sharing across
+    concurrent queries).
 
     Duplicate (object, predicate, function) triples — the same enrichment
     wanted by several queries this epoch — survive exactly once, keeping the
     highest benefit any query assigned them; the executed output fans back out
     to every requesting query through the shared substrate.  Shape-stable
     under jit: encode each triple as a scalar key, lexsort by (key, -benefit),
-    keep first occurrences, compact by top-k benefit.
+    keep first occurrences, compact by top-k benefit (ties broken by ascending
+    key, an ordering independent of how entries were partitioned — the basis
+    of the sharded variant's exactness).
 
-    Keys are int32: callers need N * P * F < 2**31 (true at every corpus scale
-    this repo runs; the sharded path splits N long before that bound binds).
+    Keys are int32 by default: callers need N * P * F < 2**31.  Pass
+    ``num_objects`` to have the bound enforced (int64 promotion under
+    jax_enable_x64, a clear error otherwise).
     """
-    flat = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), plans)
+    flat = jax.tree.map(lambda x: x.reshape(-1), plans)
     total = flat.object_idx.shape[0]
     if capacity is None:
         capacity = total
     capacity = min(capacity, total)
-    sentinel = jnp.iinfo(jnp.int32).max
-    key = (
-        flat.object_idx * jnp.int32(num_predicates) + flat.pred_idx
-    ) * jnp.int32(num_functions) + flat.func_idx
-    key = jnp.where(flat.valid, key, sentinel)
+    key, sentinel = _triple_keys(
+        flat, num_predicates, num_functions, num_objects=num_objects
+    )
     # primary: key ascending; secondary: benefit descending, so the first
     # occurrence of each key is the max-benefit copy across queries
     order = jnp.lexsort((-flat.benefit, key))
@@ -140,6 +230,47 @@ def merge_plans_dedup(
     return merged._replace(valid=valid)
 
 
+def merge_plans_dedup_sharded(
+    plans: Plan,
+    num_predicates: int,
+    num_functions: int,
+    capacity: int | None = None,
+    cost_budget: float | jax.Array | None = None,
+    num_objects: int | None = None,
+) -> Plan:
+    """Hierarchical dedup merge: per-shard lexsort, then a cross-shard unique
+    pass — the distributed form of ``merge_plans_dedup``.
+
+    ``plans`` leaves carry a leading shard axis ([S, Q, K] or [S, K]).  Stage
+    1 runs the lexsort-dedup independently inside every shard at full local
+    capacity (lossless), which is all a device needs before the all-gather;
+    stage 2 re-keys the gathered survivors and runs the same pass across
+    shards.  Exact because dedup is associative (per-shard max benefit then
+    cross-shard max = global max per key) and the output ordering (benefit
+    desc, key asc) never depends on how entries were partitioned — so with
+    ``capacity`` equal to the flat entry count the result is byte-identical
+    (valid lanes) to ``merge_plans_dedup`` over the same entries flattened.
+    """
+    stage1 = jax.vmap(
+        functools.partial(
+            merge_plans_dedup,
+            num_predicates=num_predicates,
+            num_functions=num_functions,
+            num_objects=num_objects,
+        )
+    )(plans)  # [S, K_local] per-shard unique survivors
+    if capacity is None:
+        capacity = plans.object_idx.size
+    return merge_plans_dedup(
+        stage1,
+        num_predicates,
+        num_functions,
+        capacity=capacity,
+        cost_budget=cost_budget,
+        num_objects=num_objects,
+    )
+
+
 def static_plan_from_order(
     object_order: jax.Array,  # [M] object indices in execution order
     pred_of_slot: jax.Array,  # [M]
@@ -148,20 +279,28 @@ def static_plan_from_order(
     offset: jax.Array,  # [] int32: how many triples were already executed
     plan_size: int,
 ) -> Plan:
-    """A window of a precomputed static execution order (Baseline1/Baseline2)."""
+    """A window of a precomputed static execution order (Baseline1/Baseline2).
+
+    The benefit field carries a descending global rank score (M - slot): the
+    baseline's execution order IS its priority, so earlier slots must outrank
+    later ones if these plans ever feed ``merge_plans_dedup``, whose dedup
+    keeps the max-benefit copy (a constant 0 would corrupt that ordering).
+    """
     m = object_order.shape[0]
     sl = offset + jnp.arange(plan_size)
     in_range = sl < m
+    rank = (m - sl).astype(jnp.float32)  # descending across and within windows
     sl = jnp.minimum(sl, m - 1)
     obj = object_order[sl]
     prd = pred_of_slot[sl]
     fn = func_of_slot[sl]
     cost = costs[prd, jnp.maximum(fn, 0)]
+    valid = in_range & (fn >= 0)
     return Plan(
         object_idx=obj.astype(jnp.int32),
         pred_idx=prd.astype(jnp.int32),
         func_idx=fn.astype(jnp.int32),
-        benefit=jnp.zeros((plan_size,), jnp.float32),
+        benefit=jnp.where(valid, rank, -jnp.inf),
         cost=cost,
-        valid=in_range & (fn >= 0),
+        valid=valid,
     )

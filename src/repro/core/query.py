@@ -132,8 +132,19 @@ class CompiledQuery:
         self, joint: jax.Array, old_col: jax.Array, new_col: jax.Array
     ) -> jax.Array:
         """O(1) joint update for pure conjunctions: joint / old * new (guarded)."""
-        safe = jnp.maximum(old_col, 1e-12)
-        return jnp.where(old_col > 0, joint / safe * new_col, 0.0)
+        return conjunctive_joint_update(joint, old_col, new_col)
+
+
+def conjunctive_joint_update(
+    joint: jax.Array, old_col: jax.Array, new_col: jax.Array
+) -> jax.Array:
+    """O(1) conjunctive joint update: joint / old * new (guarded at old == 0).
+
+    Query-independent (any pure conjunction updates the same way), so batched
+    multi-query code can call it without holding a ``CompiledQuery``.
+    """
+    safe = jnp.maximum(old_col, 1e-12)
+    return jnp.where(old_col > 0, joint / safe * new_col, 0.0)
 
 
 def compile_query(ast: Node) -> CompiledQuery:

@@ -281,6 +281,56 @@ def apply_function_outputs(
     return refresh_derived(state.with_substrate(sub), query, combine_params)
 
 
+def shard_over_objects(
+    tree,
+    mesh,
+    axis_names: tuple = ("pod", "data"),
+    object_axis: int = 0,
+):
+    """Place a state pytree's object (N) axis over the given mesh axes.
+
+    The substrate's leaves ([N, P, F] tensors) shard their ``object_axis``
+    over whichever of ``axis_names`` the mesh actually has (pod-scale meshes
+    carry both "pod" and "data"; host meshes just "data"); scalars and
+    leaves too small to split replicate.  Per-query stacks pass
+    ``object_axis=1`` (axis 0 is Q).  Pure placement — NamedSharding via
+    device_put — so the same engine code runs unsharded on one CPU device
+    and sharded on a pod slice, with XLA inserting the collectives that the
+    hierarchical plan selection (``MultiQueryConfig.num_shards``) was shaped
+    to keep small.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    present = tuple(a for a in axis_names if a in mesh.axis_names)
+    n_devices = 1
+    for a in present:
+        n_devices *= mesh.shape[a]
+
+    def place(x):
+        ndim = getattr(x, "ndim", 0)
+        shardable = (
+            present
+            and ndim > object_axis
+            and x.shape[object_axis] % n_devices == 0
+            and x.shape[object_axis] >= n_devices
+        )
+        if shardable:
+            spec = [None] * ndim
+            spec[object_axis] = present if len(present) > 1 else present[0]
+            sharding = NamedSharding(mesh, PartitionSpec(*spec))
+        else:
+            sharding = NamedSharding(mesh, PartitionSpec())
+        return jax.device_put(x, sharding)
+
+    return jax.tree.map(place, tree)
+
+
+def shard_substrate(substrate: SharedSubstrate, mesh, axis_names=("pod", "data")):
+    """``shard_over_objects`` specialized to the shared substrate (ROADMAP
+    mesh-sharding item): [N, P, F] leaves split on N, cost scalar replicated."""
+    return shard_over_objects(substrate, mesh, axis_names, object_axis=0)
+
+
 def with_cached_state(
     state: EnrichmentState,
     query: CompiledQuery,

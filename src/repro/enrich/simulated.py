@@ -22,6 +22,11 @@ class SimulatedBank:
     outputs: jax.Array  # [N, P, F]
     costs: jax.Array  # [P, F]
 
+    # execute() is a pure gather, so whole epochs can fuse into one jitted
+    # lax.scan superstep (the operators' "scan" driver).  Banks that batch
+    # real model inference at the Python level must leave this False.
+    supports_scan = True
+
     def execute(self, plan: Plan) -> jax.Array:
         obj = jnp.clip(plan.object_idx, 0, self.outputs.shape[0] - 1)
         fn = jnp.maximum(plan.func_idx, 0)

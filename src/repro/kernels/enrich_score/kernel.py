@@ -1,4 +1,4 @@
-"""Fused PIQUE benefit-scoring Pallas TPU kernel (the paper's plan-generation
+"""Fused PIQUE benefit-scoring Pallas TPU kernels (the paper's plan-generation
 hot loop, DESIGN.md section 6).
 
 Per tile of (object, predicate) pairs, computes in ONE HBM pass what the jnp
@@ -18,6 +18,22 @@ All gathers are rendered as one-hot matmuls — dynamic vector gathers are
 weak on TPU VPU, but [T, K] one-hot x [K] contractions are MXU-native.  The
 decision table (P*2^F*BINS <= a few thousand entries) and the inverse-entropy
 LUT live in VMEM for the whole kernel.
+
+Two grid layouts share the tile math:
+
+* single-query ``enrich_score_tiles`` — grid (R,), the original kernel;
+* batched multi-query ``enrich_score_tiles_batched`` /
+  ``enrich_score_best_tiles_batched`` — grid (Q, R): the substrate-derived
+  rows (pred_prob / uncertainty / state / pred idx) are stored ONCE at
+  [R, T] and re-blocked for every query by the index map, so the HBM
+  footprint of shared state never grows with Q; only joint / candidate /
+  outputs carry a [Q, ...] axis.
+
+The ``best`` variant additionally fuses the beyond-paper per-function
+benefit argmax over F *inside* the tile: the per-function delta table is
+gathered as a [T, F] matrix with a single one-hot matmul and the Eq. 11
+argmax runs in registers, so the [Q, N, P, F] tensor the jnp reference
+materializes in HBM never exists.
 """
 
 from __future__ import annotations
@@ -30,6 +46,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+# delta_h_all stores +inf where a function is already executed / unlearnable.
+# inf poisons one-hot matmul gathers (0 * inf = nan), so hosts sanitize the
+# table to this sentinel and the kernel tests against BIG_INVALID / 2.
+BIG_INVALID = 1e9
 
 
 def _onehot_gather(idx_f32, table_ref, size: int):
@@ -42,6 +62,108 @@ def _onehot_gather(idx_f32, table_ref, size: int):
         (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
     )
     return vals.reshape(r, t)
+
+
+def _onehot_gather_rows(idx_f32, table_ref, rows: int):
+    """values[t, :] = table[idx[t], :] via one one-hot matmul.
+
+    idx_f32: [1, T] float row indices; table_ref: [rows, C].  Returns [T, C]
+    — the whole per-function row in a single MXU contraction.
+    """
+    t = idx_f32.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.float32, (t, rows), 1)
+    onehot = (idx_f32.reshape(t, 1) == iota).astype(jnp.float32)  # [T, rows]
+    return jax.lax.dot_general(
+        onehot, table_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )  # [T, C]
+
+
+def _lut_lerp(h_hat, lut_ref, lut_bins: int):
+    """Inverse-entropy upper root via LUT gather + linear interpolation."""
+    x = h_hat * (lut_bins - 1)
+    lo = jnp.floor(x)
+    frac = x - lo
+    hi = jnp.minimum(lo + 1.0, float(lut_bins - 1))
+    p_lo = _onehot_gather(lo, lut_ref, lut_bins)
+    p_hi = _onehot_gather(hi, lut_ref, lut_bins)
+    return p_lo * (1.0 - frac) + p_hi * frac
+
+
+def _score_table_tile(
+    h, p, joint, state, pred, cand,  # each [1, T] f32
+    delta_tab_ref, next_tab_ref, cost_tab_ref, lut_ref,
+    *,
+    num_bins: int, num_states: int, num_functions: int,
+    table_size: int, cost_size: int, lut_bins: int,
+):
+    """Paper decision-table scoring for one tile -> (benefit, fn, est_joint)."""
+    bin_f = jnp.floor(jnp.clip(h, 0.0, 1.0 - 1e-7) * num_bins)
+    flat = pred * (num_states * num_bins) + state * num_bins + bin_f  # [1, T]
+
+    delta = _onehot_gather(flat, delta_tab_ref, table_size)
+    fn = _onehot_gather(flat, next_tab_ref, table_size)
+
+    h_hat = jnp.clip(h + delta, 0.0, 1.0)
+    p_hat = _lut_lerp(h_hat, lut_ref, lut_bins)
+
+    est_joint = jnp.where(p > 0, joint / jnp.maximum(p, 1e-12) * p_hat, 0.0)
+    est_joint = jnp.clip(est_joint, 0.0, 1.0)
+
+    cost_idx = pred * num_functions + jnp.maximum(fn, 0.0)
+    cost = jnp.maximum(_onehot_gather(cost_idx, cost_tab_ref, cost_size), 1e-9)
+
+    valid = (fn >= 0.0) & (cand > 0.0)
+    benefit = jnp.where(valid, joint * est_joint / cost, NEG_INF)
+    return benefit, fn, est_joint
+
+
+def _score_best_tile(
+    h, p, joint, state, pred, cand,  # each [1, T] f32
+    delta_all_ref,  # [P*S*B, F] f32, +inf sanitized to BIG_INVALID
+    cost_tab_ref,  # [P, F] f32
+    lut_ref,  # [LUTB] f32
+    *,
+    num_bins: int, num_states: int, num_functions: int, lut_bins: int,
+):
+    """Fused best-benefit function selection: Eq. 11 argmax over F in-registers.
+
+    One [T, PSB] one-hot matmul fetches ALL per-function deltas for the tile;
+    the per-function loop below is a static unroll over a [1, T] register
+    tile, so nothing F-shaped is ever written back to HBM.
+    """
+    psb = delta_all_ref.shape[0]
+    num_preds = cost_tab_ref.shape[0]
+    t = h.shape[-1]
+
+    bin_f = jnp.floor(jnp.clip(h, 0.0, 1.0 - 1e-7) * num_bins)
+    base = pred * (num_states * num_bins) + state * num_bins + bin_f  # [1, T]
+    deltas = _onehot_gather_rows(base, delta_all_ref, psb)  # [T, F]
+    costs = _onehot_gather_rows(pred, cost_tab_ref, num_preds)  # [T, F]
+
+    best_ben = jnp.full((1, t), NEG_INF, jnp.float32)
+    best_fn = jnp.full((1, t), -1.0, jnp.float32)
+    best_ej = jnp.zeros((1, t), jnp.float32)
+    for f in range(num_functions):  # static unroll; F is 3-4
+        delta_f = deltas[:, f].reshape(1, t)
+        invalid_f = delta_f > BIG_INVALID / 2
+        h_hat = jnp.clip(h + jnp.where(invalid_f, 0.0, delta_f), 0.0, 1.0)
+        p_hat = _lut_lerp(h_hat, lut_ref, lut_bins)
+        est_j = jnp.where(p > 0, joint / jnp.maximum(p, 1e-12) * p_hat, 0.0)
+        est_j = jnp.clip(est_j, 0.0, 1.0)
+        cost_f = jnp.maximum(costs[:, f].reshape(1, t), 1e-9)
+        ben_f = jnp.where(invalid_f, NEG_INF, joint * est_j / cost_f)
+        better = ben_f > best_ben  # strict: ties keep the FIRST max (argmax)
+        best_ben = jnp.where(better, ben_f, best_ben)
+        best_fn = jnp.where(better, float(f), best_fn)
+        best_ej = jnp.where(better, est_j, best_ej)
+
+    valid = (best_fn >= 0.0) & (cand > 0.0)
+    benefit = jnp.where(valid, best_ben, NEG_INF)
+    return benefit, best_fn, best_ej
+
+
+# ------------------------------------------------------------ kernel bodies --
 
 
 def _score_kernel(
@@ -58,47 +180,69 @@ def _score_kernel(
     benefit_ref,  # [1, T] out
     next_fn_ref,  # [1, T] out (f32)
     est_joint_ref,  # [1, T] out
-    *,
-    num_bins: int,
-    num_states: int,
-    num_functions: int,
-    table_size: int,
-    cost_size: int,
-    lut_bins: int,
+    **consts,
 ):
-    h = unc_ref[...].astype(jnp.float32)
-    p = pred_prob_ref[...].astype(jnp.float32)
-    joint = joint_ref[...].astype(jnp.float32)
-    state = state_ref[...]
-    pred = pred_ref[...]
-
-    bin_f = jnp.floor(jnp.clip(h, 0.0, 1.0 - 1e-7) * num_bins)
-    flat = pred * (num_states * num_bins) + state * num_bins + bin_f  # [1, T]
-
-    delta = _onehot_gather(flat, delta_tab_ref, table_size)
-    fn = _onehot_gather(flat, next_tab_ref, table_size)
-
-    h_hat = jnp.clip(h + delta, 0.0, 1.0)
-    x = h_hat * (lut_bins - 1)
-    lo = jnp.floor(x)
-    frac = x - lo
-    hi = jnp.minimum(lo + 1.0, float(lut_bins - 1))
-    p_lo = _onehot_gather(lo, lut_ref, lut_bins)
-    p_hi = _onehot_gather(hi, lut_ref, lut_bins)
-    p_hat = p_lo * (1.0 - frac) + p_hi * frac
-
-    est_joint = jnp.where(p > 0, joint / jnp.maximum(p, 1e-12) * p_hat, 0.0)
-    est_joint = jnp.clip(est_joint, 0.0, 1.0)
-
-    cost_idx = pred * num_functions + jnp.maximum(fn, 0.0)
-    cost = jnp.maximum(_onehot_gather(cost_idx, cost_tab_ref, cost_size), 1e-9)
-
-    valid = (fn >= 0.0) & (cand_ref[...] > 0.0)
-    benefit = jnp.where(valid, joint * est_joint / cost, NEG_INF)
-
+    benefit, fn, est_joint = _score_table_tile(
+        unc_ref[...].astype(jnp.float32),
+        pred_prob_ref[...].astype(jnp.float32),
+        joint_ref[...].astype(jnp.float32),
+        state_ref[...], pred_ref[...], cand_ref[...],
+        delta_tab_ref, next_tab_ref, cost_tab_ref, lut_ref,
+        **consts,
+    )
     benefit_ref[...] = benefit
     next_fn_ref[...] = fn
     est_joint_ref[...] = est_joint
+
+
+def _score_kernel_batched(
+    pred_prob_ref, unc_ref, state_ref, pred_ref,  # [1, T] shared rows
+    joint_ref,  # [1, 1, T] per-query rows
+    delta_tab_ref, next_tab_ref, cost_tab_ref, lut_ref,
+    benefit_ref, next_fn_ref, est_joint_ref,  # [1, 1, T] out
+    **consts,
+):
+    # Candidate/§4.1 masking is the batched caller's job (it needs global
+    # reductions anyway), so no cand operand is streamed per query — validity
+    # inside the tile is just "a next function exists".
+    t = pred_prob_ref.shape[-1]
+    benefit, fn, est_joint = _score_table_tile(
+        unc_ref[...].astype(jnp.float32),
+        pred_prob_ref[...].astype(jnp.float32),
+        joint_ref[...].reshape(1, t).astype(jnp.float32),
+        state_ref[...], pred_ref[...],
+        jnp.ones((1, t), jnp.float32),
+        delta_tab_ref, next_tab_ref, cost_tab_ref, lut_ref,
+        **consts,
+    )
+    benefit_ref[...] = benefit.reshape(1, 1, t)
+    next_fn_ref[...] = fn.reshape(1, 1, t)
+    est_joint_ref[...] = est_joint.reshape(1, 1, t)
+
+
+def _score_best_kernel_batched(
+    pred_prob_ref, unc_ref, state_ref, pred_ref,  # [1, T] shared rows
+    joint_ref,  # [1, 1, T] per-query rows
+    delta_all_ref, cost_tab_ref, lut_ref,
+    benefit_ref, next_fn_ref, est_joint_ref,  # [1, 1, T] out
+    **consts,
+):
+    t = pred_prob_ref.shape[-1]
+    benefit, fn, est_joint = _score_best_tile(
+        unc_ref[...].astype(jnp.float32),
+        pred_prob_ref[...].astype(jnp.float32),
+        joint_ref[...].reshape(1, t).astype(jnp.float32),
+        state_ref[...], pred_ref[...],
+        jnp.ones((1, t), jnp.float32),
+        delta_all_ref, cost_tab_ref, lut_ref,
+        **consts,
+    )
+    benefit_ref[...] = benefit.reshape(1, 1, t)
+    next_fn_ref[...] = fn.reshape(1, 1, t)
+    est_joint_ref[...] = est_joint.reshape(1, 1, t)
+
+
+# ------------------------------------------------------------- entry points --
 
 
 def enrich_score_tiles(
@@ -136,3 +280,87 @@ def enrich_score_tiles(
         interpret=interpret,
     )(pred_prob, unc, state_id, pred_idx, joint, cand,
       delta_tab, next_tab, cost_tab, lut)
+
+
+def _batched_specs(q, r, t):
+    shared = pl.BlockSpec((1, t), lambda qi, i: (i, 0))
+    per_q = pl.BlockSpec((1, 1, t), lambda qi, i: (qi, i, 0))
+    out = [per_q, per_q, per_q]
+    out_shape = [jax.ShapeDtypeStruct((q, r, t), jnp.float32)] * 3
+    return shared, per_q, out, out_shape
+
+
+def enrich_score_tiles_batched(
+    pred_prob, unc, state_id, pred_idx,  # each [R, T], shared across queries
+    joint,  # [Q, R, T]
+    delta_tab, next_tab, cost_tab, lut,  # flat f32 tables
+    *,
+    num_bins: int,
+    num_states: int,
+    num_functions: int,
+    interpret: bool = False,
+):
+    """Multi-query decision-table scoring: grid (Q, R), substrate rows shared."""
+    q = joint.shape[0]
+    r, t = pred_prob.shape
+    table_size = delta_tab.shape[0]
+    cost_size = cost_tab.shape[0]
+    lut_bins = lut.shape[0]
+    kernel = functools.partial(
+        _score_kernel_batched,
+        num_bins=num_bins, num_states=num_states, num_functions=num_functions,
+        table_size=table_size, cost_size=cost_size, lut_bins=lut_bins,
+    )
+    shared, per_q, out_specs, out_shape = _batched_specs(q, r, t)
+    full = lambda n: pl.BlockSpec((n,), lambda qi, i: (0,))
+    return pl.pallas_call(
+        kernel,
+        grid=(q, r),
+        in_specs=[shared] * 4 + [per_q] + [
+            full(table_size), full(table_size), full(cost_size), full(lut_bins)
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(pred_prob, unc, state_id, pred_idx, joint,
+      delta_tab, next_tab, cost_tab, lut)
+
+
+def enrich_score_best_tiles_batched(
+    pred_prob, unc, state_id, pred_idx,  # each [R, T], shared across queries
+    joint,  # [Q, R, T]
+    delta_all_tab,  # [P*S*B, F] f32, +inf sanitized to BIG_INVALID
+    cost_tab,  # [P, F] f32
+    lut,  # [LUTB] f32
+    *,
+    num_bins: int,
+    num_states: int,
+    interpret: bool = False,
+):
+    """Multi-query fused best-mode scoring: Eq. 11 argmax over F inside the
+    tile, so the [Q, N, P, F] intermediate never reaches HBM."""
+    q = joint.shape[0]
+    r, t = pred_prob.shape
+    psb, num_functions = delta_all_tab.shape
+    lut_bins = lut.shape[0]
+    kernel = functools.partial(
+        _score_best_kernel_batched,
+        num_bins=num_bins, num_states=num_states,
+        num_functions=num_functions, lut_bins=lut_bins,
+    )
+    shared, per_q, out_specs, out_shape = _batched_specs(q, r, t)
+    full2 = lambda a, b: pl.BlockSpec((a, b), lambda qi, i: (0, 0))
+    full1 = lambda n: pl.BlockSpec((n,), lambda qi, i: (0,))
+    return pl.pallas_call(
+        kernel,
+        grid=(q, r),
+        in_specs=[shared] * 4 + [per_q] + [
+            full2(psb, num_functions),
+            full2(cost_tab.shape[0], cost_tab.shape[1]),
+            full1(lut_bins),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(pred_prob, unc, state_id, pred_idx, joint,
+      delta_all_tab, cost_tab, lut)

@@ -1,7 +1,11 @@
-"""Jit'd wrapper: EnrichmentState -> TripleBenefits via the fused kernel.
+"""Jit'd wrappers: enrichment state -> TripleBenefits via the fused kernels.
 
-Drop-in replacement for ``repro.core.benefit.compute_benefits`` on
-conjunctive queries (``OperatorConfig.use_fused_kernel``)."""
+``fused_benefits`` is a drop-in replacement for
+``repro.core.benefit.compute_benefits`` on conjunctive queries
+(``OperatorConfig.use_fused_kernel``); ``fused_benefits_batched`` is the
+multi-query analogue of ``repro.core.benefit.compute_benefits_batched``
+(``MultiQueryConfig.backend="pallas"``), including the fused ``"best"``-mode
+argmax that never materializes [Q, N, P, F] in HBM."""
 
 from __future__ import annotations
 
@@ -15,13 +19,43 @@ from repro.core.decision_table import DecisionTable
 from repro.core.entropy import _inverse_entropy_table
 from repro.core.query import CompiledQuery
 from repro.core.state import EnrichmentState
-from repro.kernels.enrich_score.kernel import enrich_score_tiles
+from repro.kernels.enrich_score.kernel import (
+    BIG_INVALID,
+    enrich_score_best_tiles_batched,
+    enrich_score_tiles,
+    enrich_score_tiles_batched,
+)
 
 TILE = 256
 
 
 def _is_cpu() -> bool:
     return jax.devices()[0].platform == "cpu"
+
+
+def _tile_layout(n: int, p: int):
+    """Shared [N*P] -> [R, TILE] padding scheme of both wrappers.
+
+    Returns (rows, flatten, unflatten): ``flatten`` lays any [..., N, P]-
+    shaped operand out as TILE-wide rows (leading axes preserved),
+    ``unflatten`` strips the pad and restores [..., N, P].
+    """
+    m = n * p
+    pad = (-m) % TILE
+    rows = (m + pad) // TILE
+
+    def flatten(x, fill=0.0):
+        lead = x.shape[:-2]
+        x = x.reshape(lead + (-1,)).astype(jnp.float32)
+        widths = [(0, 0)] * len(lead) + [(0, pad)]
+        x = jnp.pad(x, widths, constant_values=fill)
+        return x.reshape(lead + (rows, TILE))
+
+    def unflatten(x):
+        lead = x.shape[:-2]
+        return x.reshape(lead + (-1,))[..., :m].reshape(lead + (n, p))
+
+    return rows, flatten, unflatten
 
 
 def fused_benefits(
@@ -41,14 +75,7 @@ def fused_benefits(
     if candidate_mask is None:
         candidate_mask = ~state.in_answer
 
-    m = n * p
-    pad = (-m) % TILE
-    rows = (m + pad) // TILE
-
-    def flat(x, fill=0.0):
-        x = x.reshape(-1).astype(jnp.float32)
-        x = jnp.pad(x, (0, pad), constant_values=fill)
-        return x.reshape(rows, TILE)
+    _rows, flat, unflat = _tile_layout(n, p)
 
     pred_idx = jnp.broadcast_to(jnp.arange(p, dtype=jnp.int32)[None], (n, p))
     out = enrich_score_tiles(
@@ -67,10 +94,80 @@ def fused_benefits(
         num_functions=f,
         interpret=interpret,
     )
-    benefit, next_fn, est_joint = (x.reshape(-1)[:m].reshape(n, p) for x in out)
+    benefit, next_fn, est_joint = (unflat(x) for x in out)
     benefit = jnp.where(benefit <= -1e29, -jnp.inf, benefit)
     nf = next_fn.astype(jnp.int32)
     cost = costs[pred_idx, jnp.maximum(nf, 0)]
+    return TripleBenefits(
+        benefit=benefit, next_fn=nf, est_joint=est_joint, cost=cost
+    )
+
+
+def fused_benefits_batched(
+    pred_prob: jax.Array,  # [N, P] shared predicate probabilities
+    uncertainty: jax.Array,  # [N, P]
+    state_id: jax.Array,  # [N, P] int32
+    joint_prob: jax.Array,  # [Q, N] per-query joint probabilities
+    table: DecisionTable,
+    costs: jax.Array,  # [P, F]
+    function_selection: str = "table",  # "table" | "best"
+    interpret: bool | None = None,
+    lut_bins: int = 4096,
+) -> TripleBenefits:
+    """Multi-query fused scoring over a shared substrate -> [Q, N, P] leaves.
+
+    The substrate-derived rows (pred_prob / uncertainty / state_id) are laid
+    out once at [R, T] and shared by every grid row via the kernel's index
+    map; only ``joint`` and the output tensors carry the Q axis.  In
+    ``"best"`` mode the per-function Eq. 11 argmax runs inside the tile, so
+    nothing F-shaped reaches HBM (the jnp oracle materializes [Q, N, P, F]).
+
+    Validity/candidate masking beyond exhausted triples (pred_mask, §4.1) is
+    the caller's job, mirroring ``compute_benefits_batched``.
+    """
+    if interpret is None:
+        interpret = _is_cpu()
+    n, p = pred_prob.shape
+    q = joint_prob.shape[0]
+    f = costs.shape[1]
+
+    _rows, flat, unflat = _tile_layout(n, p)
+
+    pred_idx = jnp.broadcast_to(jnp.arange(p, dtype=jnp.int32)[None], (n, p))
+    shared = (
+        flat(pred_prob),
+        flat(uncertainty),
+        flat(state_id.astype(jnp.float32)),
+        flat(pred_idx.astype(jnp.float32)),
+    )
+    joint_b = flat(jnp.broadcast_to(joint_prob[:, :, None], (q, n, p)))
+    lut = jnp.asarray(_inverse_entropy_table(lut_bins))
+
+    if function_selection == "best":
+        assert table.delta_h_all is not None, "table learned without delta_h_all"
+        delta_all = table.delta_h_all.reshape(-1, f).astype(jnp.float32)
+        delta_all = jnp.where(jnp.isfinite(delta_all), delta_all, BIG_INVALID)
+        out = enrich_score_best_tiles_batched(
+            *shared, joint_b,
+            delta_all, costs.astype(jnp.float32), lut,
+            num_bins=table.num_bins, num_states=table.num_states,
+            interpret=interpret,
+        )
+    else:
+        out = enrich_score_tiles_batched(
+            *shared, joint_b,
+            table.delta_h.reshape(-1).astype(jnp.float32),
+            table.next_fn.reshape(-1).astype(jnp.float32),
+            costs.reshape(-1).astype(jnp.float32),
+            lut,
+            num_bins=table.num_bins, num_states=table.num_states,
+            num_functions=f, interpret=interpret,
+        )
+
+    benefit, next_fn, est_joint = (unflat(x) for x in out)
+    benefit = jnp.where(benefit <= -1e29, -jnp.inf, benefit)
+    nf = next_fn.astype(jnp.int32)
+    cost = jnp.maximum(costs[pred_idx[None], jnp.maximum(nf, 0)], 1e-9)
     return TripleBenefits(
         benefit=benefit, next_fn=nf, est_joint=est_joint, cost=cost
     )

@@ -1,4 +1,11 @@
-"""Oracle for the fused scoring kernel = the step-by-step jnp pipeline in
-``repro.core.benefit.compute_benefits`` (the paper-faithful reference)."""
+"""Oracles for the fused scoring kernels = the step-by-step jnp pipelines in
+``repro.core.benefit`` (the paper-faithful references).
+
+``reference_benefits_batched`` covers both batched modes: in ``"best"`` it
+materializes the full [Q, N, P, F] benefit tensor the fused kernel is
+designed to avoid — which is exactly what makes it the oracle."""
 
 from repro.core.benefit import compute_benefits as reference_benefits  # noqa: F401
+from repro.core.benefit import (  # noqa: F401
+    compute_benefits_batched as reference_benefits_batched,
+)

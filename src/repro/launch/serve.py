@@ -142,6 +142,8 @@ def build_multi_server(
     backbone_arch: Optional[str] = "qwen3-1.7b",
     seed: int = 0,
     preds_per_query: int = 2,
+    plan_shards: int = 1,
+    backend: str = "jnp",
 ):
     """Multi-tenant server: Q overlapping conjunctive queries, one substrate.
 
@@ -166,7 +168,10 @@ def build_multi_server(
     truths = jnp.stack(
         [truth_answer_mask(evalc, rq) for rq in query_set.reindexed]
     )
-    cfg = MultiQueryConfig(plan_size=64, function_selection="best")
+    cfg = MultiQueryConfig(
+        plan_size=64, function_selection="best",
+        num_shards=plan_shards, backend=backend,
+    )
     engine = MultiQueryEngine(
         query_set, table, combine, bank.costs, bank, cfg, truth_masks=truths
     )
@@ -304,6 +309,11 @@ def main(argv=None):
     ap.add_argument("--queries", type=int, default=1,
                     help=">1 serves Q concurrent queries over one shared substrate")
     ap.add_argument("--preds-per-query", type=int, default=2)
+    ap.add_argument("--plan-shards", type=int, default=1,
+                    help="hierarchical plan selection over this many object "
+                         "shards (byte-identical to unsharded planning)")
+    ap.add_argument("--backend", default="jnp", choices=("jnp", "pallas"),
+                    help="benefit-scoring backend for the multi-tenant engine")
     args = ap.parse_args(argv)
 
     handler = PreemptionHandler().install()
@@ -311,17 +321,19 @@ def main(argv=None):
         engine, corpus, truths, qualities, queries = build_multi_server(
             args.objects, args.preds, args.queries, args.backbone,
             preds_per_query=args.preds_per_query,
+            plan_shards=args.plan_shards, backend=args.backend,
         )
         print(f"[serve] cascade qualities (AUC): {qualities}")
         report = serve_queries(engine, args.objects, args.epochs, handler)
         tf = ([f"{x:.3f}" for x in report.true_f] if report.true_f else "n/a")
+        eps = report.epochs / max(report.wall_s, 1e-9)
         print(
             f"[serve] {report.num_queries} queries x {report.epochs} epochs, "
             f"cost={report.cost_spent:.4f}s-model "
             f"(requested {report.requested_cost:.4f}, dedup saved "
             f"{report.dedup_savings:.4f}), mean E(F1)={report.mean_expected_f:.3f}, "
             f"per-query E(F1)={[f'{x:.3f}' for x in report.expected_f]}, "
-            f"true F1={tf}, wall={report.wall_s:.1f}s"
+            f"true F1={tf}, wall={report.wall_s:.1f}s ({eps:.2f} epochs/s)"
         )
         return 0
 
@@ -330,10 +342,11 @@ def main(argv=None):
     )
     print(f"[serve] cascade qualities (AUC): {qualities}")
     report = serve_query(op, args.objects, args.epochs, handler)
+    eps = report.epochs / max(report.wall_s, 1e-9)
     print(
         f"[serve] {report.epochs} epochs, cost={report.cost_spent:.4f}s-model, "
         f"E(F1)={report.expected_f:.3f}, true F1={report.true_f1:.3f}, "
-        f"wall={report.wall_s:.1f}s"
+        f"wall={report.wall_s:.1f}s ({eps:.2f} epochs/s)"
     )
     return 0
 

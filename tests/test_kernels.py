@@ -215,6 +215,107 @@ def test_enrich_score_matches_reference(n, p, f):
     )
 
 
+def _batched_inputs(seed, n, p, f, q):
+    """Shared-substrate rows + per-query joints for the batched kernels."""
+    query = conjunction(*[Predicate(i, 1) for i in range(p)])
+    stt = _mk_state(seed, n, p, f, query)
+    rng = np.random.default_rng(seed + 100)
+    joint = jnp.asarray(rng.uniform(0.01, 1.0, size=(q, n)).astype(np.float32))
+    return stt, joint
+
+
+def _assert_batched_parity(stt, joint, table, costs, mode):
+    from repro.core.benefit import compute_benefits_batched
+
+    ref = compute_benefits_batched(
+        stt.pred_prob, stt.uncertainty, stt.state_id(), joint, table, costs,
+        function_selection=mode,
+    )
+    out = es_ops.fused_benefits_batched(
+        stt.pred_prob, stt.uncertainty, stt.state_id(), joint, table, costs,
+        function_selection=mode, interpret=True,
+    )
+    # mask the engine way: a lane only matters where a next function exists
+    rv = np.asarray(ref.next_fn) >= 0
+    ov = np.asarray(out.next_fn) >= 0
+    np.testing.assert_array_equal(ov, rv)
+    rb = np.where(rv, np.asarray(ref.benefit), -np.inf)
+    ob = np.where(ov, np.asarray(out.benefit), -np.inf)
+    fin = np.isfinite(rb)
+    assert (fin == np.isfinite(ob)).all()
+    np.testing.assert_allclose(ob[fin], rb[fin], rtol=5e-3, atol=5e-3)
+    np.testing.assert_array_equal(
+        np.asarray(out.next_fn)[fin], np.asarray(ref.next_fn)[fin]
+    )
+    np.testing.assert_allclose(
+        np.asarray(out.est_joint)[fin], np.asarray(ref.est_joint)[fin],
+        rtol=5e-3, atol=5e-3,
+    )
+    np.testing.assert_allclose(
+        np.asarray(out.cost)[fin], np.asarray(ref.cost)[fin], rtol=1e-6
+    )
+    return fin
+
+
+@pytest.mark.parametrize("mode", ["table", "best"])
+@pytest.mark.parametrize("n,p,f,q", [(64, 2, 4, 3), (130, 3, 4, 5), (40, 1, 3, 1)])
+def test_enrich_score_batched_matches_reference(mode, n, p, f, q):
+    stt, joint = _batched_inputs(0, n, p, f, q)
+    table = fallback_decision_table(p, f, jnp.linspace(0.6, 0.9, f))
+    costs = jnp.asarray(np.tile(np.linspace(0.05, 0.9, f), (p, 1)), jnp.float32)
+    fin = _assert_batched_parity(stt, joint, table, costs, mode)
+    assert fin.any()
+
+
+@pytest.mark.parametrize("mode", ["table", "best"])
+def test_enrich_score_batched_edge_bins(mode):
+    """h ~ 0 (saturated probs), h ~ 1 (coin-flip probs), exhausted triples."""
+    n, p, f, q = 96, 2, 4, 3
+    query = conjunction(*[Predicate(i, 1) for i in range(p)])
+    combine = default_combine_params(jnp.full((p, f), 0.8))
+    rng = np.random.default_rng(7)
+    probs = np.empty((n, p, f), np.float32)
+    probs[: n // 3] = rng.uniform(1e-6, 1e-4, size=(n // 3, p, f))  # h ~ 0
+    probs[n // 3 : 2 * n // 3] = 0.5 + rng.uniform(  # h ~ 1
+        -1e-5, 1e-5, size=(n // 3, p, f)
+    )
+    probs[2 * n // 3 :] = rng.uniform(0.02, 0.98, size=(n - 2 * (n // 3), p, f))
+    mask = rng.uniform(size=(n, p, f)) < 0.5
+    mask[2 * n // 3 :] = True  # exhausted: every function already executed
+    stt = init_state(n, p, f)
+    stt = dataclasses.replace(
+        stt, exec_mask=jnp.asarray(mask), func_probs=jnp.asarray(probs)
+    )
+    stt = refresh_derived(stt, query, combine)
+    joint = jnp.asarray(rng.uniform(0.0, 1.0, size=(q, n)).astype(np.float32))
+    table = fallback_decision_table(p, f, jnp.linspace(0.6, 0.9, f))
+    costs = jnp.asarray(np.tile(np.linspace(0.05, 0.9, f), (p, 1)), jnp.float32)
+    _assert_batched_parity(stt, joint, table, costs, mode)
+    # exhausted rows must be invalid in both implementations
+    out = es_ops.fused_benefits_batched(
+        stt.pred_prob, stt.uncertainty, stt.state_id(), joint, table, costs,
+        function_selection=mode, interpret=True,
+    )
+    assert (np.asarray(out.next_fn)[:, 2 * n // 3 :, :] == -1).all()
+
+
+def test_enrich_score_batched_with_learned_table():
+    from repro.data.synthetic import make_corpus
+
+    rng = jax.random.PRNGKey(11)
+    p, f, n, q = 2, 4, 128, 4
+    query = conjunction(Predicate(0, 1), Predicate(1, 2))
+    corpus = make_corpus(rng, 512, [0, 1], [1, 2], aucs=[0.6, 0.8, 0.9, 0.95])
+    combine = default_combine_params(corpus.aucs)
+    table = learn_decision_table(corpus.func_probs, combine)
+    stt = _mk_state(3, n, p, f, query)
+    joint = jnp.asarray(
+        np.random.default_rng(4).uniform(0.01, 1.0, size=(q, n)).astype(np.float32)
+    )
+    for mode in ("table", "best"):
+        _assert_batched_parity(stt, joint, table, corpus.costs, mode)
+
+
 def test_enrich_score_with_learned_table():
     from repro.data.synthetic import make_corpus
     rng = jax.random.PRNGKey(5)

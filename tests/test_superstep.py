@@ -1,0 +1,328 @@
+"""Fused epoch superstep + sharded planning: scan-vs-loop driver parity,
+byte-identical sharded plan selection, hierarchical dedup exactness, triple-key
+overflow guards, and baseline plan rank scores."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    MultiQueryConfig,
+    MultiQueryEngine,
+    OperatorConfig,
+    Predicate,
+    ProgressiveQueryOperator,
+    build_query_set,
+    conjunction,
+    fallback_decision_table,
+)
+from repro.core.combine import default_combine_params
+from repro.core.plan import (
+    Plan,
+    canonicalize_plan,
+    merge_plans_dedup,
+    merge_plans_dedup_sharded,
+    merge_sharded_plans_exact,
+    select_plan,
+    static_plan_from_order,
+)
+from repro.data.synthetic import make_corpus
+from repro.enrich.simulated import SimulatedBank
+
+P_GLOBAL, F, N = 4, 4, 160
+
+
+def _world(seed=0):
+    preds = [Predicate(i, 1) for i in range(P_GLOBAL)]
+    corpus = make_corpus(
+        jax.random.PRNGKey(seed), N, [p.tag_type for p in preds],
+        [p.tag for p in preds], selectivity=[0.3, 0.4, 0.25, 0.35],
+    )
+    bank = SimulatedBank(outputs=corpus.func_probs, costs=corpus.costs)
+    combine = default_combine_params(corpus.aucs)
+    table = fallback_decision_table(P_GLOBAL, F, corpus.aucs)
+    return preds, corpus, bank, combine, table
+
+
+def _engine(queries, preds, bank, combine, table, **cfg_kw):
+    qset = build_query_set(queries, global_predicates=[p.positive() for p in preds])
+    cfg = MultiQueryConfig(**{"plan_size": 32, **cfg_kw})
+    return MultiQueryEngine(qset, table, combine, bank.costs, bank, cfg)
+
+
+def _queries(preds):
+    return [
+        conjunction(preds[0], preds[1]),
+        conjunction(preds[1], preds[2]),
+        conjunction(preds[0], preds[1]),  # duplicate tenant (hot query)
+    ]
+
+
+def _assert_plans_identical(a: Plan, b: Plan, msg=""):
+    ca, cb = canonicalize_plan(a), canonicalize_plan(b)
+    for field in Plan._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ca, field)), np.asarray(getattr(cb, field)),
+            err_msg=f"{msg}.{field}",
+        )
+
+
+# ------------------------------------------------------ scan driver parity --
+
+
+def test_scan_driver_matches_loop_driver():
+    preds, corpus, bank, combine, table = _world()
+    eng = _engine(_queries(preds), preds, bank, combine, table)
+    state_l, hist_l = eng.run(N, 6, driver="loop")
+    state_s, hist_s = eng.run_scan(N, 6, collect_masks=True)
+    assert len(hist_l) == len(hist_s)
+    for a, b in zip(hist_l, hist_s):
+        # float aggregates to 1 ulp (fusion may reassociate reductions);
+        # everything discrete — answer sets, plan sizes — must be EXACT
+        assert a.cost_spent == pytest.approx(b.cost_spent, rel=1e-6)
+        assert a.epoch_cost == pytest.approx(b.epoch_cost, rel=1e-6, abs=1e-4)
+        assert a.requested_cost == pytest.approx(b.requested_cost, rel=1e-6)
+        assert a.expected_f == pytest.approx(b.expected_f, rel=1e-6)
+        assert a.answer_size == b.answer_size
+        assert a.plan_valid == b.plan_valid
+        assert a.merged_valid == b.merged_valid
+    np.testing.assert_array_equal(
+        np.asarray(state_l.per_query.in_answer),
+        np.asarray(state_s.per_query.in_answer),
+    )
+    # per-epoch answer sets equal the loop driver's (collected via run_epoch)
+    st = eng.init_state(N)
+    for h in hist_s:
+        st, sel, *_ = eng.run_epoch(st)
+        np.testing.assert_array_equal(np.asarray(sel.mask), h.answer_mask)
+
+
+def test_scan_driver_trims_after_exhaustion():
+    """Fixed-length scan: post-exhaustion epochs are free no-ops, trimmed to
+    match the loop driver's early break."""
+    preds, corpus, bank, combine, table = _world()
+    eng = _engine([conjunction(preds[0])], preds, bank, combine, table,
+                  plan_size=256, candidate_strategy="all")
+    state, hist = eng.run(N, 40, driver="scan")
+    state2, hist2 = _engine(
+        [conjunction(preds[0])], preds, bank, combine, table,
+        plan_size=256, candidate_strategy="all",
+    ).run(N, 40, driver="loop")
+    assert len(hist) == len(hist2) < 40
+    assert hist[-1].merged_valid == 0
+    assert hist[-1].cost_spent == pytest.approx(hist2[-1].cost_spent, rel=1e-6)
+
+
+def test_run_auto_routes_by_bank():
+    class OpaqueBank:
+        def __init__(self, inner):
+            self.inner = inner
+            self.costs = inner.costs
+
+        def execute(self, plan):
+            return self.inner.execute(plan)
+
+    preds, corpus, bank, combine, table = _world()
+    eng_scan = _engine(_queries(preds), preds, bank, combine, table)
+    assert getattr(eng_scan.bank, "supports_scan", False)
+    eng_loop = _engine(_queries(preds), preds, OpaqueBank(bank), combine, table)
+    s1, h1 = eng_scan.run(N, 3)  # auto -> scan
+    s2, h2 = eng_loop.run(N, 3)  # auto -> loop
+    assert [h.cost_spent for h in h1] == [h.cost_spent for h in h2]
+    with pytest.raises(ValueError):
+        eng_scan.run(N, 2, driver="bogus")
+
+
+def test_single_query_scan_matches_loop():
+    preds, corpus, bank, combine, table = _world()
+    query = conjunction(preds[0], preds[1])
+    truth = jnp.asarray(np.asarray(corpus.truth_pred[:, 0] & corpus.truth_pred[:, 1]))
+    op = ProgressiveQueryOperator(
+        query, table.subset([0, 1]), default_combine_params(corpus.aucs[:2]),
+        corpus.costs[:2], SimulatedBank(outputs=bank.outputs[:, :2], costs=bank.costs[:2]),
+        OperatorConfig(plan_size=32), truth_mask=truth,
+    )
+    state_l, hist_l = op.run(N, 5, driver="loop")
+    state_s, hist_s = op.run(N, 5, driver="scan")
+    assert len(hist_l) == len(hist_s)
+    for a, b in zip(hist_l, hist_s):
+        # float aggregates may differ by one float32 ulp: the scan fuses the
+        # whole epoch into one program, so XLA may reassociate reductions
+        assert a.cost_spent == pytest.approx(b.cost_spent, rel=1e-6)
+        assert a.expected_f == pytest.approx(b.expected_f, rel=1e-6)
+        assert a.answer_size == b.answer_size
+        assert a.plan_valid == b.plan_valid
+        assert a.true_f1 == pytest.approx(b.true_f1, abs=1e-6)
+    np.testing.assert_array_equal(
+        np.asarray(state_l.in_answer), np.asarray(state_s.in_answer)
+    )
+
+
+def test_unique_query_dedup_bitwise_identical():
+    """Duplicate tenants' selections come from the same U-group computation:
+    identical rows, and identical to an engine seeing only distinct queries."""
+    preds, corpus, bank, combine, table = _world()
+    eng = _engine(_queries(preds), preds, bank, combine, table)
+    assert eng.query_set.num_unique == 2
+    state, hist = eng.run(N, 4)
+    per = state.per_query.in_answer
+    np.testing.assert_array_equal(np.asarray(per[0]), np.asarray(per[2]))
+    eng2 = _engine(_queries(preds)[:2], preds, bank, combine, table)
+    state2, _ = eng2.run(N, 4)
+    np.testing.assert_array_equal(
+        np.asarray(per[:2]), np.asarray(state2.per_query.in_answer)
+    )
+
+
+@pytest.mark.parametrize("function_selection", ["table", "best"])
+def test_engine_pallas_backend_matches_jnp(function_selection):
+    """The engine-level backend='pallas' wiring (not just the ops layer) must
+    track the jnp backend through full scan-driver runs."""
+    preds, corpus, bank, combine, table = _world()
+    kw = dict(function_selection=function_selection)
+    eng_j = _engine(_queries(preds), preds, bank, combine, table,
+                    backend="jnp", **kw)
+    eng_p = _engine(_queries(preds), preds, bank, combine, table,
+                    backend="pallas", **kw)
+    s_j, h_j = eng_j.run(N, 3, driver="scan")
+    s_p, h_p = eng_p.run(N, 3, driver="scan")
+    assert len(h_j) == len(h_p)
+    for a, b in zip(h_j, h_p):
+        # kernel LUT/one-hot gathers vs jnp gathers: equal to f32 tolerance
+        assert a.cost_spent == pytest.approx(b.cost_spent, rel=1e-4)
+        assert a.expected_f == pytest.approx(b.expected_f, rel=1e-3, abs=1e-3)
+        assert a.merged_valid == b.merged_valid
+    np.testing.assert_array_equal(
+        np.asarray(s_j.per_query.in_answer), np.asarray(s_p.per_query.in_answer)
+    )
+
+
+# -------------------------------------------------------- sharded planning --
+
+
+@pytest.mark.parametrize("function_selection", ["table", "best"])
+def test_sharded_planning_byte_identical(function_selection):
+    preds, corpus, bank, combine, table = _world()
+    kw = dict(function_selection=function_selection)
+    eng1 = _engine(_queries(preds), preds, bank, combine, table, **kw)
+    eng2 = _engine(_queries(preds), preds, bank, combine, table,
+                   num_shards=2, **kw)
+    state = eng1.init_state(N)
+    plans1, merged1 = jax.jit(eng1._plan_epoch)(state)
+    plans2, merged2 = jax.jit(eng2._plan_epoch)(state)
+    _assert_plans_identical(plans1, plans2, "plans")
+    _assert_plans_identical(merged1, merged2, "merged")
+    # and whole trajectories agree
+    s1, h1 = eng1.run(N, 4)
+    s2, h2 = eng2.run(N, 4)
+    assert [h.cost_spent for h in h1] == [h.cost_spent for h in h2]
+    np.testing.assert_array_equal(
+        np.asarray(s1.per_query.in_answer), np.asarray(s2.per_query.in_answer)
+    )
+
+
+def test_sharded_planning_validates_divisibility():
+    preds, corpus, bank, combine, table = _world()
+    eng = _engine(_queries(preds), preds, bank, combine, table, num_shards=3)
+    with pytest.raises(ValueError):
+        eng.init_state(N)  # 160 % 3 != 0
+
+
+def _random_plans(seed, *shape_k):
+    rng = np.random.default_rng(seed)
+    k = shape_k
+    return Plan(
+        object_idx=jnp.asarray(rng.integers(0, 40, size=k), jnp.int32),
+        pred_idx=jnp.asarray(rng.integers(0, 3, size=k), jnp.int32),
+        func_idx=jnp.asarray(rng.integers(0, 4, size=k), jnp.int32),
+        benefit=jnp.asarray(rng.uniform(0, 5, size=k).astype(np.float32)),
+        cost=jnp.asarray(rng.uniform(0.1, 1.0, size=k).astype(np.float32)),
+        valid=jnp.asarray(rng.uniform(size=k) < 0.85),
+    )
+
+
+def test_merge_plans_dedup_sharded_matches_flat():
+    """Hierarchical (per-shard lexsort + cross-shard unique) == one-shot dedup
+    over the same entries, for any partition of entries across shards."""
+    plans = _random_plans(3, 4, 6, 8)  # interpreted as [S=4, Q=6, K=8]
+    flat = merge_plans_dedup(plans, num_predicates=3, num_functions=4,
+                             num_objects=40)
+    hier = merge_plans_dedup_sharded(plans, num_predicates=3, num_functions=4,
+                                     num_objects=40)
+    _assert_plans_identical(flat, hier, "dedup")
+    # with a cost budget applied at the final pass
+    flat_b = merge_plans_dedup(plans, 3, 4, cost_budget=3.0, num_objects=40)
+    hier_b = merge_plans_dedup_sharded(plans, 3, 4, cost_budget=3.0,
+                                       num_objects=40)
+    _assert_plans_identical(flat_b, hier_b, "dedup_budget")
+
+
+def test_merge_sharded_plans_exact_matches_select_plan():
+    from repro.core.benefit import TripleBenefits
+
+    n, p, shards, k = 128, 3, 4, 24
+    rng = np.random.default_rng(5)
+    ben = rng.uniform(0, 5, size=(n, p)).astype(np.float32)
+    ben[rng.uniform(size=(n, p)) < 0.1] = -np.inf  # some exhausted lanes
+    tb = TripleBenefits(
+        benefit=jnp.asarray(ben),
+        next_fn=jnp.asarray(
+            np.where(np.isfinite(ben), rng.integers(0, 4, size=(n, p)), -1),
+            jnp.int32,
+        ),
+        est_joint=jnp.asarray(rng.uniform(size=(n, p)).astype(np.float32)),
+        cost=jnp.asarray(rng.uniform(0.1, 1, size=(n, p)).astype(np.float32)),
+    )
+    global_plan = select_plan(tb, plan_size=k)
+    per = n // shards
+    locals_ = []
+    for s in range(shards):
+        sl = TripleBenefits(*(x[s * per:(s + 1) * per] for x in tb))
+        lp = select_plan(sl, plan_size=k)
+        locals_.append(lp._replace(object_idx=lp.object_idx + s * per))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *locals_)
+    merged = merge_sharded_plans_exact(stacked, plan_size=k, num_predicates=p)
+    _assert_plans_identical(global_plan, merged, "exact_reduce")
+
+
+# ------------------------------------------------------------- plan guards --
+
+
+def test_merge_plans_dedup_key_overflow_guard():
+    plans = _random_plans(0, 2, 4)
+    # N * P * F = 2**29 * 3 * 4 > 2**31 -> must raise, not wrap
+    with pytest.raises(ValueError, match="overflows"):
+        merge_plans_dedup(
+            plans, num_predicates=3, num_functions=4, num_objects=2**29
+        )
+    # without num_objects (or under the bound) the int32 path still works
+    ok = merge_plans_dedup(plans, num_predicates=3, num_functions=4,
+                           num_objects=40)
+    assert int(ok.num_valid()) > 0
+
+
+def test_static_plan_benefit_is_descending_rank():
+    m, plan_size = 20, 6
+    order = jnp.arange(m, dtype=jnp.int32)
+    preds = jnp.zeros((m,), jnp.int32)
+    fns = jnp.zeros((m,), jnp.int32)
+    costs = jnp.ones((1, 1), jnp.float32)
+    windows = [
+        static_plan_from_order(order, preds, fns, costs,
+                               jnp.asarray(off, jnp.int32), plan_size)
+        for off in (0, plan_size, 3 * plan_size)
+    ]
+    seen = []
+    for w in windows:
+        b = np.asarray(w.benefit)
+        v = np.asarray(w.valid)
+        assert np.all(np.diff(b[v]) < 0), "rank must strictly descend in-window"
+        assert np.all(np.isfinite(b) == v), "invalid slots carry -inf"
+        seen.extend(b[v].tolist())
+    assert seen == sorted(seen, reverse=True), "rank descends across windows"
+    # dedup keeps the EARLIER (higher-rank) copy of a duplicated triple
+    dup = jax.tree.map(lambda *xs: jnp.stack(xs), windows[0], windows[0])
+    merged = merge_plans_dedup(dup, num_predicates=1, num_functions=1,
+                               num_objects=m)
+    assert int(merged.num_valid()) == plan_size
