@@ -1,0 +1,255 @@
+"""Churn benchmark: one long-lived EngineSession vs rebuild-the-engine.
+
+Serving under churn — objects streaming in, tenants arriving and leaving —
+is the regime the session core exists for.  This benchmark drives the SAME
+scripted arrival trace through two serving strategies:
+
+* **session** — one ``EngineSession`` (capacity-padded substrate, tenant
+  slots): every event is a masked data update, the fused superstep compiles
+  once for the whole trace;
+* **rebuild** — the pre-session strategy: at every event boundary construct a
+  fresh ``MultiQueryEngine`` over the current corpus slice + tenant set,
+  carrying enrichment across phases through the substrate-as-cache
+  (``warm_start``), and paying a full re-trace/compile of every jitted stage.
+
+Both strategies execute identical enrichment work (write-once substrate,
+plan dedup), so the gap is pure serving overhead: recompiles and rebuild
+bookkeeping.  Reported per side: epochs/sec over the whole trace and
+time-to-quality (wall seconds until the mean active-tenant E(F_alpha) first
+reaches the target).  The session side additionally reports the ledger
+reconciliation (per-tenant fair-share totals vs substrate spend) and its
+superstep trace count (must be 1).  Results land in ``BENCH_churn.json``
+with the shared ``meta`` block (capacity / active_tenants / events) so the
+trajectory is machine-checkable across PRs.
+
+    PYTHONPATH=src python -m benchmarks.churn [--full] [--out BENCH_churn.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_meta
+from benchmarks.multi_query import _build_global, _sample_queries
+from repro.core import (
+    EngineSession,
+    MultiQueryConfig,
+    MultiQueryEngine,
+    build_query_set,
+)
+
+
+def _trace(preds, n0: int, pool: int, epochs_per_run: int):
+    """The scripted arrival trace both strategies replay.
+
+    Events: admit two tenants, run; ingest half the pool, run; a third tenant
+    arrives, run; the first tenant leaves, run.  ``arg`` for admit events is
+    the sampled query's index into ``_sample_queries`` output (deterministic).
+    """
+    return [
+        ("admit", 0), ("admit", 1), ("run", epochs_per_run),
+        ("ingest", pool // 2), ("run", epochs_per_run),
+        ("admit", 2), ("run", epochs_per_run),
+        ("retire", 0), ("run", epochs_per_run),
+    ]
+
+
+def _time_to_quality(stamps, target: float):
+    """First wall-clock stamp whose mean active-tenant E(F) holds the target."""
+    for t, f in stamps:
+        if f >= target:
+            return t
+    return None
+
+
+def _run_session(world, queries, trace, n0, plan_size, capacity):
+    preds, evalc, bank, combine, table, _pre = world
+    cfg = MultiQueryConfig(plan_size=plan_size, function_selection="best")
+    session = EngineSession(
+        [p.positive() for p in preds], table, combine, bank.costs,
+        capacity=capacity, max_tenants=8, config=cfg,
+    )
+    state = session.init_state(bank.outputs[:n0])
+    pool_off = n0
+    slots = {}
+    stamps = []  # (wall_s, mean active E(F)) per epoch
+    t0 = time.perf_counter()
+    epochs = 0
+    for kind, arg in trace:
+        if kind == "run":
+            state, hist = session.run(state, arg, stop_when_exhausted=False)
+            epochs += len(hist)
+            for h in hist:
+                stamps.append((time.perf_counter() - t0, h.mean_expected_f))
+        elif kind == "admit":
+            state, slot = session.admit(state, queries[arg][1])
+            slots[arg] = slot
+        elif kind == "ingest":
+            state = session.ingest(
+                state, bank.outputs[pool_off:pool_off + arg]
+            )
+            pool_off += arg
+        else:
+            state = session.retire(state, slots[arg])
+    wall = time.perf_counter() - t0
+    led = state.ledger
+    return dict(
+        wall_s=wall,
+        epochs=epochs,
+        epochs_per_sec=epochs / max(wall, 1e-9),
+        cost_spent=float(state.cost_spent),
+        superstep_traces=session.superstep_traces,
+        ledger=dict(
+            attributed=[float(x) for x in np.asarray(led.attributed)],
+            unattributed=float(led.unattributed),
+            reconcile_abs=abs(float(led.reconcile(state.cost_spent))),
+        ),
+    ), stamps
+
+
+def _run_rebuild(world, queries, trace, n0, plan_size):
+    """Rebuild-the-engine baseline: fresh MultiQueryEngine per event boundary.
+
+    Enrichment carries across phases via warm_start (substrate as cache), so
+    the executed work matches the session; every rebuild re-traces all jitted
+    stages at the new (N, Q) shape — the overhead being measured.
+    """
+    preds, evalc, bank, combine, table, _pre = world
+    from repro.enrich.simulated import SimulatedBank
+
+    n_now = n0
+    tenants: list = []
+    cached = None  # (func_probs [n_prev, P, F], exec_mask)
+    total_cost = 0.0
+    stamps = []
+    t0 = time.perf_counter()
+    epochs = 0
+    for kind, arg in trace:
+        if kind == "admit":
+            tenants.append((arg, queries[arg][1]))
+            continue
+        if kind == "ingest":
+            n_now += arg
+            continue
+        if kind == "retire":
+            tenants = [(i, q) for i, q in tenants if i != arg]
+            continue
+        if not tenants:
+            continue
+        # run: construct the engine for the CURRENT corpus slice + tenant set
+        qset = build_query_set(
+            [q for _, q in tenants],
+            global_predicates=[p.positive() for p in preds],
+        )
+        engine = MultiQueryEngine(
+            qset, table, combine, bank.costs,
+            SimulatedBank(outputs=bank.outputs[:n_now], costs=bank.costs),
+            MultiQueryConfig(plan_size=plan_size, function_selection="best"),
+        )
+        state = engine.init_state(n_now)
+        if cached is not None:
+            probs, mask = cached
+            pad = n_now - probs.shape[0]
+            if pad:
+                probs = jnp.concatenate(
+                    [probs, jnp.full((pad,) + probs.shape[1:], 0.5)], axis=0
+                )
+                mask = jnp.concatenate(
+                    [mask, jnp.zeros((pad,) + mask.shape[1:], bool)], axis=0
+                )
+            state = engine.warm_start(state, probs, mask)
+        state, hist = engine.run_scan(n_now, arg, state=state,
+                                      stop_when_exhausted=False)
+        epochs += len(hist)
+        for h in hist:
+            stamps.append((time.perf_counter() - t0, h.mean_expected_f))
+        total_cost += float(state.substrate.cost_spent)
+        cached = (state.substrate.func_probs, state.substrate.exec_mask)
+    wall = time.perf_counter() - t0
+    return dict(
+        wall_s=wall,
+        epochs=epochs,
+        epochs_per_sec=epochs / max(wall, 1e-9),
+        cost_spent=total_cost,
+    ), stamps
+
+
+def bench_churn(small: bool = True, out_path: str = "BENCH_churn.json"):
+    n0 = 256 if small else 2048
+    capacity = 2 * n0
+    epochs_per_run = 4 if small else 10
+    plan_size = 64 if small else 256
+    num_preds = 6
+    world = _build_global(capacity, num_preds)
+    preds = world[0]
+    queries = _sample_queries(preds, 3, preds_per_query=2)
+    trace = _trace(preds, n0, capacity - n0, epochs_per_run)
+
+    sess_stats, sess_stamps = _run_session(
+        world, queries, trace, n0, plan_size, capacity
+    )
+    reb_stats, reb_stamps = _run_rebuild(world, queries, trace, n0, plan_size)
+
+    # time-to-quality: wall seconds until mean active E(F) reaches 90% of the
+    # session's final level (both strategies end at the same tenant set)
+    target = 0.9 * (sess_stamps[-1][1] if sess_stamps else 0.0)
+    sess_ttq = _time_to_quality(sess_stamps, target)
+    reb_ttq = _time_to_quality(reb_stamps, target)
+    sess_stats["time_to_quality_s"] = sess_ttq
+    reb_stats["time_to_quality_s"] = reb_ttq
+
+    speedup = sess_stats["epochs_per_sec"] / max(reb_stats["epochs_per_sec"], 1e-9)
+    payload = dict(
+        benchmark="churn",
+        meta=bench_meta(
+            capacity=capacity,
+            active_tenants=2,  # at trace end (3 admitted, 1 retired)
+            events=trace,
+        ),
+        config=dict(
+            num_objects=n0, capacity=capacity, plan_size=plan_size,
+            num_preds=num_preds, epochs_per_run=epochs_per_run, small=small,
+            quality_target=target,
+        ),
+        session=sess_stats,
+        rebuild=reb_stats,
+        speedup=speedup,
+    )
+    with open(out_path, "w") as fh:
+        json.dump(payload, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    return [
+        dict(
+            name=f"churn_N{n0}_C{capacity}",
+            us_per_call=1e6 / max(sess_stats["epochs_per_sec"], 1e-9),
+            derived=(
+                f"speedup={speedup:.2f}x"
+                f";session_eps={sess_stats['epochs_per_sec']:.2f}"
+                f";rebuild_eps={reb_stats['epochs_per_sec']:.2f}"
+                f";traces={sess_stats['superstep_traces']}"
+                f";ledger_residual={sess_stats['ledger']['reconcile_abs']:.2e}"
+            ),
+        )
+    ]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--out", default="BENCH_churn.json")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    for r in bench_churn(small=not args.full, out_path=args.out):
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

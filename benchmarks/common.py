@@ -139,3 +139,28 @@ def f1_at_cost(hist, cost: float) -> float:
         if h.cost_spent <= cost and h.true_f1 is not None:
             out = h.true_f1
     return out
+
+
+def bench_meta(
+    capacity: Optional[int] = None,
+    active_tenants=None,
+    events: Optional[list] = None,
+) -> dict:
+    """Machine-readable provenance block every BENCH_*.json payload carries.
+
+    ``capacity`` is the allocated object-row capacity (== num_objects for
+    static benches), ``active_tenants`` the tenant count (an int, or a list
+    when the bench sweeps Q), ``events`` the scripted churn trace as
+    ``[{kind, arg}, ...]`` (empty for churn-free benches).  Keeping the block
+    uniform across BENCH files is what lets cross-PR trajectory tooling
+    compare runs without per-bench parsing.
+    """
+    events = list(events or [])
+    norm = []
+    for ev in events:
+        if isinstance(ev, dict):
+            norm.append(dict(kind=str(ev["kind"]), arg=ev.get("arg")))
+        else:
+            kind, arg = ev
+            norm.append(dict(kind=str(kind), arg=arg))
+    return dict(capacity=capacity, active_tenants=active_tenants, events=norm)

@@ -28,6 +28,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import bench_meta
 from benchmarks.multi_query import _build_global, _sample_queries
 from repro.core import MultiQueryConfig, MultiQueryEngine, build_query_set
 from repro.data.synthetic import truth_answer_mask
@@ -111,6 +112,7 @@ def bench_epoch_superstep(small: bool = True, out_path: str = "BENCH_epoch.json"
     speedup = scan_side["epochs_per_sec"] / max(loop_side["epochs_per_sec"], 1e-9)
     payload = dict(
         benchmark="epoch_superstep",
+        meta=bench_meta(capacity=n, active_tenants=q),
         config=dict(
             num_objects=n, num_queries=q, epochs=epochs, plan_size=plan_size,
             num_preds=6, bank="simulated", small=small,

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import bench_meta
 from repro.core import (
     MultiQueryConfig,
     MultiQueryEngine,
@@ -241,6 +242,7 @@ def bench_multi_query(small: bool = True, out_path: str = "BENCH_multi_query.jso
         )
     payload = dict(
         benchmark="multi_query_dedup",
+        meta=bench_meta(capacity=n, active_tenants=list(qs)),
         config=dict(
             num_objects=n, epochs_cap=epochs, plan_size=plan_size,
             num_preds=num_preds, small=small,

@@ -37,6 +37,13 @@ from repro.core.multi_query import (
     QuerySet,
     build_query_set,
 )
+from repro.core.ledger import CostLedger, attribute_epoch, init_ledger
+from repro.core.session import (
+    EngineSession,
+    SessionDerived,
+    SessionEpochStats,
+    SessionState,
+)
 from repro.core.baselines import StaticOrderEvaluator
 
 __all__ = [
@@ -50,5 +57,7 @@ __all__ = [
     "OperatorConfig", "ProgressiveQueryOperator",
     "MultiQueryEngine", "MultiQueryConfig", "MultiQueryState", "MultiEpochStats",
     "QuerySet", "build_query_set",
+    "EngineSession", "SessionState", "SessionDerived", "SessionEpochStats",
+    "CostLedger", "init_ledger", "attribute_epoch",
     "StaticOrderEvaluator",
 ]

@@ -1,0 +1,111 @@
+"""Per-tenant cost ledger: who pays for a triple several tenants wanted?
+
+The shared substrate charges every (object, predicate, function) triple
+exactly once no matter how many tenants' plans requested it — that is the
+multi-tenant engine's whole point — but production serving needs the spend
+attributed back to tenants (ROADMAP "per-tenant cost attribution/billing").
+The ledger implements **fair-share attribution**: a triple charged this epoch
+splits its cost equally across every tenant slot whose per-slot plan contained
+it as a valid lane (the want-bitmask carried out of
+``plan.merge_plans_dedup_wants``).  Triples nobody's plan wanted — impossible
+under the session superstep, kept as a defensive bucket — accrue to
+``unattributed``.
+
+Accounting identity: summed over tenants (plus ``unattributed``), attributed
+cost equals the substrate's ``cost_spent`` delta for the same epochs — each
+chargeable triple contributes ``n_want * (cost / n_want)``.  In float32 the
+reconciliation is exact whenever ``cost / n_want`` is exact (n_want a power of
+two, dyadic costs) and within a few ulp otherwise; ``reconcile`` exposes the
+residual so serving code can assert its own tolerance.
+
+Everything here is shape-stable pure jnp, so ledger updates live inside the
+session's jitted superstep and cost attribution adds no host syncs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.plan import Plan
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CostLedger:
+    """Cumulative fair-share enrichment spend per tenant slot."""
+
+    attributed: jax.Array  # [S] f32: cost attributed to each slot
+    triples: jax.Array  # [S] f32: fractional triple count (1/n_want shares)
+    wanted: jax.Array  # [S] int32: chargeable triples each slot's plans wanted
+    unattributed: jax.Array  # [] f32: charged cost with no wanting tenant
+
+    @property
+    def num_slots(self) -> int:
+        return self.attributed.shape[0]
+
+    def total(self) -> jax.Array:
+        """[] f32: everything the ledger accounts for (tenants + orphans)."""
+        return jnp.sum(self.attributed) + self.unattributed
+
+    def reconcile(self, cost_spent: jax.Array) -> jax.Array:
+        """[] f32 residual vs the substrate's cumulative spend (0 == exact)."""
+        return cost_spent - self.total()
+
+
+def init_ledger(num_slots: int, dtype=jnp.float32) -> CostLedger:
+    return CostLedger(
+        attributed=jnp.zeros((num_slots,), dtype),
+        triples=jnp.zeros((num_slots,), dtype),
+        wanted=jnp.zeros((num_slots,), jnp.int32),
+        unattributed=jnp.zeros((), dtype),
+    )
+
+
+def want_matrix(want_bits: jax.Array, num_slots: int) -> jax.Array:
+    """Expand [..., W] uint32 want-bitmask words into [..., S] bool."""
+    q = jnp.arange(num_slots, dtype=jnp.uint32)
+    words = want_bits[..., (q // jnp.uint32(32)).astype(jnp.int32)]
+    return ((words >> (q % jnp.uint32(32))) & jnp.uint32(1)).astype(bool)
+
+
+def attribute_epoch(
+    ledger: CostLedger,
+    merged: Plan,  # [M] deduplicated epoch plan
+    want_bits: jax.Array,  # [M, W] uint32 from merge_plans_dedup_wants
+    chargeable: jax.Array,  # [M] bool: lanes the substrate newly charged
+) -> CostLedger:
+    """Fold one executed epoch plan into the ledger.
+
+    Each chargeable lane's cost splits equally across its wanters; lanes the
+    write-once substrate did not charge (cross-epoch repeats) attribute
+    nothing, exactly mirroring ``apply_outputs_to_substrate``'s charging rule
+    so ledger totals track ``cost_spent``.
+    """
+    want = want_matrix(want_bits, ledger.num_slots)  # [M, S]
+    n_want = jnp.sum(
+        jax.lax.population_count(want_bits).astype(jnp.int32), axis=-1
+    )  # [M]
+    live = chargeable & merged.valid
+    share = jnp.where(
+        live & (n_want > 0),
+        merged.cost / jnp.maximum(n_want, 1).astype(merged.cost.dtype),
+        0.0,
+    )  # [M]
+    frac = jnp.where(
+        live & (n_want > 0),
+        1.0 / jnp.maximum(n_want, 1).astype(merged.cost.dtype),
+        0.0,
+    )
+    per_slot = jnp.sum(share[:, None] * want, axis=0)  # [S]
+    per_slot_frac = jnp.sum(frac[:, None] * want, axis=0)
+    per_slot_wanted = jnp.sum(live[:, None] & want, axis=0).astype(jnp.int32)
+    orphan = jnp.sum(jnp.where(live & (n_want == 0), merged.cost, 0.0))
+    return CostLedger(
+        attributed=ledger.attributed + per_slot,
+        triples=ledger.triples + per_slot_frac,
+        wanted=ledger.wanted + per_slot_wanted,
+        unattributed=ledger.unattributed + orphan,
+    )

@@ -109,9 +109,29 @@ class QuerySet:
         predicate the corpus supports (the corpus schema, not the current
         tenants) when late admission is expected.
         """
+        self.check_admissible(query)
         return build_query_set(
             self.queries + (query,), global_predicates=self.global_predicates
         )
+
+    def check_admissible(self, query: CompiledQuery) -> None:
+        """Reject queries the compiled predicate space cannot serve, loudly.
+
+        The substrate and every jitted stage are compiled at
+        ``num_predicates`` columns; a query referencing predicates outside
+        the space would otherwise surface as a shape/index error deep inside
+        ``evaluate_batched``.  Raises ValueError naming the offending
+        predicates and the fix (rebuild with the corpus schema).
+        """
+        missing = [p for p in query.predicates if p not in self.global_predicates]
+        if missing:
+            raise ValueError(
+                f"query references {len(missing)} predicate(s) outside the "
+                f"compiled global space (num_predicates={self.num_predicates}): "
+                f"{missing}; the substrate's P axis is fixed at engine "
+                "construction — build the initial QuerySet over the full "
+                "corpus schema (global_predicates=...) to admit this query"
+            )
 
 
 def build_query_set(
@@ -150,6 +170,49 @@ def build_query_set(
         unique_rows=jnp.asarray(unique_rows, jnp.int32),
         unique_index=jnp.asarray(unique_index, jnp.int32),
     )
+
+
+def select_plans_batched(
+    benefits: TripleBenefits,  # [Q, N, P] leaves
+    plan_size: int,
+    num_shards: int,
+    num_predicates: int,
+) -> plan_lib.Plan:
+    """Per-query plan selection, optionally sharded over the object axis.
+
+    With ``num_shards=S``: every shard top-ks its own [N/S, P] slice (the
+    per-device program under a ("pod", "data") shard_map — emulated here
+    with a reshape + vmap, which lowers to the identical local compute),
+    then the survivors reduce through the EXACT cross-shard merge, so the
+    result is byte-identical to the unsharded top-k on every valid lane.
+    Shared by ``MultiQueryEngine`` and ``EngineSession`` (``core.session``).
+    """
+    sel = functools.partial(plan_lib.select_plan, plan_size=plan_size)
+    if num_shards <= 1:
+        return jax.vmap(sel)(benefits)
+    s = num_shards
+    q, n, p = benefits.benefit.shape
+    per_shard = n // s
+
+    def reshard(x):  # [Q, N, P] -> [S, Q, N/S, P]
+        return x.reshape(q, s, per_shard, p).transpose(1, 0, 2, 3)
+
+    local = TripleBenefits(*(reshard(x) for x in benefits))
+    local_plans = jax.vmap(jax.vmap(sel))(local)  # [S, Q, K]
+    offsets = (jnp.arange(s, dtype=jnp.int32) * per_shard)[:, None, None]
+    local_plans = local_plans._replace(
+        object_idx=local_plans.object_idx + offsets
+    )
+    by_query = jax.tree.map(
+        lambda x: x.transpose(1, 0, 2), local_plans
+    )  # [Q, S, K]
+    return jax.vmap(
+        functools.partial(
+            plan_lib.merge_sharded_plans_exact,
+            plan_size=plan_size,
+            num_predicates=num_predicates,
+        )
+    )(by_query)
 
 
 # ------------------------------------------------------------ engine state --
@@ -346,8 +409,10 @@ class MultiQueryEngine:
         Routes through ``state.with_cached_state`` with the substrate as the
         cache (paper §5): the query's first answer set already reflects every
         enrichment earlier tenants paid for.  Q grows by one, which re-traces
-        the jitted stages at the new shape.
+        the jitted stages at the new shape (``core.session.EngineSession``
+        admits into pre-allocated slots without retracing).
         """
+        self.query_set.check_admissible(query)
         if (
             self.config.function_selection == "best"
             or self.config.backend == "pallas"
@@ -486,41 +551,12 @@ class MultiQueryEngine:
         return TripleBenefits(benefit=benefit, next_fn=nf, est_joint=est_joint, cost=cost)
 
     def _select_plans(self, benefits: TripleBenefits) -> plan_lib.Plan:
-        """Per-query plan selection, optionally sharded over the object axis.
-
-        With ``num_shards=S``: every shard top-ks its own [N/S, P] slice (the
-        per-device program under a ("pod", "data") shard_map — emulated here
-        with a reshape + vmap, which lowers to the identical local compute),
-        then the survivors reduce through the EXACT cross-shard merge, so the
-        result is byte-identical to the unsharded top-k on every valid lane.
-        """
-        cfg = self.config
-        sel = functools.partial(plan_lib.select_plan, plan_size=cfg.plan_size)
-        if cfg.num_shards <= 1:
-            return jax.vmap(sel)(benefits)
-        s = cfg.num_shards
-        q, n, p = benefits.benefit.shape
-        per_shard = n // s
-
-        def reshard(x):  # [Q, N, P] -> [S, Q, N/S, P]
-            return x.reshape(q, s, per_shard, p).transpose(1, 0, 2, 3)
-
-        local = TripleBenefits(*(reshard(x) for x in benefits))
-        local_plans = jax.vmap(jax.vmap(sel))(local)  # [S, Q, K]
-        offsets = (jnp.arange(s, dtype=jnp.int32) * per_shard)[:, None, None]
-        local_plans = local_plans._replace(
-            object_idx=local_plans.object_idx + offsets
+        return select_plans_batched(
+            benefits,
+            plan_size=self.config.plan_size,
+            num_shards=self.config.num_shards,
+            num_predicates=self.query_set.num_predicates,
         )
-        by_query = jax.tree.map(
-            lambda x: x.transpose(1, 0, 2), local_plans
-        )  # [Q, S, K]
-        return jax.vmap(
-            functools.partial(
-                plan_lib.merge_sharded_plans_exact,
-                plan_size=cfg.plan_size,
-                num_predicates=self.query_set.num_predicates,
-            )
-        )(by_query)
 
     def _plan_epoch(self, state: MultiQueryState) -> tuple[plan_lib.Plan, plan_lib.Plan]:
         """-> (per-query plans [Q, K], merged deduplicated plan [M])."""

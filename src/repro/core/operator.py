@@ -53,6 +53,7 @@ def candidate_mask(
     in_answer: jax.Array,  # [N] bool
     strategy: str,
     pred_mask: Optional[jax.Array] = None,  # [P] bool: predicates the query uses
+    row_valid: Optional[jax.Array] = None,  # [N] bool: rows holding real objects
 ) -> jax.Array:
     """[N] bool candidate restriction (§4.1 + the beyond-paper "auto" widening).
 
@@ -60,6 +61,13 @@ def candidate_mask(
     predicate columns — required in the multi-query engine where ``P`` spans
     the global predicate space and a query must not let other tenants'
     columns drag its entropy statistics around.
+
+    ``row_valid`` restricts the "auto" median to rows holding real objects —
+    required by the capacity-padded session (``core.session``) where invalid
+    rows carry cold prior entropy that would drag the corpus median toward
+    the prior.  With every row valid the masked median is the plain median
+    bitwise (same sort, same middle-pair mean), so the padded path degenerates
+    exactly to this one at capacity == N.
     """
     if strategy == "all":
         return jnp.ones(in_answer.shape, bool)
@@ -77,9 +85,26 @@ def candidate_mask(
         else:
             denom = jnp.maximum(jnp.sum(pred_mask), 1)
             mean_h = jnp.sum(jnp.where(pred_mask[None, :], uncertainty, 0.0), -1) / denom
-        med = jnp.median(mean_h)
+        if row_valid is None:
+            med = jnp.median(mean_h)
+        else:
+            med = _masked_median(mean_h, row_valid)
         return (~in_answer) | (mean_h >= jnp.maximum(med, 0.35))
     return ~in_answer  # "outside_answer" — paper section 4.1 (Fig. 7 benchmarks)
+
+
+def _masked_median(values: jax.Array, valid: jax.Array) -> jax.Array:
+    """Median over the valid entries of ``values`` (shape-stable under jit).
+
+    Invalid entries sort to +inf; the median indices come from the valid
+    count.  Matches ``jnp.median`` bitwise when every entry is valid: same
+    ascending sort, same (lo + hi) / 2 middle-pair mean.
+    """
+    s = jnp.sort(jnp.where(valid, values, jnp.inf))
+    nv = jnp.maximum(jnp.sum(valid), 1)
+    lo = (nv - 1) // 2
+    hi = nv // 2
+    return (s[lo] + s[hi]) / 2
 
 
 def restrict_benefits(

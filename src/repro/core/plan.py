@@ -178,6 +178,33 @@ def _triple_keys(
     return jnp.where(plan.valid, key, sentinel), sentinel
 
 
+def _dedup_merge_core(flat: Plan, key, sentinel, capacity, cost_budget):
+    """Shared lexsort-dedup-compact pass over flattened plan entries.
+
+    Returns (merged, order, first, top_idx): the merged plan plus the sort
+    permutation, the first-occurrence mask (in sorted position), and the
+    sorted positions selected into the merged plan — enough for callers to
+    attach per-key aggregates (e.g. tenant want-bitmasks) to merged lanes.
+    """
+    # primary: key ascending; secondary: benefit descending, so the first
+    # occurrence of each key is the max-benefit copy across queries
+    order = jnp.lexsort((-flat.benefit, key))
+    k_sorted = key[order]
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), k_sorted[1:] != k_sorted[:-1]]
+    )
+    uniq = first & (k_sorted != sentinel)
+    score = jnp.where(uniq, flat.benefit[order], -jnp.inf)
+    top_vals, top_idx = jax.lax.top_k(score, capacity)
+    sel = order[top_idx]
+    merged = jax.tree.map(lambda x: x[sel], flat)
+    valid = jnp.isfinite(top_vals)
+    if cost_budget is not None:
+        csum = jnp.cumsum(jnp.where(valid, merged.cost, 0.0))
+        valid = valid & (csum <= cost_budget)
+    return merged._replace(valid=valid), order, first, top_idx
+
+
 def merge_plans_dedup(
     plans: Plan,
     num_predicates: int,
@@ -211,23 +238,68 @@ def merge_plans_dedup(
     key, sentinel = _triple_keys(
         flat, num_predicates, num_functions, num_objects=num_objects
     )
-    # primary: key ascending; secondary: benefit descending, so the first
-    # occurrence of each key is the max-benefit copy across queries
-    order = jnp.lexsort((-flat.benefit, key))
-    k_sorted = key[order]
-    first = jnp.concatenate(
-        [jnp.ones((1,), bool), k_sorted[1:] != k_sorted[:-1]]
+    merged, _, _, _ = _dedup_merge_core(flat, key, sentinel, capacity, cost_budget)
+    return merged
+
+
+def merge_plans_dedup_wants(
+    plans: Plan,  # [Q, K]: leading axis MUST be the tenant-slot axis
+    num_predicates: int,
+    num_functions: int,
+    num_slots: int | None = None,
+    capacity: int | None = None,
+    cost_budget: float | jax.Array | None = None,
+    num_objects: int | None = None,
+) -> tuple[Plan, jax.Array]:
+    """``merge_plans_dedup`` that also reports WHICH tenants wanted each triple.
+
+    Returns ``(merged, want_bits)`` where ``want_bits`` is ``[M, W]`` uint32,
+    ``W = ceil(num_slots / 32)``: bit ``q`` (little-endian across words) of
+    row ``m`` is set iff slot ``q``'s plan contained merged triple ``m`` as a
+    valid lane.  This is the ledger's raw material (``core.ledger``): the
+    fair-share split of a deduped triple's cost needs the full wanter set, not
+    just the max-benefit owner the merge keeps.
+
+    The bitmask is built with a scatter-add over (key-group, word) — exact
+    because a single slot's plan never contains the same triple twice
+    (``select_plan`` top-ks distinct lanes), so add == bitwise OR.  The merged
+    plan itself is bitwise identical to ``merge_plans_dedup`` on the same
+    entries; lanes invalidated by the merge (top-k fill, cost budget) carry a
+    zero bitmask.
+    """
+    if plans.object_idx.ndim != 2:
+        raise ValueError(
+            "merge_plans_dedup_wants requires [Q, K] plans (slot-major); got "
+            f"shape {plans.object_idx.shape}"
+        )
+    q, k = plans.object_idx.shape
+    if num_slots is None:
+        num_slots = q
+    if q > num_slots:
+        raise ValueError(f"plans carry {q} slots > num_slots={num_slots}")
+    flat = jax.tree.map(lambda x: x.reshape(-1), plans)
+    total = flat.object_idx.shape[0]
+    if capacity is None:
+        capacity = total
+    capacity = min(capacity, total)
+    key, sentinel = _triple_keys(
+        flat, num_predicates, num_functions, num_objects=num_objects
     )
-    uniq = first & (k_sorted != sentinel)
-    score = jnp.where(uniq, flat.benefit[order], -jnp.inf)
-    top_vals, top_idx = jax.lax.top_k(score, capacity)
-    sel = order[top_idx]
-    merged = jax.tree.map(lambda x: x[sel], flat)
-    valid = jnp.isfinite(top_vals)
-    if cost_budget is not None:
-        csum = jnp.cumsum(jnp.where(valid, merged.cost, 0.0))
-        valid = valid & (csum <= cost_budget)
-    return merged._replace(valid=valid)
+    merged, order, first, top_idx = _dedup_merge_core(
+        flat, key, sentinel, capacity, cost_budget
+    )
+    words = (num_slots + 31) // 32
+    slot = (jnp.arange(total, dtype=jnp.uint32) // jnp.uint32(k))[order]
+    valid_sorted = key[order] != sentinel
+    bit = jnp.where(
+        valid_sorted, jnp.uint32(1) << (slot % jnp.uint32(32)), jnp.uint32(0)
+    )
+    group = jnp.cumsum(first) - 1  # key-group id per sorted position
+    acc = jnp.zeros((total, words), jnp.uint32).at[
+        group, (slot // jnp.uint32(32)).astype(jnp.int32)
+    ].add(bit)
+    want_bits = jnp.where(merged.valid[:, None], acc[group[top_idx]], jnp.uint32(0))
+    return merged, want_bits
 
 
 def merge_plans_dedup_sharded(

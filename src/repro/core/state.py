@@ -113,13 +113,84 @@ def init_substrate(
     num_functions: int,
     prior: float = 0.5,
     dtype=jnp.float32,
+    capacity: Optional[int] = None,
 ) -> SharedSubstrate:
-    n, p, f = num_objects, num_predicates, num_functions
+    """Allocate a substrate, optionally capacity-padded for streaming ingestion.
+
+    With ``capacity > num_objects`` the tensors are allocated at
+    ``[capacity, P, F]`` so newly ingested objects land in pre-allocated rows
+    without changing any jit-traced shape (``core.session``).  Padded rows are
+    indistinguishable from never-enriched objects (prior probs, empty exec
+    mask); callers track which rows hold real objects via a row-validity mask
+    (``row_validity``) and must exclude invalid rows from planning/selection.
+    """
+    if capacity is None:
+        capacity = num_objects
+    if capacity < num_objects:
+        raise ValueError(f"capacity={capacity} < num_objects={num_objects}")
+    n, p, f = capacity, num_predicates, num_functions
     return SharedSubstrate(
         func_probs=jnp.full((n, p, f), prior, dtype),
         exec_mask=jnp.zeros((n, p, f), bool),
         cost_spent=jnp.zeros((), dtype),
     )
+
+
+def row_validity(capacity: int, num_rows: jax.Array) -> jax.Array:
+    """[capacity] bool: rows [0, num_rows) hold real objects.
+
+    Objects are ingested in row order (append-only), so validity is a prefix
+    mask derived from one traced scalar — flipping it admits new rows into
+    planning without retracing anything.
+    """
+    return jnp.arange(capacity, dtype=jnp.int32) < num_rows
+
+
+def pad_rows(x: jax.Array, capacity: int, fill) -> jax.Array:
+    """Pad axis 0 of ``x`` up to ``capacity`` rows with ``fill``."""
+    n = x.shape[0]
+    if n > capacity:
+        raise ValueError(f"cannot pad {n} rows into capacity {capacity}")
+    if n == capacity:
+        return jnp.asarray(x)
+    pad = jnp.full((capacity - n,) + x.shape[1:], fill, x.dtype)
+    return jnp.concatenate([jnp.asarray(x), pad], axis=0)
+
+
+def ingest_rows(
+    buffer: jax.Array,  # [C, ...] capacity-padded row buffer
+    num_rows: jax.Array,  # [] int32: rows currently valid
+    new_rows: jax.Array,  # [M, ...] rows to append
+) -> tuple[jax.Array, jax.Array]:
+    """Append ``new_rows`` into the next free rows of a capacity-padded buffer.
+
+    -> (buffer', num_rows + M).  Pure data movement (dynamic_update_slice at a
+    traced offset): the buffer shape never changes, so downstream jitted
+    programs keyed on it never retrace.  Callers bound-check M against the
+    remaining capacity host-side (``EngineSession.ingest``).
+    """
+    start = (jnp.asarray(num_rows, jnp.int32),) + (0,) * (buffer.ndim - 1)
+    out = jax.lax.dynamic_update_slice(buffer, new_rows.astype(buffer.dtype), start)
+    return out, jnp.asarray(num_rows, jnp.int32) + jnp.int32(new_rows.shape[0])
+
+
+def chargeable_mask(
+    substrate: SharedSubstrate,
+    object_idx: jax.Array,  # [K] int32
+    pred_idx: jax.Array,  # [K] int32
+    func_idx: jax.Array,  # [K] int32
+    valid: jax.Array,  # [K] bool
+) -> jax.Array:
+    """[K] bool: which plan lanes the write-once substrate would charge.
+
+    THE charging rule — ``apply_outputs_to_substrate`` consumes it for
+    ``cost_spent`` and the session superstep feeds the same mask to the cost
+    ledger, so per-tenant attribution reconciles with the substrate by
+    construction rather than by two copies staying in sync.
+    """
+    obj_safe = jnp.clip(object_idx, 0, substrate.num_objects - 1)
+    already = substrate.exec_mask[obj_safe, pred_idx, func_idx]
+    return valid & ~already
 
 
 def apply_outputs_to_substrate(
@@ -140,9 +211,7 @@ def apply_outputs_to_substrate(
     ``plan.merge_plans_dedup``); this guard covers cross-epoch repeats.
     """
     n = substrate.num_objects
-    obj_safe = jnp.clip(object_idx, 0, n - 1)
-    already = substrate.exec_mask[obj_safe, pred_idx, func_idx]
-    chargeable = valid & ~already
+    chargeable = chargeable_mask(substrate, object_idx, pred_idx, func_idx, valid)
     obj = jnp.where(valid, object_idx, n)  # out-of-range drops the scatter
     fp = substrate.func_probs.at[obj, pred_idx, func_idx].set(
         probs, mode="drop", unique_indices=False

@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.configs.archs import get_config
 from repro.core import (
+    EngineSession,
     MultiQueryConfig,
     MultiQueryEngine,
     OperatorConfig,
@@ -300,6 +301,158 @@ def serve_queries(
     )
 
 
+# ------------------------------------------------------------ session serving --
+
+
+def build_session_server(
+    num_objects: int = 256,
+    capacity: Optional[int] = None,
+    num_preds: int = 4,
+    max_tenants: int = 8,
+    seed: int = 0,
+    train_size: int = 512,
+    plan_size: int = 64,
+    plan_shards: int = 1,
+    backend: str = "jnp",
+):
+    """Long-lived serving session over a simulated (AUC-calibrated) corpus.
+
+    The session owns a capacity-padded output buffer, so its execution bank is
+    traceable inside the fused superstep — that is what makes ingest/admit/
+    retire pure data events (``core.session``).  The model-cascade bank stays
+    on the per-request ``MultiQueryEngine`` loop path above.
+
+    -> (session, state, ingest_pool, preds): ``ingest_pool`` holds the
+    remaining ``capacity - num_objects`` objects' pre-materialized outputs,
+    streamed in by ``ingest`` trace events.
+    """
+    if capacity is None:
+        capacity = 2 * num_objects
+    preds = [Predicate(i, 1) for i in range(num_preds)]
+    corpus = make_corpus(
+        jax.random.PRNGKey(seed), capacity + train_size,
+        [p.tag_type for p in preds], [p.tag for p in preds],
+        selectivity=[0.3] * num_preds,
+        aucs=[0.60, 0.88, 0.93, 0.97], costs=[0.01, 0.05, 0.2, 0.5],
+    )
+    train, evalc = split_corpus(corpus, train_size)
+    combine = fit_combine_weights(
+        train.func_probs, train.truth_pred.astype(jnp.float32), steps=150
+    )
+    table = learn_decision_table(train.func_probs, combine, num_bins=10)
+    session = EngineSession(
+        [p.positive() for p in preds], table, combine, evalc.costs,
+        capacity=capacity, max_tenants=max_tenants,
+        config=MultiQueryConfig(
+            plan_size=plan_size, function_selection="best",
+            num_shards=plan_shards, backend=backend,
+        ),
+    )
+    state = session.init_state(evalc.func_probs[:num_objects])
+    pool = evalc.func_probs[num_objects:capacity]
+    return session, state, pool, preds
+
+
+def parse_trace(spec: str) -> list:
+    """``"admit:2;run:4;ingest:64;retire:0;run:4"`` -> [(kind, int_arg), ...].
+
+    Kinds: ``run:<epochs>`` scan epochs, ``admit:<k>`` admit a random
+    conjunction of k schema predicates, ``ingest:<m>`` stream m pooled
+    objects, ``retire:<slot>`` retire a tenant slot.
+    """
+    events = []
+    for tok in spec.replace(",", ";").split(";"):
+        tok = tok.strip()
+        if not tok:
+            continue
+        kind, _, arg = tok.partition(":")
+        if kind not in ("run", "admit", "ingest", "retire"):
+            raise ValueError(f"unknown trace event {tok!r}")
+        arg = int(arg)
+        # negative/zero args would silently corrupt the serve loop (e.g. a
+        # negative ingest rewinds the pool cursor, duplicating objects)
+        if kind in ("run", "ingest", "admit") and arg < 1:
+            raise ValueError(f"trace event {tok!r}: arg must be >= 1")
+        if kind == "retire" and arg < 0:
+            raise ValueError(f"trace event {tok!r}: slot must be >= 0")
+        events.append((kind, arg))
+    return events
+
+
+@dataclasses.dataclass
+class SessionServeReport:
+    epochs: int
+    events: list
+    cost_spent: float
+    mean_expected_f: float  # over active tenants at the end
+    active_tenants: int
+    num_rows: int
+    attributed: list  # [S] per-tenant ledger totals
+    unattributed: float
+    superstep_traces: int
+    wall_s: float
+    history: list
+
+
+def serve_session_trace(
+    session: EngineSession,
+    state,
+    events: list,  # [(kind, arg)] from parse_trace
+    pool=None,  # [R, P, F] outputs available to ingest events
+    preds=None,  # schema predicates, for admit events
+    seed: int = 0,
+    preemption: Optional[PreemptionHandler] = None,
+) -> SessionServeReport:
+    """Drive a scripted arrival trace through one long-lived session.
+
+    Every event between runs is a masked data update; the report's
+    ``superstep_traces`` staying 1 is the churn-without-retrace witness.
+    """
+    rng = np.random.default_rng(seed)
+    pool_off = 0
+    history = []
+    t0 = time.perf_counter()
+    for kind, arg in events:
+        if preemption is not None and preemption.should_stop:
+            break
+        if kind == "run":
+            state, h = session.run(state, arg, stop_when_exhausted=False)
+            history.extend(h)
+        elif kind == "admit":
+            if preds is None:
+                raise ValueError("admit events need the schema predicates")
+            k = min(max(1, arg), len(preds))
+            cols = sorted(rng.choice(len(preds), size=k, replace=False))
+            state, slot = session.admit(
+                state, conjunction(*[preds[c] for c in cols])
+            )
+        elif kind == "ingest":
+            if pool is None or pool_off + arg > pool.shape[0]:
+                raise ValueError(
+                    f"ingest of {arg} exceeds the remaining pool "
+                    f"({0 if pool is None else pool.shape[0] - pool_off})"
+                )
+            state = session.ingest(state, pool[pool_off:pool_off + arg])
+            pool_off += arg
+        else:  # retire
+            state = session.retire(state, arg)
+    wall = time.perf_counter() - t0
+    last = history[-1] if history else None
+    return SessionServeReport(
+        epochs=len(history),
+        events=[dict(kind=k, arg=a) for k, a in events],
+        cost_spent=float(state.cost_spent),
+        mean_expected_f=last.mean_expected_f if last else 0.0,
+        active_tenants=int(np.asarray(state.active).sum()),
+        num_rows=int(state.num_rows),
+        attributed=[float(x) for x in np.asarray(state.ledger.attributed)],
+        unattributed=float(state.ledger.unattributed),
+        superstep_traces=session.superstep_traces,
+        wall_s=wall,
+        history=history,
+    )
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--objects", type=int, default=512)
@@ -314,9 +467,56 @@ def main(argv=None):
                          "shards (byte-identical to unsharded planning)")
     ap.add_argument("--backend", default="jnp", choices=("jnp", "pallas"),
                     help="benefit-scoring backend for the multi-tenant engine")
+    ap.add_argument("--session", action="store_true",
+                    help="serve a long-lived EngineSession driven by a "
+                         "scripted ingest/admit/retire arrival trace")
+    ap.add_argument("--capacity", type=int, default=None,
+                    help="session row capacity (default 2x --objects)")
+    ap.add_argument("--max-tenants", type=int, default=8,
+                    help="pre-allocated session tenant slots")
+    ap.add_argument("--trace", default=None,
+                    help="session arrival trace, e.g. "
+                         "'admit:2;run:4;ingest:64;admit:3;run:4;retire:0;run:4'")
     args = ap.parse_args(argv)
 
     handler = PreemptionHandler().install()
+    if args.session:
+        session, state, pool, preds = build_session_server(
+            num_objects=args.objects, capacity=args.capacity,
+            num_preds=max(args.preds, 2), max_tenants=args.max_tenants,
+            plan_shards=args.plan_shards, backend=args.backend,
+        )
+        e = max(args.epochs // 4, 1)
+        spec = args.trace or (
+            f"admit:2;admit:2;run:{e};ingest:{pool.shape[0] // 2};run:{e};"
+            f"admit:3;run:{e};retire:0;run:{e}"
+        )
+        events = parse_trace(spec)
+        report = serve_session_trace(
+            session, state, events, pool=pool, preds=preds,
+            preemption=handler,
+        )
+        eps = report.epochs / max(report.wall_s, 1e-9)
+        bills = {i: f"{c:.3f}" for i, c in enumerate(report.attributed) if c > 0}
+        print(
+            f"[serve] session trace {spec!r}: {report.epochs} epochs, "
+            f"{report.num_rows} rows, {report.active_tenants} active tenants, "
+            f"cost={report.cost_spent:.4f}s-model, "
+            f"mean E(F1)={report.mean_expected_f:.3f}, "
+            f"ledger={bills} (+{report.unattributed:.4f} unattributed), "
+            f"superstep traces={report.superstep_traces}, "
+            f"wall={report.wall_s:.1f}s ({eps:.2f} epochs/s)"
+        )
+        # each DISTINCT run length legitimately compiles its own scan program;
+        # anything beyond that means a churn event re-traced the superstep
+        expected = max(len({a for k, a in events if k == "run"}), 1)
+        if report.superstep_traces > expected:
+            print(
+                f"[serve] WARNING: superstep re-traced under churn "
+                f"({report.superstep_traces} traces for {expected} scan shapes)"
+            )
+            return 1
+        return 0
     if args.queries > 1:
         engine, corpus, truths, qualities, queries = build_multi_server(
             args.objects, args.preds, args.queries, args.backbone,

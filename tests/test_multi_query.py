@@ -247,6 +247,63 @@ def test_admission_warm_starts_from_substrate():
         eng_best.admit(st_b, compile_query(Or(preds[0], preds[1])))
 
 
+def test_admit_rejects_predicates_outside_compiled_space():
+    """A query whose predicate set exceeds the compiled num_predicates fails
+    loudly at admission, not deep inside evaluate_batched."""
+    preds, corpus, bank, combine, table = _world()
+    eng = _engine([conjunction(preds[0], preds[1])], preds, bank, combine, table)
+    state = eng.init_state(N)
+    alien = Predicate(17, 1)
+    with pytest.raises(ValueError, match="outside the compiled global space"):
+        eng.admit(state, conjunction(preds[0], alien))
+    # QuerySet.add enforces the same contract for direct callers
+    with pytest.raises(ValueError, match="outside the compiled global space"):
+        eng.query_set.add(conjunction(alien))
+    # the engine is untouched by the failed admission
+    assert eng.query_set.num_queries == 1
+    state, sel, *_ = eng.run_epoch(state)
+    assert sel.mask.shape[0] == 1
+
+
+def test_admit_duplicate_tenant_dedups_via_unique_rows():
+    """Admitting a duplicate of an existing tenant must join its distinct-query
+    group (derived compute stays per-DISTINCT-query) with identical answers."""
+    preds, corpus, bank, combine, table = _world()
+    q = conjunction(preds[0], preds[1])
+    eng = _engine([q, conjunction(preds[1], preds[2])], preds, bank, combine, table)
+    state = eng.init_state(N)
+    for _ in range(2):
+        state, *_ = eng.run_epoch(state)
+    assert eng.query_set.num_unique == 2
+    state = eng.admit(state, conjunction(preds[0], preds[1]))
+    assert eng.query_set.num_queries == 3
+    assert eng.query_set.num_unique == 2  # deduped into tenant 0's group
+    assert int(eng.query_set.unique_index[2]) == int(eng.query_set.unique_index[0])
+    state, sel, *_ = eng.run_epoch(state)
+    np.testing.assert_array_equal(np.asarray(sel.mask[2]), np.asarray(sel.mask[0]))
+    np.testing.assert_array_equal(
+        np.asarray(state.per_query.in_answer[2]),
+        np.asarray(state.per_query.in_answer[0]),
+    )
+
+
+def test_admit_after_run_scan_epochs():
+    """Admission after the scan driver has completed epochs: the scan cache is
+    invalidated, Q grows, and both drivers keep running on the new shape."""
+    preds, corpus, bank, combine, table = _world()
+    eng = _engine([conjunction(preds[0], preds[1])], preds, bank, combine, table)
+    state, hist = eng.run_scan(N, 3)
+    assert len(eng._scan_cache) == 1
+    spent = float(state.cost_spent)
+    state = eng.admit(state, conjunction(preds[1], preds[2]))
+    assert not eng._scan_cache  # stale Q=1 program dropped
+    assert float(state.cost_spent) == pytest.approx(spent)
+    state, hist2 = eng.run_scan(N, 3, state=state)
+    assert state.per_query.num_queries == 2
+    assert len(hist2) == 3
+    assert hist2[-1].cost_spent > spent
+
+
 def test_non_conjunctive_query_set_runs():
     preds, corpus, bank, combine, table = _world()
     q_or = compile_query(Or(preds[0], preds[2]))
