@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import bench_meta
+from benchmarks.common import bench_meta, time_to_quality
 from benchmarks.multi_query import _build_global, _sample_queries
 from repro.core import (
     EngineSession,
@@ -59,14 +59,6 @@ def _trace(preds, n0: int, pool: int, epochs_per_run: int):
         ("admit", 2), ("run", epochs_per_run),
         ("retire", 0), ("run", epochs_per_run),
     ]
-
-
-def _time_to_quality(stamps, target: float):
-    """First wall-clock stamp whose mean active-tenant E(F) holds the target."""
-    for t, f in stamps:
-        if f >= target:
-            return t
-    return None
 
 
 def _run_session(world, queries, trace, n0, plan_size, capacity):
@@ -200,8 +192,8 @@ def bench_churn(small: bool = True, out_path: str = "BENCH_churn.json"):
     # time-to-quality: wall seconds until mean active E(F) reaches 90% of the
     # session's final level (both strategies end at the same tenant set)
     target = 0.9 * (sess_stamps[-1][1] if sess_stamps else 0.0)
-    sess_ttq = _time_to_quality(sess_stamps, target)
-    reb_ttq = _time_to_quality(reb_stamps, target)
+    sess_ttq = time_to_quality(sess_stamps, target)
+    reb_ttq = time_to_quality(reb_stamps, target)
     sess_stats["time_to_quality_s"] = sess_ttq
     reb_stats["time_to_quality_s"] = reb_ttq
 

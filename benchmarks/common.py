@@ -141,6 +141,19 @@ def f1_at_cost(hist, cost: float) -> float:
     return out
 
 
+def time_to_quality(stamps, target: float):
+    """First wall-clock stamp whose quality metric holds ``target``.
+
+    ``stamps`` is [(wall_s, quality), ...] in epoch order — shared by the
+    churn and growth benches so their time-to-quality columns stay
+    definitionally identical across BENCH artifacts.
+    """
+    for t, f in stamps:
+        if f >= target:
+            return t
+    return None
+
+
 def bench_meta(
     capacity: Optional[int] = None,
     active_tenants=None,

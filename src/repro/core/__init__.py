@@ -37,12 +37,15 @@ from repro.core.multi_query import (
     QuerySet,
     build_query_set,
 )
-from repro.core.ledger import CostLedger, attribute_epoch, init_ledger
+from repro.core.errors import CapacityError, SlotsExhaustedError
+from repro.core.ledger import CostLedger, attribute_epoch, init_ledger, migrate_ledger
 from repro.core.session import (
     EngineSession,
     SessionDerived,
     SessionEpochStats,
     SessionState,
+    pad_session_state,
+    tier_schedule,
 )
 from repro.core.baselines import StaticOrderEvaluator
 
@@ -58,6 +61,8 @@ __all__ = [
     "MultiQueryEngine", "MultiQueryConfig", "MultiQueryState", "MultiEpochStats",
     "QuerySet", "build_query_set",
     "EngineSession", "SessionState", "SessionDerived", "SessionEpochStats",
-    "CostLedger", "init_ledger", "attribute_epoch",
+    "pad_session_state", "tier_schedule",
+    "CapacityError", "SlotsExhaustedError",
+    "CostLedger", "init_ledger", "attribute_epoch", "migrate_ledger",
     "StaticOrderEvaluator",
 ]

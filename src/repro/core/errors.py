@@ -1,0 +1,41 @@
+"""Typed capacity errors for the session layer.
+
+Bare ``ValueError``s with "plan capacity" advice are useless to serving code
+that wants to REACT — shed load, spill to a new session, or page an operator
+with the actual numbers.  These carry the machine-readable triple
+``(used, capacity, requested)`` and subclass the exceptions the session
+raised before they existed, so existing handlers (and tests) keep working.
+"""
+
+from __future__ import annotations
+
+
+class CapacityError(ValueError):
+    """Row-capacity exhaustion: an ingest (or initial corpus) does not fit.
+
+    ``used`` rows are occupied, ``requested`` more were asked for, and
+    ``capacity`` is the bound that failed — the session's *maximum* tier
+    capacity, so a handler sees the true ceiling, not the current tier
+    (growth past the current tier is automatic when ``max_capacity``
+    allows it; this error means even the last tier cannot hold the rows).
+    """
+
+    def __init__(self, message: str, *, used: int, capacity: int, requested: int):
+        super().__init__(message)
+        self.used = int(used)
+        self.capacity = int(capacity)
+        self.requested = int(requested)
+
+
+class SlotsExhaustedError(RuntimeError):
+    """Tenant-slot exhaustion: ``admit`` found no free slot.
+
+    ``used`` slots are active of ``capacity`` (``max_tenants``) allocated;
+    ``requested`` is how many more were asked for (1 per admit).
+    """
+
+    def __init__(self, message: str, *, used: int, capacity: int, requested: int):
+        super().__init__(message)
+        self.used = int(used)
+        self.capacity = int(capacity)
+        self.requested = int(requested)

@@ -12,11 +12,18 @@ under the session superstep, kept as a defensive bucket — accrue to
 ``unattributed``.
 
 Accounting identity: summed over tenants (plus ``unattributed``), attributed
-cost equals the substrate's ``cost_spent`` delta for the same epochs — each
-chargeable triple contributes ``n_want * (cost / n_want)``.  In float32 the
-reconciliation is exact whenever ``cost / n_want`` is exact (n_want a power of
-two, dyadic costs) and within a few ulp otherwise; ``reconcile`` exposes the
-residual so serving code can assert its own tolerance.
+cost equals the substrate's ``cost_spent`` delta for the same epochs.  The
+naive equal split ``n_want * fl(cost / n_want)`` drifts from ``cost`` by a
+float residue whenever the split is not dyadic (3-way wants, arbitrary
+costs); ``attribute_epoch`` instead bills the k-th wanter the cumulative-
+split difference ``cost*fl((k+1)/n) - cost*fl(k/n)`` — each difference is
+exact in float (Sterbenz), the splits telescope to exactly ``cost``, and
+every bill stays within an ulp of the ideal ``cost/n`` — so a lane's bills
+decompose its cost EXACTLY for arbitrary costs and wanter counts.  What
+remains is ulp-level f32 *accumulation* rounding across lanes and epochs;
+``reconcile`` exposes that residual, and ``CostLedger.bills`` folds it into
+the last billed slot at invoice time so the returned per-slot bills sum to
+``cost_spent`` bitwise (left-to-right f32 fold, the documented order).
 
 Everything here is shape-stable pure jnp, so ledger updates live inside the
 session's jitted superstep and cost attribution adds no host syncs.
@@ -28,6 +35,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.plan import Plan
 
@@ -54,6 +62,49 @@ class CostLedger:
         """[] f32 residual vs the substrate's cumulative spend (0 == exact)."""
         return cost_spent - self.total()
 
+    def bills(self, cost_spent) -> np.ndarray:
+        """[S] f32 invoice-grade per-slot bills that reconcile BITWISE.
+
+        The in-superstep accumulators decompose every lane's cost exactly
+        (see ``attribute_epoch``), but f32 accumulation across lanes and
+        epochs — in a different association order than ``cost_spent``'s own
+        accumulation — leaves an ulp-level residue.  Invoicing is a host-side
+        read-out, so the residue is folded deterministically into the LAST
+        slot that was ever billed (highest index with ``wanted > 0``), fixed
+        to the point where the left-to-right f32 fold — ``unattributed``
+        first, then bills in ascending slot order — equals ``cost_spent``
+        bit for bit.  That fold order is the reconciliation contract; the
+        residue lands in the fold's final effective addition (later slots
+        carry exact zeros), whose granularity is at least as fine as the
+        target's, so the fixpoint always exists.  Holds for arbitrary
+        (non-dyadic) want splits and survives capacity-tier migrations
+        (``migrate_ledger`` carries the accumulators unchanged).
+        """
+        att = np.asarray(jax.device_get(self.attributed), np.float32).copy()
+        unatt = np.float32(np.asarray(jax.device_get(self.unattributed)))
+        target = np.float32(np.asarray(jax.device_get(cost_spent)))
+        billed = np.flatnonzero(np.asarray(jax.device_get(self.wanted)) > 0)
+        j = int(billed[-1]) if billed.size else att.shape[0] - 1
+
+        def fold(bills):
+            acc = unatt
+            for v in bills:
+                acc = np.float32(acc + np.float32(v))
+            return acc
+
+        # Newton step to get within an ulp (slope ~1), then a single-ulp walk
+        # on slot j.  The walk terminates exactly: |att[j]| <= |target|, so
+        # each x-ulp moves the fold by at most one target-ulp and every grid
+        # point in between — including the target — is attained.
+        att[j] = np.float32(att[j] + np.float32(target - fold(att)))
+        for _ in range(4096):
+            f = fold(att)
+            if f == target:
+                break
+            toward = np.float32(np.inf) if f < target else np.float32(-np.inf)
+            att[j] = np.nextafter(att[j], toward, dtype=np.float32)
+        return att
+
 
 def init_ledger(num_slots: int, dtype=jnp.float32) -> CostLedger:
     return CostLedger(
@@ -79,28 +130,38 @@ def attribute_epoch(
 ) -> CostLedger:
     """Fold one executed epoch plan into the ledger.
 
-    Each chargeable lane's cost splits equally across its wanters; lanes the
+    Each chargeable lane's cost splits fairly across its wanters; lanes the
     write-once substrate did not charge (cross-epoch repeats) attribute
     nothing, exactly mirroring ``apply_outputs_to_substrate``'s charging rule
     so ledger totals track ``cost_spent``.
+
+    The split is exact by construction for ARBITRARY costs and wanter counts
+    (the naive ``fl(cost/n)`` share is exact only under dyadic splits): the
+    k-th wanter of a lane — slots in ascending index order, k = 1..n — is
+    billed ``cost*fl(k/n) - cost*fl((k-1)/n)``.  Both cumulative splits are
+    within a factor of two of each other, so the f32 subtraction is exact
+    (Sterbenz); ``fl(n/n) == 1`` makes the splits telescope to exactly
+    ``cost``; and each bill is within an ulp of the ideal ``cost/n``.  The
+    rounding residue the equal split used to drop is thereby assigned
+    deterministically by wanter rank instead of drifting the books.
     """
     want = want_matrix(want_bits, ledger.num_slots)  # [M, S]
     n_want = jnp.sum(
         jax.lax.population_count(want_bits).astype(jnp.int32), axis=-1
     )  # [M]
     live = chargeable & merged.valid
-    share = jnp.where(
-        live & (n_want > 0),
-        merged.cost / jnp.maximum(n_want, 1).astype(merged.cost.dtype),
-        0.0,
-    )  # [M]
-    frac = jnp.where(
-        live & (n_want > 0),
-        1.0 / jnp.maximum(n_want, 1).astype(merged.cost.dtype),
-        0.0,
-    )
-    per_slot = jnp.sum(share[:, None] * want, axis=0)  # [S]
-    per_slot_frac = jnp.sum(frac[:, None] * want, axis=0)
+    split = (live & (n_want > 0))[:, None]  # [M, 1]
+    dtype = merged.cost.dtype
+    nf = jnp.maximum(n_want, 1).astype(dtype)[:, None]  # [M, 1]
+    rank = jnp.cumsum(want.astype(jnp.int32), axis=-1)  # 1-based at set bits
+    hi = rank.astype(dtype) / nf  # fl(k/n); fl(n/n) == 1 exactly
+    lo = (rank - 1).astype(dtype) / nf  # fl((k-1)/n)
+    cost = merged.cost[:, None]
+    billed = want & split
+    bills = jnp.where(billed, cost * hi - cost * lo, 0.0)  # [M, S]
+    frac = jnp.where(billed, hi - lo, 0.0)
+    per_slot = jnp.sum(bills, axis=0)  # [S]
+    per_slot_frac = jnp.sum(frac, axis=0)
     per_slot_wanted = jnp.sum(live[:, None] & want, axis=0).astype(jnp.int32)
     orphan = jnp.sum(jnp.where(live & (n_want == 0), merged.cost, 0.0))
     return CostLedger(
@@ -109,3 +170,21 @@ def attribute_epoch(
         wanted=ledger.wanted + per_slot_wanted,
         unattributed=ledger.unattributed + orphan,
     )
+
+
+def migrate_ledger(ledger: CostLedger, num_slots: int) -> CostLedger:
+    """Carry a ledger across a capacity-tier migration (``core.session``).
+
+    Every accumulator is per-tenant-slot with no object-row axis, so growing
+    the row capacity carries the books unchanged — but migrations route
+    through this single audited hop so a future row-indexed ledger extension
+    fails loudly here instead of silently truncating, and so the tier-growth
+    reconciliation guarantee (bills still sum to ``cost_spent`` after
+    growth) has one place to hold.
+    """
+    if ledger.num_slots != num_slots:
+        raise ValueError(
+            f"ledger has {ledger.num_slots} slots but the session has "
+            f"{num_slots}; tier growth must not change the tenant-slot axis"
+        )
+    return ledger

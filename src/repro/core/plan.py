@@ -71,6 +71,23 @@ def canonicalize_plan(plan: Plan) -> Plan:
     )
 
 
+def gather_object_idx(plan: Plan, num_objects: int) -> jax.Array:
+    """[K] int32 object indices safe for bank/substrate row gathers.
+
+    Invalid lanes carry whatever selection left behind (-1 sentinels after
+    ``canonicalize_plan``, shard-local top-k fill otherwise).  Clipping to
+    ``[0, num_objects - 1]`` alone aliases them onto row ``num_objects - 1``
+    — a REAL row once a capacity-padded session fills up (num_rows ==
+    capacity).  Routing invalid lanes to row 0 keeps the gather in-bounds
+    while ``valid`` stays the single source of inertness: execution output
+    for such lanes is gathered-then-dropped (``apply_outputs_to_substrate``
+    scatters them out of range, ``chargeable_mask`` and the ledger's
+    want-bits are masked by ``valid``), never applied.
+    """
+    safe = jnp.clip(plan.object_idx, 0, num_objects - 1)
+    return jnp.where(plan.valid, safe, 0)
+
+
 def select_plan(
     benefits: TripleBenefits,
     plan_size: int,

@@ -25,11 +25,25 @@ superstep compiles exactly once for the life of the session:
   (``plan.merge_plans_dedup_wants``) and ``core.ledger`` splits every newly
   charged triple's cost fairly across the tenants whose plans wanted it,
   inside the superstep.
+* **capacity tiers** — with ``max_capacity > capacity`` the session owns a
+  geometric tier schedule (``capacity, 2c, 4c, ... >= max_capacity``, each
+  tier rounded up to the plan-shard count); an ``ingest`` that would
+  overflow the current tier migrates the full ``SessionState`` to the next
+  tier via ``pad_session_state`` (padded rows bitwise inert, row-validity
+  prefix preserved) instead of failing.  Each tier owns one compiled
+  superstep (the scan cache is keyed on tier capacity), so total retraces
+  over ANY event trace are bounded by ``1 + ceil(log2(max_capacity /
+  capacity))`` per distinct scan shape — ``retrace_bound``, observable via
+  ``superstep_traces``.
 
-Exactness bar (tested): with ``capacity == num_objects`` and a fixed tenant
+Exactness bars (tested): with ``capacity == num_objects`` and a fixed tenant
 set, per-epoch answer sets and ``cost_spent`` are bitwise identical to
-``MultiQueryEngine.run_scan``; across ingest/admit/retire events the scan
-superstep never re-traces (``superstep_traces`` stays 1).
+``MultiQueryEngine.run_scan``; across ingest/admit/retire events within one
+tier the scan superstep never re-traces (``superstep_traces`` stays 1); and
+a session grown ``capacity -> max_capacity`` across a churn trace is bitwise
+identical (answer sets, ``cost_spent``, ledger) to one pre-allocated at
+``max_capacity``, because tier migration pads with the allocator's own inert
+fill.
 
 Scope: tenants must be pure conjunctions (the paper's Q1-Q5 shape and the
 multi-tenant fast path); general ASTs stay on ``MultiQueryEngine``.  The
@@ -43,6 +57,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 import time
 from typing import Optional, Sequence
 
@@ -60,10 +75,81 @@ from repro.core.benefit import NEG_INF, TripleBenefits
 from repro.core.combine import CombineParams, combine_probabilities
 from repro.core.decision_table import DecisionTable
 from repro.core.entropy import binary_entropy
+from repro.core.errors import CapacityError, SlotsExhaustedError
 from repro.core.ledger import CostLedger
 from repro.core.multi_query import MultiQueryConfig, select_plans_batched
 from repro.core.query import CompiledQuery
 from repro.core.state import SharedSubstrate
+
+
+def tier_schedule(
+    capacity: int, max_capacity: int, num_shards: int = 1
+) -> tuple[int, ...]:
+    """Geometric capacity tiers ``capacity, 2c, 4c, ...`` covering
+    ``max_capacity``.
+
+    Each tier is rounded UP to a multiple of ``num_shards`` so sharded plan
+    selection keeps its divisibility invariant at every tier (the last tier
+    may therefore slightly exceed ``max_capacity``; it never falls short).
+    Doubling guarantees ``len(tiers) <= 1 + ceil(log2(max_capacity /
+    capacity))`` — the session's retrace bound, since each tier compiles its
+    superstep exactly once per scan shape.
+    """
+    if capacity < 1:
+        raise ValueError("capacity must be >= 1")
+    if max_capacity < capacity:
+        raise ValueError(
+            f"max_capacity={max_capacity} < capacity={capacity}"
+        )
+
+    def up(c: int) -> int:
+        return -(-c // num_shards) * num_shards
+
+    tiers = [up(capacity)]
+    while tiers[-1] < max_capacity:
+        tiers.append(up(min(2 * tiers[-1], max_capacity)))
+    return tuple(tiers)
+
+
+def pad_session_state(
+    state: SessionState, capacity: int, prior: float
+) -> SessionState:
+    """Migrate a full ``SessionState`` onto a larger row capacity.
+
+    Pure data movement, no arithmetic: every row-indexed leaf pads with the
+    SAME inert fill its allocator uses (substrate and bank outputs with the
+    prior, exec bits False, per-slot derived rows zero/False), and the
+    row-validity prefix scalar is untouched — so padded rows are bitwise
+    indistinguishable from rows a ``max_capacity``-sized session would have
+    pre-allocated and never touched.  That is the growth-exactness bar: a
+    grown session replays bitwise identically to a pre-allocated one.
+    Callers refresh derived state afterwards (``EngineSession.grow`` does);
+    the ledger has no row axis and crosses via ``ledger.migrate_ledger``.
+    """
+    if capacity < state.capacity:
+        raise ValueError(
+            f"cannot shrink a session from {state.capacity} to {capacity} rows"
+        )
+    if capacity == state.capacity:
+        return state
+    sub = state.substrate
+    der = state.derived
+    return dataclasses.replace(
+        state,
+        substrate=SharedSubstrate(
+            func_probs=state_lib.pad_rows(sub.func_probs, capacity, prior),
+            exec_mask=state_lib.pad_rows(sub.exec_mask, capacity, False),
+            cost_spent=sub.cost_spent,
+        ),
+        derived=SessionDerived(
+            pred_prob=state_lib.pad_rows(der.pred_prob, capacity, 0.0),
+            uncertainty=state_lib.pad_rows(der.uncertainty, capacity, 0.0),
+            joint_prob=state_lib.pad_axis(der.joint_prob, capacity, 0.0, axis=1),
+            in_answer=state_lib.pad_axis(der.in_answer, capacity, False, axis=1),
+        ),
+        bank_outputs=state_lib.pad_rows(state.bank_outputs, capacity, prior),
+        ledger=ledger_lib.migrate_ledger(state.ledger, state.num_slots),
+    )
 
 
 @jax.tree_util.register_dataclass
@@ -154,6 +240,7 @@ class EngineSession:
         capacity: int,
         max_tenants: int,
         config: MultiQueryConfig = MultiQueryConfig(),
+        max_capacity: Optional[int] = None,
     ):
         if config.backend not in ("jnp", "pallas"):
             raise ValueError(f"unknown backend: {config.backend!r}")
@@ -173,6 +260,15 @@ class EngineSession:
         self.capacity = int(capacity)
         self.max_tenants = int(max_tenants)
         self.config = config
+        # capacity tiers: default max_capacity == capacity (no growth; the
+        # pre-tier contract).  Each tier is shard-divisible, so sharded
+        # planning survives growth unchanged.
+        self._tiers = tier_schedule(
+            self.capacity,
+            self.capacity if max_capacity is None else int(max_capacity),
+            config.num_shards,
+        )
+        self.growths = 0  # tier migrations performed (any state this session owns)
         if self.costs.shape[0] != len(self.global_predicates):
             raise ValueError(
                 f"costs rows ({self.costs.shape[0]}) != global predicates "
@@ -194,8 +290,27 @@ class EngineSession:
     @property
     def superstep_traces(self) -> int:
         """How many times the epoch superstep has been traced (churn-stability
-        witness: stays 1 across any sequence of ingest/admit/retire events)."""
+        witness: stays 1 across any sequence of ingest/admit/retire events
+        within a tier, and <= ``retrace_bound`` across tier growth)."""
         return self._trace_count
+
+    @property
+    def tier_capacities(self) -> tuple[int, ...]:
+        """The geometric capacity tiers this session may occupy."""
+        return self._tiers
+
+    @property
+    def max_capacity(self) -> int:
+        """The last tier's capacity (requested ``max_capacity`` rounded up to
+        the shard count); rows beyond this can never be ingested."""
+        return self._tiers[-1]
+
+    @property
+    def retrace_bound(self) -> int:
+        """Max supersteps traced per distinct scan shape over ANY event
+        trace: one per tier, ``<= 1 + ceil(log2(max_capacity / capacity))``
+        by the doubling schedule."""
+        return len(self._tiers)
 
     # ---- derived-state maintenance -----------------------------------------
 
@@ -253,12 +368,31 @@ class EngineSession:
 
     # ---- session lifecycle ---------------------------------------------------
 
+    def _tier_for(self, rows: int, used: int = 0, requested: int = None) -> int:
+        """Smallest tier capacity holding ``rows`` (CapacityError past max).
+
+        ``used``/``requested`` flow into the error's machine-readable triple:
+        rows already occupied and the increment that failed (defaulting to
+        ``rows`` when the request IS the total, e.g. an initial corpus).
+        """
+        for t in self._tiers:
+            if rows <= t:
+                return t
+        raise CapacityError(
+            f"{rows} rows exceeds capacity: the session's last tier holds "
+            f"{self.max_capacity} (tiers {self._tiers}); open the session "
+            "with a larger max_capacity for the expected arrival volume",
+            used=used,
+            capacity=self.max_capacity,
+            requested=rows if requested is None else requested,
+        )
+
     def init_state(self, bank_outputs: jax.Array) -> SessionState:
         """Open a session over an initial corpus of ``bank_outputs`` [N0, P, F].
 
-        N0 may be anything up to ``capacity``; the remaining rows are
-        pre-allocated for ``ingest``.  No tenants are active yet — ``admit``
-        fills slots.
+        N0 may be anything up to ``max_capacity``; the session opens at the
+        smallest tier that holds it, leaving the remaining rows pre-allocated
+        for ``ingest``.  No tenants are active yet — ``admit`` fills slots.
         """
         bank_outputs = jnp.asarray(bank_outputs, jnp.float32)
         n0, p, f = bank_outputs.shape
@@ -267,30 +401,31 @@ class EngineSession:
                 f"bank outputs [{n0}, {p}, {f}] do not match the compiled "
                 f"space [P={self.num_predicates}, F={self.num_functions}]"
             )
-        if n0 > self.capacity:
-            raise ValueError(f"initial corpus {n0} exceeds capacity {self.capacity}")
+        if n0 > self.max_capacity:
+            raise CapacityError(
+                f"initial corpus {n0} exceeds capacity {self.max_capacity} "
+                f"(tiers {self._tiers})",
+                used=0,
+                capacity=self.max_capacity,
+                requested=n0,
+            )
+        cap = self._tier_for(n0)
         substrate = state_lib.init_substrate(
             n0,
             self.num_predicates,
             self.num_functions,
             prior=self.config.prior,
-            capacity=self.capacity,
+            capacity=cap,
         )
         state = SessionState(
             substrate=substrate,
             derived=SessionDerived(  # placeholder; _refresh fills it
-                pred_prob=jnp.zeros(
-                    (self.capacity, self.num_predicates), jnp.float32
-                ),
-                uncertainty=jnp.zeros(
-                    (self.capacity, self.num_predicates), jnp.float32
-                ),
-                joint_prob=jnp.zeros((self.max_tenants, self.capacity), jnp.float32),
-                in_answer=jnp.zeros((self.max_tenants, self.capacity), bool),
+                pred_prob=jnp.zeros((cap, self.num_predicates), jnp.float32),
+                uncertainty=jnp.zeros((cap, self.num_predicates), jnp.float32),
+                joint_prob=jnp.zeros((self.max_tenants, cap), jnp.float32),
+                in_answer=jnp.zeros((self.max_tenants, cap), bool),
             ),
-            bank_outputs=state_lib.pad_rows(
-                bank_outputs, self.capacity, self.config.prior
-            ),
+            bank_outputs=state_lib.pad_rows(bank_outputs, cap, self.config.prior),
             pred_mask=jnp.zeros((self.max_tenants, self.num_predicates), bool),
             active=jnp.zeros((self.max_tenants,), bool),
             num_rows=jnp.asarray(n0, jnp.int32),
@@ -331,9 +466,12 @@ class EngineSession:
         if slot is None:
             free = np.flatnonzero(~active_np)
             if free.size == 0:
-                raise RuntimeError(
+                raise SlotsExhaustedError(
                     f"no free tenant slots (max_tenants={self.max_tenants}); "
-                    "retire a tenant or open the session with more slots"
+                    "retire a tenant or open the session with more slots",
+                    used=int(active_np.sum()),
+                    capacity=self.max_tenants,
+                    requested=1,
                 )
             slot = int(free[0])
         else:
@@ -372,6 +510,43 @@ class EngineSession:
         )
         return self._refresh_fn(state)
 
+    def refresh(self, state: SessionState) -> SessionState:
+        """Recompute all derived state from the substrate + masks (jitted).
+
+        Public entry for state-adoption paths — e.g. a torn-down session's
+        state migrated into a freshly built one (the rebuild baseline in
+        ``benchmarks.growth``); normal churn events call it internally.
+        """
+        return self._refresh_fn(state)
+
+    def _grow_padded(self, state: SessionState, min_rows: int) -> SessionState:
+        """Tier migration WITHOUT the derived-state refresh — for callers
+        whose own tail refreshes anyway (``ingest``), sparing a second
+        full-width device pass per growth event."""
+        if min_rows <= state.capacity:
+            return state
+        used = int(jax.device_get(state.num_rows))
+        target = self._tier_for(min_rows, used=used, requested=min_rows - used)
+        state = pad_session_state(state, target, self.config.prior)
+        self.growths += 1
+        return state
+
+    def grow(self, state: SessionState, min_rows: int) -> SessionState:
+        """Migrate a live session to the smallest capacity tier holding
+        ``min_rows`` (no-op when the current tier already does).
+
+        Pure data movement (``pad_session_state``) + a derived-state refresh:
+        padded rows are bitwise inert, every accumulator (substrate spend,
+        ledger bills, answer prefixes) carries over unchanged, and the next
+        ``run`` compiles the superstep ONCE for the new tier — the bounded-
+        recompile contract (``retrace_bound``).  Raises ``CapacityError``
+        when ``min_rows`` exceeds the last tier.
+        """
+        grown = self._grow_padded(state, min_rows)
+        if grown is state:
+            return state
+        return self._refresh_fn(grown)
+
     def ingest(self, state: SessionState, outputs: jax.Array) -> SessionState:
         """Stream new objects into pre-allocated rows between supersteps.
 
@@ -379,7 +554,10 @@ class EngineSession:
         (the simulated-bank contract: functions are pre-materialized, the
         bank gathers).  Their substrate rows start cold — prior probabilities,
         empty exec mask — and become planning candidates in the next epoch
-        because the row-validity prefix now covers them.
+        because the row-validity prefix now covers them.  An ingest that
+        overflows the current tier grows the session to the next tier that
+        holds it (``grow``) when ``max_capacity`` allows; past the last tier
+        it raises ``CapacityError``.
         """
         outputs = jnp.asarray(outputs, jnp.float32)
         if outputs.ndim != 3 or outputs.shape[1:] != (
@@ -392,12 +570,17 @@ class EngineSession:
             )
         nr = int(jax.device_get(state.num_rows))
         m = outputs.shape[0]
-        if nr + m > self.capacity:
-            raise ValueError(
+        if nr + m > self.max_capacity:
+            raise CapacityError(
                 f"ingest of {m} objects overflows capacity "
-                f"({nr} rows used of {self.capacity}); plan capacity for the "
-                "expected arrival volume at session open"
+                f"({nr} rows used of {state.capacity}, max_capacity="
+                f"{self.max_capacity}); open the session with a larger "
+                "max_capacity for the expected arrival volume",
+                used=nr,
+                capacity=self.max_capacity,
+                requested=m,
             )
+        state = self._grow_padded(state, nr + m)  # the tail refresh covers it
         bank, num_rows = state_lib.ingest_rows(
             state.bank_outputs, state.num_rows, outputs
         )
@@ -457,10 +640,12 @@ class EngineSession:
 
         Identical arithmetic to ``MultiQueryEngine._superstep`` on the valid
         region (the parity bar), plus the want-bit merge and ledger update.
-        The only shapes anywhere are session constants, so this traces once.
+        Every shape is a constant of the state's capacity TIER (read off the
+        array shapes, never ``self``), so this traces once per tier.
         """
         self._trace_count += 1  # Python side effect: fires per TRACE, not per step
         cfg = self.config
+        capacity = state.capacity  # the tier's row capacity, a trace constant
         row_valid = state.row_valid()
         benefits = self._benefits(state, row_valid)
         plans = select_plans_batched(
@@ -476,10 +661,13 @@ class EngineSession:
             num_slots=self.max_tenants,
             capacity=cfg.merged_capacity,
             cost_budget=cfg.epoch_cost_budget,
-            num_objects=self.capacity,
+            num_objects=capacity,
         )
-        # the bank: a gather from the session-owned capacity-padded outputs
-        obj = jnp.clip(merged.object_idx, 0, self.capacity - 1)
+        # the bank: a gather from the session-owned capacity-padded outputs.
+        # Invalid merged lanes route to row 0 (NOT clipped onto row
+        # capacity-1, a real row once num_rows == capacity) and stay inert:
+        # apply drops them, chargeable/want-bits are valid-masked.
+        obj = plan_lib.gather_object_idx(merged, capacity)
         outputs = state.bank_outputs[obj, merged.pred_idx, jnp.maximum(merged.func_idx, 0)]
         # the SAME charging rule apply_outputs_to_substrate bills cost_spent
         # with, so ledger attribution reconciles by construction
@@ -525,8 +713,11 @@ class EngineSession:
             stats["answer_mask"] = mask
         return new_state, stats
 
-    def _get_scan_fn(self, num_epochs: int, collect_masks: bool):
-        key = (num_epochs, collect_masks)
+    def _get_scan_fn(self, capacity: int, num_epochs: int, collect_masks: bool):
+        # keyed on the tier capacity: each tier owns ONE compiled superstep
+        # per scan shape, which is what bounds total retraces over any event
+        # trace by len(self._tiers) (== retrace_bound) per shape.
+        key = (capacity, num_epochs, collect_masks)
         if key not in self._scan_cache:
 
             def run_fn(state):
@@ -553,10 +744,12 @@ class EngineSession:
         The same fused ``lax.scan`` driver as ``MultiQueryEngine.run_scan``;
         between calls the caller may ``ingest`` / ``admit`` / ``retire``
         freely — the compiled program is reused because every churn axis is
-        data.  With zero active tenants the session idles (every epoch plans
-        nothing and charges nothing).
+        data, and an ingest-driven tier migration switches to the target
+        tier's own compiled program (at most ``retrace_bound`` per scan
+        shape).  With zero active tenants the session idles (every epoch
+        plans nothing and charges nothing).
         """
-        fn = self._get_scan_fn(num_epochs, collect_masks)
+        fn = self._get_scan_fn(state.capacity, num_epochs, collect_masks)
         t0 = time.perf_counter()
         state, stats = fn(state)
         stats = jax.device_get(stats)  # the run's single host sync

@@ -146,15 +146,30 @@ def row_validity(capacity: int, num_rows: jax.Array) -> jax.Array:
     return jnp.arange(capacity, dtype=jnp.int32) < num_rows
 
 
-def pad_rows(x: jax.Array, capacity: int, fill) -> jax.Array:
-    """Pad axis 0 of ``x`` up to ``capacity`` rows with ``fill``."""
-    n = x.shape[0]
+def pad_axis(x: jax.Array, capacity: int, fill, axis: int = 0) -> jax.Array:
+    """Pad ``axis`` of ``x`` up to ``capacity`` entries with ``fill``.
+
+    The session's capacity-tier migration (``core.session.pad_session_state``)
+    pads every row-indexed leaf with the SAME inert fill its allocator uses,
+    so a grown state is bitwise indistinguishable from one allocated at the
+    target capacity.  Per-slot derived leaves ([S, C]) pad their row axis at
+    ``axis=1``.
+    """
+    x = jnp.asarray(x)
+    n = x.shape[axis]
     if n > capacity:
         raise ValueError(f"cannot pad {n} rows into capacity {capacity}")
     if n == capacity:
-        return jnp.asarray(x)
-    pad = jnp.full((capacity - n,) + x.shape[1:], fill, x.dtype)
-    return jnp.concatenate([jnp.asarray(x), pad], axis=0)
+        return x
+    shape = list(x.shape)
+    shape[axis] = capacity - n
+    pad = jnp.full(tuple(shape), fill, x.dtype)
+    return jnp.concatenate([x, pad], axis=axis)
+
+
+def pad_rows(x: jax.Array, capacity: int, fill) -> jax.Array:
+    """Pad axis 0 of ``x`` up to ``capacity`` rows with ``fill``."""
+    return pad_axis(x, capacity, fill, axis=0)
 
 
 def ingest_rows(

@@ -1,0 +1,273 @@
+"""Capacity tiers: growing a live session past its pre-allocated rows.
+
+The bars (ISSUE 4): growth exactness — a session grown capacity ->
+max_capacity across a churn trace is BITWISE identical (answer sets,
+cost_spent, ledger) to one pre-allocated at max_capacity; the retrace
+bound — superstep traces <= 1 + ceil(log2(max_capacity / capacity)); typed
+capacity errors carrying (used, capacity, requested); and shard-divisible
+tier rounding.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CapacityError,
+    EngineSession,
+    MultiQueryConfig,
+    Predicate,
+    SlotsExhaustedError,
+    conjunction,
+    fallback_decision_table,
+    pad_session_state,
+    tier_schedule,
+)
+from repro.core.combine import default_combine_params
+from repro.core.ledger import migrate_ledger
+from repro.data.synthetic import make_corpus
+
+P_GLOBAL, F = 4, 4
+
+
+def _world(seed=0, num_objects=256, costs=None):
+    preds = [Predicate(i, 1) for i in range(P_GLOBAL)]
+    kw = dict(selectivity=[0.3, 0.4, 0.25, 0.35])
+    if costs is not None:
+        kw["costs"] = costs
+    corpus = make_corpus(
+        jax.random.PRNGKey(seed), num_objects, [p.tag_type for p in preds],
+        [p.tag for p in preds], **kw,
+    )
+    combine = default_combine_params(corpus.aucs)
+    table = fallback_decision_table(P_GLOBAL, F, corpus.aucs)
+    return preds, corpus, combine, table
+
+
+def _session(preds, corpus, combine, table, capacity, max_tenants,
+             max_capacity=None, **cfg_kw):
+    cfg = MultiQueryConfig(**{"plan_size": 32, **cfg_kw})
+    return EngineSession(
+        [p.positive() for p in preds], table, combine, corpus.costs,
+        capacity=capacity, max_tenants=max_tenants, config=cfg,
+        max_capacity=max_capacity,
+    )
+
+
+# ------------------------------------------------------------ tier schedule --
+
+
+def test_tier_schedule_geometric_and_bounded():
+    assert tier_schedule(64, 256) == (64, 128, 256)
+    assert tier_schedule(64, 64) == (64,)
+    assert tier_schedule(64, 65) == (64, 65)  # last tier clamps to max
+    for cap, max_cap in [(64, 256), (64, 65), (100, 5000), (1, 7)]:
+        tiers = tier_schedule(cap, max_cap)
+        assert tiers[0] == cap and tiers[-1] >= max_cap
+        assert all(b > a for a, b in zip(tiers, tiers[1:]))
+        assert len(tiers) <= 1 + math.ceil(math.log2(max_cap / cap))
+
+
+def test_tier_schedule_rounds_up_to_shards():
+    # every tier shard-divisible; the last may exceed max_capacity to stay so
+    assert tier_schedule(48, 100, num_shards=3) == (48, 96, 102)
+    for tiers in [tier_schedule(48, 100, 3), tier_schedule(64, 500, 4)]:
+        assert all(t % (3 if tiers[0] == 48 else 4) == 0 for t in tiers)
+    with pytest.raises(ValueError, match="max_capacity"):
+        tier_schedule(64, 32)
+
+
+# ---------------------------------------------------------- growth exactness --
+
+
+def _drive(sess, corpus, collect=True):
+    """The shared churn trace: 2 admits, then run/ingest/run/ingest/run."""
+    preds = [Predicate(i, 1) for i in range(P_GLOBAL)]
+    st = sess.init_state(corpus.func_probs[:48])
+    st, _ = sess.admit(st, conjunction(preds[0], preds[1]))
+    st, _ = sess.admit(st, conjunction(preds[1], preds[2]))
+    hist = []
+    st, h = sess.run(st, 3, collect_masks=collect)
+    hist += h
+    st = sess.ingest(st, corpus.func_probs[48:108])  # 108 rows -> tier 128
+    st, h = sess.run(st, 3, collect_masks=collect)
+    hist += h
+    st = sess.ingest(st, corpus.func_probs[108:228])  # 228 rows -> tier 256
+    st, h = sess.run(st, 3, collect_masks=collect)
+    hist += h
+    return st, hist
+
+
+def test_growth_bitwise_parity_with_preallocated():
+    """capacity 64 grown to 256 across a churn trace == pre-allocated 256:
+    per-epoch answer sets, cost_spent, and the final ledger, all bitwise;
+    superstep traces bounded by 1 + ceil(log2(max/cap))."""
+    preds, corpus, combine, table = _world()
+    grow = _session(preds, corpus, combine, table, capacity=64,
+                    max_tenants=3, max_capacity=256)
+    pre = _session(preds, corpus, combine, table, capacity=256, max_tenants=3)
+
+    st_g, h_g = _drive(grow, corpus)
+    st_p, h_p = _drive(pre, corpus)
+
+    assert grow.tier_capacities == (64, 128, 256)
+    assert grow.growths == 2
+    bound = 1 + math.ceil(math.log2(256 / 64))
+    assert grow.superstep_traces <= bound
+    assert grow.retrace_bound == bound
+    assert pre.superstep_traces == 1
+
+    assert len(h_g) == len(h_p)
+    for a, b in zip(h_g, h_p):
+        assert a.cost_spent == b.cost_spent  # bitwise, not approx
+        assert a.merged_valid == b.merged_valid
+        ma, mb = np.asarray(a.answer_mask), np.asarray(b.answer_mask)
+        w = min(ma.shape[1], mb.shape[1])
+        np.testing.assert_array_equal(ma[:, :w], mb[:, :w])
+        assert not ma[:, w:].any() and not mb[:, w:].any()
+    assert float(st_g.cost_spent) == float(st_p.cost_spent)
+    np.testing.assert_array_equal(
+        np.asarray(st_g.ledger.attributed), np.asarray(st_p.ledger.attributed)
+    )
+    assert st_g.capacity == st_p.capacity == 256
+
+
+def test_growth_with_sharded_planning():
+    """Tier growth under num_shards=2 keeps every tier shard-divisible and
+    stays bitwise identical to the unsharded grown session (the PR 2 parity
+    bar surviving growth)."""
+    preds, corpus, combine, table = _world()
+    plain = _session(preds, corpus, combine, table, capacity=64,
+                     max_tenants=3, max_capacity=256)
+    sharded = _session(preds, corpus, combine, table, capacity=64,
+                       max_tenants=3, max_capacity=256, num_shards=2)
+    assert all(t % 2 == 0 for t in sharded.tier_capacities)
+    _, h1 = _drive(plain, corpus)
+    _, h2 = _drive(sharded, corpus)
+    for a, b in zip(h1, h2):
+        assert a.cost_spent == b.cost_spent
+        np.testing.assert_array_equal(np.asarray(a.answer_mask),
+                                      np.asarray(b.answer_mask))
+
+
+def test_grow_is_explicitly_callable_and_idempotent():
+    preds, corpus, combine, table = _world(num_objects=64)
+    sess = _session(preds, corpus, combine, table, capacity=64,
+                    max_tenants=2, max_capacity=256)
+    st = sess.init_state(corpus.func_probs)
+    assert sess.grow(st, 64) is st  # within-tier: no-op, same object
+    st2 = sess.grow(st, 65)
+    assert st2.capacity == 128 and int(st2.num_rows) == 64
+    with pytest.raises(CapacityError) as ei:
+        sess.grow(st2, 1000)
+    # the machine-readable triple: rows occupied, the ceiling, the increment
+    assert (ei.value.used, ei.value.capacity, ei.value.requested) == (64, 256, 936)
+
+
+def test_init_state_opens_at_the_smallest_holding_tier():
+    preds, corpus, combine, table = _world(num_objects=200)
+    sess = _session(preds, corpus, combine, table, capacity=64,
+                    max_tenants=2, max_capacity=256)
+    st = sess.init_state(corpus.func_probs[:200])
+    assert st.capacity == 256 and int(st.num_rows) == 200
+    with pytest.raises(CapacityError, match="exceeds capacity"):
+        sess.init_state(jnp.full((257, P_GLOBAL, F), 0.5))
+
+
+# ------------------------------------------------------------- typed errors --
+
+
+def test_capacity_error_carries_numbers_and_subclasses_valueerror():
+    preds, corpus, combine, table = _world(num_objects=64)
+    sess = _session(preds, corpus, combine, table, capacity=64, max_tenants=1)
+    st = sess.init_state(corpus.func_probs)
+    with pytest.raises(CapacityError, match="overflows capacity") as ei:
+        sess.ingest(st, jnp.full((8, P_GLOBAL, F), 0.5))
+    assert isinstance(ei.value, ValueError)  # back-compat
+    assert (ei.value.used, ei.value.capacity, ei.value.requested) == (64, 64, 8)
+
+
+def test_overflow_routes_to_growth_when_max_capacity_allows():
+    preds, corpus, combine, table = _world(num_objects=128)
+    sess = _session(preds, corpus, combine, table, capacity=64,
+                    max_tenants=1, max_capacity=128)
+    st = sess.init_state(corpus.func_probs[:64])
+    st = sess.ingest(st, corpus.func_probs[64:128])  # would overflow pre-tiers
+    assert st.capacity == 128 and int(st.num_rows) == 128
+    with pytest.raises(CapacityError) as ei:
+        sess.ingest(st, jnp.full((1, P_GLOBAL, F), 0.5))
+    assert ei.value.capacity == 128 and ei.value.used == 128
+
+
+def test_slots_exhausted_error_carries_numbers():
+    preds, corpus, combine, table = _world(num_objects=64)
+    sess = _session(preds, corpus, combine, table, capacity=64, max_tenants=2)
+    st = sess.init_state(corpus.func_probs)
+    st, _ = sess.admit(st, conjunction(preds[0]))
+    st, _ = sess.admit(st, conjunction(preds[1]))
+    with pytest.raises(SlotsExhaustedError, match="no free tenant slots") as ei:
+        sess.admit(st, conjunction(preds[2]))
+    assert isinstance(ei.value, RuntimeError)  # back-compat
+    assert (ei.value.used, ei.value.capacity, ei.value.requested) == (2, 2, 1)
+
+
+# ------------------------------------------------------- migration mechanics --
+
+
+def test_pad_session_state_guards():
+    preds, corpus, combine, table = _world(num_objects=64)
+    sess = _session(preds, corpus, combine, table, capacity=64, max_tenants=2)
+    st = sess.init_state(corpus.func_probs)
+    assert pad_session_state(st, 64, 0.5) is st
+    with pytest.raises(ValueError, match="cannot shrink"):
+        pad_session_state(st, 32, 0.5)
+    grown = pad_session_state(st, 128, 0.5)
+    assert grown.capacity == 128
+    # padded substrate rows are the allocator's fill: prior probs, no exec
+    assert float(jnp.min(grown.substrate.func_probs[64:])) == 0.5
+    assert not bool(jnp.any(grown.substrate.exec_mask[64:]))
+    assert not bool(jnp.any(grown.derived.in_answer[:, 64:]))
+    with pytest.raises(ValueError, match="tenant-slot axis"):
+        migrate_ledger(st.ledger, st.ledger.num_slots + 1)
+
+
+def test_ledger_reconciles_bitwise_across_growth_non_dyadic():
+    """Three identical tenants (every triple 3-way split) with non-dyadic
+    costs: the invoice bills reconcile with cost_spent BITWISE (left-to-right
+    f32 fold, the documented order), before and after a tier migration."""
+    preds, corpus, combine, table = _world(
+        seed=3, num_objects=128, costs=[0.017, 0.11, 0.29, 0.53]
+    )
+    sess = _session(preds, corpus, combine, table, capacity=64,
+                    max_tenants=3, max_capacity=128)
+    st = sess.init_state(corpus.func_probs[:48])
+    q = conjunction(preds[0], preds[1])
+    for _ in range(3):
+        st, _ = sess.admit(st, q)
+
+    def fold(bills, unatt):
+        acc = unatt  # the documented order: unattributed, then slots ascending
+        for v in bills:
+            acc = np.float32(acc + v)
+        return acc
+
+    def assert_reconciles(state):
+        bills = state.ledger.bills(state.cost_spent)
+        unatt = np.float32(np.asarray(state.ledger.unattributed))
+        assert fold(bills, unatt) == np.float32(np.asarray(state.cost_spent))
+        # invoices stay fair: within an ulp-scale margin of the raw shares
+        np.testing.assert_allclose(
+            bills, np.asarray(state.ledger.attributed), rtol=1e-5
+        )
+
+    st, _ = sess.run(st, 4)
+    assert float(st.cost_spent) > 0
+    assert_reconciles(st)
+    st = sess.ingest(st, corpus.func_probs[48:96])  # 96 rows -> tier 128
+    assert st.capacity == 128 and sess.growths == 1
+    st, _ = sess.run(st, 4)
+    assert_reconciles(st)
+    assert float(st.ledger.unattributed) == 0.0

@@ -322,6 +322,114 @@ def test_ledger_fair_share_exact_with_dyadic_costs():
     assert float(led.reconcile(st.cost_spent)) == 0.0
 
 
+@pytest.mark.parametrize("n_want", [3, 5, 7])
+def test_attribute_epoch_exact_for_non_dyadic_splits(n_want):
+    """Regression: fair-share splits used to be exact only under dyadic
+    (power-of-two) splits — ``n * fl(cost/n)`` drifts from ``cost`` under 3-,
+    5-, 7-way wants.  The rank-based cumulative split decomposes every lane's
+    cost EXACTLY (f64 fsum of the f32 bills recovers the cost to the last
+    bit) while keeping every bill within an ulp of ``cost/n``."""
+    import math
+
+    num_slots = 40  # two want-bitmask words
+    rng = np.random.default_rng(n_want)
+    for _ in range(8):
+        cost = np.float32(rng.uniform(0.001, 1.7))  # arbitrary, non-dyadic
+        slots = rng.choice(num_slots, size=n_want, replace=False)
+        words = np.zeros((1, 2), np.uint32)
+        for s in slots:
+            words[0, s // 32] |= np.uint32(1) << np.uint32(s % 32)
+        merged = Plan(
+            object_idx=jnp.zeros((1,), jnp.int32),
+            pred_idx=jnp.zeros((1,), jnp.int32),
+            func_idx=jnp.zeros((1,), jnp.int32),
+            benefit=jnp.ones((1,), jnp.float32),
+            cost=jnp.asarray([cost]),
+            valid=jnp.ones((1,), bool),
+        )
+        led = attribute_epoch(
+            init_ledger(num_slots), merged, jnp.asarray(words),
+            jnp.ones((1,), bool),
+        )
+        bills = np.asarray(led.attributed, np.float64)
+        want = np.asarray(want_matrix(jnp.asarray(words), num_slots))[0]
+        # f64 fsum of f32 bills is exact: the decomposition identity is
+        # bitwise — the naive n * fl(cost/n) split fails this for these n
+        assert math.fsum(bills) == float(cost)
+        assert (bills[~want] == 0).all()
+        # fairness: every bill within float noise of the ideal equal share
+        np.testing.assert_allclose(bills[want], float(cost) / n_want, rtol=1e-5)
+        assert float(led.unattributed) == 0.0
+
+
+def test_padded_plan_lanes_inert_at_num_rows_equals_capacity():
+    """Regression (ISSUE 4): ``_superstep`` used to clip ``merged.object_idx``
+    to ``[0, capacity-1]``, so invalid/padded plan lanes gathered row
+    ``capacity-1`` — a VALID row once the session fills up.  Prove that
+    invalid merged lanes can never contribute to the chargeable mask, bank
+    application, or ledger want-bits, even when poisoned with huge costs and
+    aliased onto the last real row."""
+    from repro.core import state as state_lib
+    from repro.core.multi_query import select_plans_batched
+    from repro.core.plan import gather_object_idx
+
+    preds, corpus, combine, table = _world()
+    sess = _session(preds, corpus, combine, table, capacity=N, max_tenants=2)
+    st = sess.init_state(corpus.func_probs)  # num_rows == capacity: FULL
+    st, _ = sess.admit(st, conjunction(preds[0], preds[1]))
+    assert int(st.num_rows) == st.capacity
+
+    benefits = sess._benefits(st, st.row_valid())
+    plans = select_plans_batched(
+        benefits, plan_size=sess.config.plan_size, num_shards=1,
+        num_predicates=sess.num_predicates,
+    )
+    merged, want_bits = merge_plans_dedup_wants(
+        plans, sess.num_predicates, sess.num_functions,
+        num_slots=sess.max_tenants, num_objects=st.capacity,
+    )
+    inv = ~np.asarray(merged.valid)
+    assert inv.any(), "need invalid lanes to regression-test against"
+
+    # 1. ledger: invalid lanes carry no want-bits -> no attribution possible
+    assert not np.asarray(want_matrix(want_bits, sess.max_tenants))[inv].any()
+    # 2. charging: the substrate's rule never charges an invalid lane
+    ch = state_lib.chargeable_mask(
+        st.substrate, merged.object_idx, merged.pred_idx, merged.func_idx,
+        merged.valid,
+    )
+    assert not np.asarray(ch)[inv].any()
+    # 3. bank gather: invalid lanes route to row 0, NOT the (valid!) last row
+    obj = np.asarray(gather_object_idx(merged, st.capacity))
+    assert (obj[inv] == 0).all()
+    assert (obj[~inv] < int(st.num_rows)).all()
+    # 4. end to end: poison invalid lanes (alias onto the last real row with
+    # huge cost); substrate, spend, and ledger must be bitwise unaffected
+    poisoned = merged._replace(
+        object_idx=jnp.where(merged.valid, merged.object_idx, st.capacity - 1),
+        cost=jnp.where(merged.valid, merged.cost, 1e6),
+    )
+    outputs = jnp.zeros((merged.object_idx.shape[0],), jnp.float32)
+    sub_ref = state_lib.apply_outputs_to_substrate(
+        st.substrate, merged.object_idx, merged.pred_idx, merged.func_idx,
+        outputs, merged.cost, merged.valid,
+    )
+    sub_poi = state_lib.apply_outputs_to_substrate(
+        st.substrate, poisoned.object_idx, poisoned.pred_idx, poisoned.func_idx,
+        outputs, poisoned.cost, poisoned.valid,
+    )
+    assert float(sub_ref.cost_spent) == float(sub_poi.cost_spent)
+    np.testing.assert_array_equal(np.asarray(sub_ref.exec_mask),
+                                  np.asarray(sub_poi.exec_mask))
+    np.testing.assert_array_equal(np.asarray(sub_ref.func_probs),
+                                  np.asarray(sub_poi.func_probs))
+    led_ref = attribute_epoch(init_ledger(sess.max_tenants), merged, want_bits, ch)
+    led_poi = attribute_epoch(init_ledger(sess.max_tenants), poisoned, want_bits, ch)
+    np.testing.assert_array_equal(np.asarray(led_ref.attributed),
+                                  np.asarray(led_poi.attributed))
+    assert float(led_poi.unattributed) == 0.0
+
+
 def test_attribute_epoch_unattributed_bucket():
     """Defensive path: a chargeable triple nobody wanted lands in
     unattributed, never silently vanishing from the books."""
