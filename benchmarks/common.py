@@ -158,15 +158,21 @@ def bench_meta(
     capacity: Optional[int] = None,
     active_tenants=None,
     events: Optional[list] = None,
+    chunk_size: Optional[int] = None,
+    backend: Optional[str] = None,
+    num_shards: Optional[int] = None,
 ) -> dict:
     """Machine-readable provenance block every BENCH_*.json payload carries.
 
     ``capacity`` is the allocated object-row capacity (== num_objects for
     static benches), ``active_tenants`` the tenant count (an int, or a list
     when the bench sweeps Q), ``events`` the scripted churn trace as
-    ``[{kind, arg}, ...]`` (empty for churn-free benches).  Keeping the block
-    uniform across BENCH files is what lets cross-PR trajectory tooling
-    compare runs without per-bench parsing.
+    ``[{kind, arg}, ...]`` (empty for churn-free benches).  ``chunk_size`` /
+    ``backend`` / ``num_shards`` record the executor configuration (scan
+    dispatch granularity, scoring backend, plan shards) so perf numbers are
+    attributable to a concrete program shape; None means the engine default.
+    Keeping the block uniform across BENCH files is what lets cross-PR
+    trajectory tooling compare runs without per-bench parsing.
     """
     events = list(events or [])
     norm = []
@@ -176,4 +182,11 @@ def bench_meta(
         else:
             kind, arg = ev
             norm.append(dict(kind=str(kind), arg=arg))
-    return dict(capacity=capacity, active_tenants=active_tenants, events=norm)
+    return dict(
+        capacity=capacity,
+        active_tenants=active_tenants,
+        events=norm,
+        chunk_size=chunk_size,
+        backend=backend,
+        num_shards=num_shards,
+    )

@@ -4,9 +4,9 @@ PIQUE's headline metric is the *rate* at which answer quality improves
 (paper §3.2/§6), so epochs/sec is the number this repo optimizes.  This
 benchmark runs the SAME multi-query workload through both engine drivers:
 
-* **loop** — the per-epoch-dispatch driver: two jitted stages per epoch plus
-  the host round-trips that per-epoch stats reporting costs (the pre-PR-2
-  ``MultiQueryEngine.run`` path, kept for the model-cascade bank);
+* **loop** — the per-epoch-dispatch driver (``EpochProgram.run_loop``, the
+  path a non-traceable model-cascade bank forces): two jitted stages per
+  epoch plus the host round-trips that per-epoch execution costs;
 * **scan** — the fused ``lax.scan`` superstep: every epoch's
   plan -> execute -> apply cycle inlined into ONE jitted dispatch with
   on-device stats accumulation and a single end-of-run host sync.
@@ -63,23 +63,37 @@ def _collect_loop_masks(engine, n: int, epochs: int):
     return masks
 
 
+class _OpaqueBank:
+    """Hides ``supports_scan``: the engine must route to the per-epoch loop
+    driver — the exact posture a non-traceable model-cascade bank forces."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.costs = inner.costs
+
+    def execute(self, plan):
+        return self.inner.execute(plan)
+
+
 def bench_epoch_superstep(small: bool = True, out_path: str = "BENCH_epoch.json"):
     n = 512 if small else 4096
     q = 4 if small else 16
     epochs = 6 if small else 12
     plan_size = 64 if small else 256
     engine = _make_engine(n, q, num_preds=6, plan_size=plan_size)
+    loop_engine = _make_engine(n, q, num_preds=6, plan_size=plan_size)
+    loop_engine.bank = _OpaqueBank(loop_engine.bank)  # force the loop driver
 
     # warm both drivers (compile + trace) before timing steady state
-    engine.run(n, epochs, driver="loop", stop_when_exhausted=False)
+    loop_engine.run(n, epochs, stop_when_exhausted=False)
     engine.run_scan(n, epochs, stop_when_exhausted=False)
 
     t0 = time.perf_counter()
-    _state_l, hist_loop = engine.run(n, epochs, driver="loop", stop_when_exhausted=False)
+    _state_l, hist_loop = loop_engine.run(n, epochs, stop_when_exhausted=False)
     t_loop = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    _state_s, hist_scan = engine.run(n, epochs, driver="scan", stop_when_exhausted=False)
+    _state_s, hist_scan = engine.run_scan(n, epochs, stop_when_exhausted=False)
     t_scan = time.perf_counter() - t0
 
     # exact per-epoch answer-set parity (untimed passes, deterministic re-runs)

@@ -1,0 +1,230 @@
+"""Overlap benchmark: async event pipeline vs lockstep event application.
+
+The session made churn events cheap data updates; this benchmark measures the
+remaining serving overhead — the *synchronization* around them.  The SAME
+event-dense arrival trace (short scan bursts interleaved with ingest/admit/
+retire churn) runs through two serving postures over identical chunked scans:
+
+* **lockstep** — the pre-pipeline loop: every ``run`` materializes its stats
+  (a device sync) before the host looks at the next event, and every event
+  reads ``num_rows`` / ``active`` back from the device;
+* **overlap** — ``core.session.SessionPipeline``: chunks are dispatched and
+  never waited on, events validate against host-side shadows and apply to the
+  in-flight carry, and the only ``block_until_ready`` is the final drain.
+
+Both modes dispatch the identical device work in the identical order, so
+``cost_spent`` / answers / ledger are bitwise identical (asserted) and
+``superstep_traces`` is unchanged — the gap is pure host-device barrier time,
+reported as events/sec and time-to-quality.  Results land in
+``BENCH_overlap.json`` with the shared ``meta`` block extended with
+``chunk_size`` / ``backend`` / ``num_shards``.
+
+    PYTHONPATH=src python -m benchmarks.overlap [--full] [--out BENCH_overlap.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_meta, time_to_quality
+from benchmarks.multi_query import _build_global, _sample_queries
+from repro.core import EngineSession, MultiQueryConfig
+
+
+def _trace(rounds: int, epochs_per_run: int, ingest_per_round: int):
+    """Event-dense: every round a scan burst, an ingest wave, another burst,
+    and a tenant admit/retire — the regime where lockstep pays a sync at
+    every boundary."""
+    ev = [("admit", 0), ("admit", 1)]
+    for r in range(rounds):
+        ev.append(("run", epochs_per_run))
+        ev.append(("ingest", ingest_per_round))
+        ev.append(("run", epochs_per_run))
+        if r % 2 == 0:
+            ev.append(("admit", 2))
+        else:
+            ev.append(("retire", 2))
+    return ev
+
+
+def _make_session(world, capacity, plan_size, chunk_size):
+    preds, evalc, bank, combine, table, _pre = world
+    return EngineSession(
+        [p.positive() for p in preds], table, combine, bank.costs,
+        capacity=capacity, max_tenants=8,
+        config=MultiQueryConfig(
+            plan_size=plan_size, function_selection="best",
+            chunk_size=chunk_size,
+        ),
+    )
+
+
+def _drive(world, queries, trace, n0, plan_size, capacity, chunk, overlap):
+    """Run the trace in one mode; -> (stats dict, (wall_s, mean E(F)) stamps).
+
+    The scan program is compiled on a scratch state before timing, so both
+    modes time steady-state serving (the barrier overhead being measured),
+    not XLA compilation.
+    """
+    bank = world[2]
+    session = _make_session(world, capacity, plan_size, chunk)
+    # warm the chunk program + refresh jits on a scratch state
+    scratch = session.init_state(bank.outputs[:n0])
+    scratch, _ = session.admit(scratch, queries[0][1])
+    session.run(scratch, chunk, stop_when_exhausted=False)
+    traces_warm = session.superstep_traces
+
+    state = session.init_state(bank.outputs[:n0])
+    pool_off = n0
+    slots = {}
+    stamps = []
+    epochs = 0
+    pipe = session.pipeline(state) if overlap else None
+    t0 = time.perf_counter()
+    for kind, arg in trace:
+        if kind == "run":
+            if pipe is not None:
+                pipe.run(arg)
+            else:
+                state, hist = session.run(state, arg, stop_when_exhausted=False)
+                for h in hist:
+                    stamps.append((time.perf_counter() - t0, h.mean_expected_f))
+            epochs += arg
+        elif kind == "admit":
+            if pipe is not None:
+                slots[arg] = pipe.admit(queries[arg][1])
+            else:
+                state, slot = session.admit(state, queries[arg][1])
+                slots[arg] = slot
+        elif kind == "ingest":
+            batch = bank.outputs[pool_off:pool_off + arg]
+            if pipe is not None:
+                pipe.ingest(batch)
+            else:
+                state = session.ingest(state, batch)
+            pool_off += arg
+        else:  # retire
+            if pipe is not None:
+                pipe.retire(slots[arg])
+            else:
+                state = session.retire(state, slots[arg])
+    if pipe is not None:
+        state, _history = pipe.finish()
+        stamps = list(pipe.stamps)
+    wall = time.perf_counter() - t0
+    led = state.ledger
+    return dict(
+        overlap=overlap,
+        wall_s=wall,
+        epochs=epochs,
+        events=len(trace),
+        events_per_sec=len(trace) / max(wall, 1e-9),
+        epochs_per_sec=epochs / max(wall, 1e-9),
+        cost_spent=float(state.cost_spent),
+        superstep_traces=session.superstep_traces,
+        traces_during_trace=session.superstep_traces - traces_warm,
+        retrace_bound=session.retrace_bound,
+        ledger=dict(
+            attributed=[float(x) for x in np.asarray(led.attributed)],
+            archived=float(led.archived),
+            unattributed=float(led.unattributed),
+            reconcile_abs=abs(float(led.reconcile(state.cost_spent))),
+        ),
+    ), stamps, np.asarray(state.derived.in_answer)
+
+
+def bench_overlap(small: bool = True, out_path: str = "BENCH_overlap.json"):
+    n0 = 512 if small else 2048
+    capacity = 2 * n0
+    rounds = 10 if small else 16
+    epochs_per_run = 4 if small else 8
+    chunk = 2 if small else 4
+    plan_size = 64 if small else 256
+    num_preds = 6
+    ingest_per_round = (capacity - n0) // rounds
+    world = _build_global(capacity, num_preds)
+    queries = _sample_queries(world[0], 3, preds_per_query=2)
+    trace = _trace(rounds, epochs_per_run, ingest_per_round)
+
+    lock_stats, lock_stamps, lock_ans = _drive(
+        world, queries, trace, n0, plan_size, capacity, chunk, overlap=False
+    )
+    over_stats, over_stamps, over_ans = _drive(
+        world, queries, trace, n0, plan_size, capacity, chunk, overlap=True
+    )
+
+    # identical device work in identical order: the comparison is valid only
+    # if both modes computed the SAME thing, bit for bit
+    spend_identical = lock_stats["cost_spent"] == over_stats["cost_spent"]
+    answers_identical = bool(np.array_equal(lock_ans, over_ans))
+    ledger_identical = lock_stats["ledger"]["attributed"] == over_stats["ledger"]["attributed"]
+
+    # time-to-quality: wall seconds until the mean active-tenant E(F) first
+    # holds 90% of the lockstep final level (identical trajectories, so the
+    # target is mode-independent)
+    target = 0.9 * (lock_stamps[-1][1] if lock_stamps else 0.0)
+    lock_stats["time_to_quality_s"] = time_to_quality(lock_stamps, target)
+    over_stats["time_to_quality_s"] = time_to_quality(over_stamps, target)
+
+    speedup = over_stats["events_per_sec"] / max(lock_stats["events_per_sec"], 1e-9)
+    payload = dict(
+        benchmark="overlap",
+        meta=bench_meta(
+            capacity=capacity,
+            active_tenants=3,  # at trace end (even rounds: 3rd tenant admitted)
+            events=trace,
+            chunk_size=chunk,
+            backend="jnp",
+            num_shards=1,
+        ),
+        config=dict(
+            num_objects=n0, capacity=capacity, plan_size=plan_size,
+            num_preds=num_preds, rounds=rounds,
+            epochs_per_run=epochs_per_run, chunk_size=chunk, small=small,
+            quality_target=target,
+        ),
+        lockstep=lock_stats,
+        overlap=over_stats,
+        speedup_events_per_sec=speedup,
+        spend_identical=bool(spend_identical),
+        answers_identical=answers_identical,
+        ledger_identical=bool(ledger_identical),
+    )
+    with open(out_path, "w") as fh:
+        json.dump(payload, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    return [
+        dict(
+            name=f"overlap_N{n0}_C{capacity}_chunk{chunk}",
+            us_per_call=1e6 / max(over_stats["events_per_sec"], 1e-9),
+            derived=(
+                f"speedup={speedup:.2f}x"
+                f";overlap_evps={over_stats['events_per_sec']:.2f}"
+                f";lockstep_evps={lock_stats['events_per_sec']:.2f}"
+                f";spend_identical={spend_identical}"
+                f";answers_identical={answers_identical}"
+                f";traces={over_stats['superstep_traces']}"
+                f"/{over_stats['retrace_bound']}"
+            ),
+        )
+    ]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--out", default="BENCH_overlap.json")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    for r in bench_overlap(small=not args.full, out_path=args.out):
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

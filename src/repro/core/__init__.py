@@ -28,6 +28,7 @@ from repro.core.decision_table import (
 from repro.core.threshold import select_answer, select_answer_approx
 from repro.core.benefit import compute_benefits
 from repro.core.plan import Plan, merge_plans_dedup, select_plan
+from repro.core.executor import EngineConfig, EpochProgram
 from repro.core.operator import OperatorConfig, ProgressiveQueryOperator
 from repro.core.multi_query import (
     MultiEpochStats,
@@ -37,12 +38,19 @@ from repro.core.multi_query import (
     QuerySet,
     build_query_set,
 )
-from repro.core.errors import CapacityError, SlotsExhaustedError
-from repro.core.ledger import CostLedger, attribute_epoch, init_ledger, migrate_ledger
+from repro.core.errors import CapacityError, SlotActiveError, SlotsExhaustedError
+from repro.core.ledger import (
+    CostLedger,
+    attribute_epoch,
+    init_ledger,
+    migrate_ledger,
+    reset_slot,
+)
 from repro.core.session import (
     EngineSession,
     SessionDerived,
     SessionEpochStats,
+    SessionPipeline,
     SessionState,
     pad_session_state,
     tier_schedule,
@@ -58,11 +66,12 @@ __all__ = [
     "select_answer", "select_answer_approx", "compute_benefits",
     "Plan", "select_plan", "merge_plans_dedup",
     "OperatorConfig", "ProgressiveQueryOperator",
+    "EngineConfig", "EpochProgram",
     "MultiQueryEngine", "MultiQueryConfig", "MultiQueryState", "MultiEpochStats",
     "QuerySet", "build_query_set",
     "EngineSession", "SessionState", "SessionDerived", "SessionEpochStats",
-    "pad_session_state", "tier_schedule",
-    "CapacityError", "SlotsExhaustedError",
-    "CostLedger", "init_ledger", "attribute_epoch", "migrate_ledger",
+    "SessionPipeline", "pad_session_state", "tier_schedule",
+    "CapacityError", "SlotActiveError", "SlotsExhaustedError",
+    "CostLedger", "init_ledger", "attribute_epoch", "migrate_ledger", "reset_slot",
     "StaticOrderEvaluator",
 ]

@@ -34,6 +34,81 @@ from repro.core.state import EnrichmentState
 NEG_INF = -jnp.inf
 
 
+def candidate_mask(
+    uncertainty: jax.Array,  # [N, P]
+    in_answer: jax.Array,  # [N] bool
+    strategy: str,
+    pred_mask: jax.Array | None = None,  # [P] bool: predicates the query uses
+    row_valid: jax.Array | None = None,  # [N] bool: rows holding real objects
+) -> jax.Array:
+    """[N] bool candidate restriction (§4.1 + the beyond-paper "auto" widening).
+
+    ``pred_mask`` restricts the uncertainty aggregate to the query's own
+    predicate columns — required in the multi-query setting where ``P`` spans
+    the global predicate space and a query must not let other tenants'
+    columns drag its entropy statistics around.
+
+    ``row_valid`` restricts the "auto" median to rows holding real objects —
+    required by the capacity-padded session state (``core.executor``) where
+    invalid rows carry cold prior entropy that would drag the corpus median
+    toward the prior.  With every row valid the masked median is the plain
+    median bitwise (same sort, same middle-pair mean), so the padded path
+    degenerates exactly to this one at capacity == N.
+    """
+    if strategy == "all":
+        return jnp.ones(in_answer.shape, bool)
+    if strategy == "auto":
+        # Beyond-paper hardening (DESIGN.md section 8): the paper's
+        # outside-answer restriction (section 4.1) assumes the answer set is
+        # small/precise.  With diffuse early probabilities, Theorem-1
+        # selection admits most of the corpus and the restriction would
+        # refine only the hopeless tail.  "auto" additionally admits
+        # inside-answer objects that are still uncertain (entropy above
+        # the corpus median) so precision errors inside the set can be
+        # fixed; it reduces to the paper rule once the set sharpens.
+        if pred_mask is None:
+            mean_h = jnp.mean(uncertainty, axis=-1)  # [N]
+        else:
+            denom = jnp.maximum(jnp.sum(pred_mask), 1)
+            mean_h = jnp.sum(jnp.where(pred_mask[None, :], uncertainty, 0.0), -1) / denom
+        if row_valid is None:
+            med = jnp.median(mean_h)
+        else:
+            med = _masked_median(mean_h, row_valid)
+        return (~in_answer) | (mean_h >= jnp.maximum(med, 0.35))
+    return ~in_answer  # "outside_answer" — paper section 4.1 (Fig. 7 benchmarks)
+
+
+def _masked_median(values: jax.Array, valid: jax.Array) -> jax.Array:
+    """Median over the valid entries of ``values`` (shape-stable under jit).
+
+    Invalid entries sort to +inf; the median indices come from the valid
+    count.  Matches ``jnp.median`` bitwise when every entry is valid: same
+    ascending sort, same (lo + hi) / 2 middle-pair mean.
+    """
+    s = jnp.sort(jnp.where(valid, values, jnp.inf))
+    nv = jnp.maximum(jnp.sum(valid), 1)
+    lo = (nv - 1) // 2
+    hi = nv // 2
+    return (s[lo] + s[hi]) / 2
+
+
+def restrict_benefits(
+    benefit: jax.Array,  # [N, P]
+    cand: jax.Array,  # [N] bool
+    plan_size: int,
+) -> jax.Array:
+    """Apply the candidate restriction with a starvation guard: never leave
+    fewer valid triples than one plan; widen back to all objects when the
+    restriction would."""
+    restricted = jnp.where(cand[:, None], benefit, -jnp.inf)
+    n_valid = jnp.sum(jnp.isfinite(restricted))
+    use_restricted = n_valid >= jnp.minimum(
+        plan_size, jnp.sum(jnp.isfinite(benefit))
+    )
+    return jnp.where(use_restricted, restricted, benefit)
+
+
 class TripleBenefits(NamedTuple):
     benefit: jax.Array  # [N, P] f32; -inf where no candidate triple exists
     next_fn: jax.Array  # [N, P] int32; -1 where exhausted

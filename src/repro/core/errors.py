@@ -27,6 +27,21 @@ class CapacityError(ValueError):
         self.requested = int(requested)
 
 
+class SlotActiveError(ValueError):
+    """Admission targeted a slot that is still occupied.
+
+    ``slot`` is the requested index; the handler's fix is to ``retire`` the
+    occupant first (which issues its final bill and frees the slot) or admit
+    without a slot hint and let the session pick a free one.  Subclasses
+    ``ValueError`` because that is what the session raised before this type
+    existed, so existing handlers keep working.
+    """
+
+    def __init__(self, message: str, *, slot: int):
+        super().__init__(message)
+        self.slot = int(slot)
+
+
 class SlotsExhaustedError(RuntimeError):
     """Tenant-slot exhaustion: ``admit`` found no free slot.
 

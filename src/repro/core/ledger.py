@@ -49,14 +49,20 @@ class CostLedger:
     triples: jax.Array  # [S] f32: fractional triple count (1/n_want shares)
     wanted: jax.Array  # [S] int32: chargeable triples each slot's plans wanted
     unattributed: jax.Array  # [] f32: charged cost with no wanting tenant
+    # cost billed to since-departed tenants whose slot was recycled
+    # (``reset_slot`` folds a retired tenant's final bill here when a new
+    # tenant is admitted into the slot, so admission starts from a zero
+    # accumulator without losing the accounting identity)
+    archived: jax.Array  # [] f32
 
     @property
     def num_slots(self) -> int:
         return self.attributed.shape[0]
 
     def total(self) -> jax.Array:
-        """[] f32: everything the ledger accounts for (tenants + orphans)."""
-        return jnp.sum(self.attributed) + self.unattributed
+        """[] f32: everything the ledger accounts for (tenants + orphans +
+        departed tenants whose slots were recycled)."""
+        return jnp.sum(self.attributed) + self.unattributed + self.archived
 
     def reconcile(self, cost_spent: jax.Array) -> jax.Array:
         """[] f32 residual vs the substrate's cumulative spend (0 == exact)."""
@@ -71,8 +77,8 @@ class CostLedger:
         accumulation — leaves an ulp-level residue.  Invoicing is a host-side
         read-out, so the residue is folded deterministically into the LAST
         slot that was ever billed (highest index with ``wanted > 0``), fixed
-        to the point where the left-to-right f32 fold — ``unattributed``
-        first, then bills in ascending slot order — equals ``cost_spent``
+        to the point where the left-to-right f32 fold — ``archived``, then
+        ``unattributed``, then bills in ascending slot order — equals ``cost_spent``
         bit for bit.  That fold order is the reconciliation contract; the
         residue lands in the fold's final effective addition (later slots
         carry exact zeros), whose granularity is at least as fine as the
@@ -82,12 +88,13 @@ class CostLedger:
         """
         att = np.asarray(jax.device_get(self.attributed), np.float32).copy()
         unatt = np.float32(np.asarray(jax.device_get(self.unattributed)))
+        arch = np.float32(np.asarray(jax.device_get(self.archived)))
         target = np.float32(np.asarray(jax.device_get(cost_spent)))
         billed = np.flatnonzero(np.asarray(jax.device_get(self.wanted)) > 0)
         j = int(billed[-1]) if billed.size else att.shape[0] - 1
 
         def fold(bills):
-            acc = unatt
+            acc = np.float32(arch + unatt)
             for v in bills:
                 acc = np.float32(acc + np.float32(v))
             return acc
@@ -112,6 +119,25 @@ def init_ledger(num_slots: int, dtype=jnp.float32) -> CostLedger:
         triples=jnp.zeros((num_slots,), dtype),
         wanted=jnp.zeros((num_slots,), jnp.int32),
         unattributed=jnp.zeros((), dtype),
+        archived=jnp.zeros((), dtype),
+    )
+
+
+def reset_slot(ledger: CostLedger, slot: int) -> CostLedger:
+    """Zero a tenant slot's accumulators, archiving its outstanding bill.
+
+    Admitting a new tenant into a recycled slot must not inherit the previous
+    occupant's spend (the previous tenant's final invoice was issued at
+    retirement); the bill moves to ``archived`` so the accounting identity
+    ``total() == cost_spent`` survives the recycle.  A never-billed slot
+    resets to itself (archiving exact zeros changes no bits).
+    """
+    return CostLedger(
+        attributed=ledger.attributed.at[slot].set(0.0),
+        triples=ledger.triples.at[slot].set(0.0),
+        wanted=ledger.wanted.at[slot].set(0),
+        unattributed=ledger.unattributed,
+        archived=ledger.archived + ledger.attributed[slot],
     )
 
 
@@ -169,6 +195,7 @@ def attribute_epoch(
         triples=ledger.triples + per_slot_frac,
         wanted=ledger.wanted + per_slot_wanted,
         unattributed=ledger.unattributed + orphan,
+        archived=ledger.archived,
     )
 
 

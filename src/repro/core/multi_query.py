@@ -1,26 +1,23 @@
 """Multi-query batched PIQUE engine: Q concurrent queries, one shared corpus.
 
-The paper's operator (``core.operator``) serves one query; its §5 cache only
-helps *successive* queries.  At serving scale the win comes from sharing
-enrichment across *concurrent* consumers (IDEA, Wang & Carey 2019): most
-tenants' queries overlap on popular predicates, so the same (object,
-predicate, function) triples keep getting requested.  This engine runs Q
-queries in lockstep epochs over one ``SharedSubstrate``:
+At serving scale the win comes from sharing enrichment across *concurrent*
+consumers (IDEA, Wang & Carey 2019): most tenants' queries overlap on popular
+predicates, so the same (object, predicate, function) triples keep getting
+requested.  This engine runs Q queries in lockstep epochs over one
+``SharedSubstrate`` with cross-query plan dedup — a triple is executed and
+charged once no matter how many queries want it.
 
-* raw tagging outputs / exec bits / cost live once in the substrate — a triple
-  is executed and charged once no matter how many queries want it;
-* per-query derived state (``pred_prob`` / ``uncertainty`` / ``joint_prob`` /
-  ``in_answer``) is stacked on a leading ``[Q, ...]`` axis; plan generation
-  and Theorem-1 answer selection are vmapped over it;
-* the Q per-query plans are merged with **cross-query dedup**
-  (``plan.merge_plans_dedup``): duplicate triples execute once in the bank and
-  their outputs fan back out to every requesting query through the substrate;
-* newly admitted queries warm-start from the substrate via the existing
-  ``state.with_cached_state`` path, so a popular corpus serves its Q+1'th
-  tenant nearly for free.
-
-Both execution backends (``SimulatedBank``, ``ModelCascadeBank``) plug in
-unchanged: they only ever see the merged plan.
+Since the executor unification, ``MultiQueryEngine`` is a thin facade over
+``EngineSession`` at ``capacity == N`` with ``max_tenants == Q``: each
+conjunctive query is one tenant slot (a predicate-column mask), and
+``run`` / ``run_scan`` convert ``MultiQueryState`` at the boundary and
+delegate to the shared ``core.executor.EpochProgram`` — the chunked
+fused-scan superstep for traceable banks, the split-at-the-bank loop driver
+for model cascades.  A legacy per-epoch path (``run_epoch`` + the jitted
+``_plan_epoch`` / ``_apply_and_select`` stages) survives for general
+(non-conjunctive) ASTs, which evaluate Python query structure the session's
+data-masked slots cannot express, and as the serving layer's per-epoch
+control-point API.
 """
 
 from __future__ import annotations
@@ -35,18 +32,33 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import benefit as benefit_lib
-from repro.core import operator as operator_lib
+from repro.core import ledger as ledger_lib
 from repro.core import plan as plan_lib
 from repro.core import query as query_lib
 from repro.core import state as state_lib
 from repro.core import threshold as threshold_lib
-from repro.core.benefit import NEG_INF, TripleBenefits, estimate_pred_prob_after
+from repro.core.benefit import (
+    NEG_INF,
+    TripleBenefits,
+    candidate_mask,
+    estimate_pred_prob_after,
+    restrict_benefits,
+)
 from repro.core.combine import CombineParams, combine_probabilities
 from repro.core.decision_table import DecisionTable
 from repro.core.entropy import binary_entropy
+from repro.core.executor import (  # noqa: F401  (select_plans_batched re-export)
+    EngineConfig,
+    resolve_deprecated_driver,
+    scan_capable,
+    select_plans_batched,
+)
 from repro.core.metrics import true_f_alpha
 from repro.core.query import CompiledQuery
 from repro.core.state import PerQueryState, SharedSubstrate
+
+# Back-compat alias: one config type for every engine (see core.executor).
+MultiQueryConfig = EngineConfig
 
 
 # --------------------------------------------------------------- query set --
@@ -172,49 +184,6 @@ def build_query_set(
     )
 
 
-def select_plans_batched(
-    benefits: TripleBenefits,  # [Q, N, P] leaves
-    plan_size: int,
-    num_shards: int,
-    num_predicates: int,
-) -> plan_lib.Plan:
-    """Per-query plan selection, optionally sharded over the object axis.
-
-    With ``num_shards=S``: every shard top-ks its own [N/S, P] slice (the
-    per-device program under a ("pod", "data") shard_map — emulated here
-    with a reshape + vmap, which lowers to the identical local compute),
-    then the survivors reduce through the EXACT cross-shard merge, so the
-    result is byte-identical to the unsharded top-k on every valid lane.
-    Shared by ``MultiQueryEngine`` and ``EngineSession`` (``core.session``).
-    """
-    sel = functools.partial(plan_lib.select_plan, plan_size=plan_size)
-    if num_shards <= 1:
-        return jax.vmap(sel)(benefits)
-    s = num_shards
-    q, n, p = benefits.benefit.shape
-    per_shard = n // s
-
-    def reshard(x):  # [Q, N, P] -> [S, Q, N/S, P]
-        return x.reshape(q, s, per_shard, p).transpose(1, 0, 2, 3)
-
-    local = TripleBenefits(*(reshard(x) for x in benefits))
-    local_plans = jax.vmap(jax.vmap(sel))(local)  # [S, Q, K]
-    offsets = (jnp.arange(s, dtype=jnp.int32) * per_shard)[:, None, None]
-    local_plans = local_plans._replace(
-        object_idx=local_plans.object_idx + offsets
-    )
-    by_query = jax.tree.map(
-        lambda x: x.transpose(1, 0, 2), local_plans
-    )  # [Q, S, K]
-    return jax.vmap(
-        functools.partial(
-            plan_lib.merge_sharded_plans_exact,
-            plan_size=plan_size,
-            num_predicates=num_predicates,
-        )
-    )(by_query)
-
-
 # ------------------------------------------------------------ engine state --
 
 
@@ -231,25 +200,6 @@ class MultiQueryState:
     @property
     def cost_spent(self) -> jax.Array:
         return self.substrate.cost_spent
-
-
-@dataclasses.dataclass(frozen=True)
-class MultiQueryConfig:
-    plan_size: int = 256  # per-query plan capacity
-    merged_capacity: Optional[int] = None  # None: Q * plan_size (lossless merge)
-    epoch_cost_budget: Optional[float] = None  # applied to the merged plan
-    alpha: float = 1.0
-    answer_mode: str = "exact"  # "exact" | "approx"
-    candidate_strategy: str = "auto"  # "outside_answer" | "all" | "auto"
-    function_selection: str = "table"  # "table" (paper) | "best" (beyond-paper)
-    prior: float = 0.5
-    backend: str = "jnp"  # "jnp" | "pallas" (fused batched scoring kernel)
-    pallas_interpret: Optional[bool] = None  # None: interpret iff CPU
-    # >1: plan selection runs hierarchically over this many object shards
-    # (per-shard top-k + exact cross-shard merge), byte-identical to the
-    # unsharded path; the emulated-shard program is what each ("pod", "data")
-    # mesh device runs under shard_map at pod scale.
-    num_shards: int = 1
 
 
 @dataclasses.dataclass
@@ -289,7 +239,7 @@ class MultiQueryEngine:
         combine_params: CombineParams,
         costs: jax.Array,  # [P, F] over the GLOBAL predicate space
         bank,  # TaggingBank: .execute(plan) -> [K] probs
-        config: MultiQueryConfig = MultiQueryConfig(),
+        config: EngineConfig = EngineConfig(),
         truth_masks: Optional[jax.Array] = None,  # [Q, N] bool (metrics only)
     ):
         if config.function_selection == "best" and not query_set.all_conjunctive:
@@ -313,9 +263,105 @@ class MultiQueryEngine:
         self.truth_masks = truth_masks
         self._plan_fn = jax.jit(self._plan_epoch)
         self._update_fn = jax.jit(self._apply_and_select)
-        self._scan_cache: dict = {}
+        self._session = None  # lazily built (num_objects, EngineSession)
 
-    # ---- derived-state maintenance -----------------------------------------
+    # ---- session facade ------------------------------------------------------
+
+    def _session_for(self, num_objects: int):
+        from repro.core.session import EngineSession
+
+        if self._session is None or self._session[0] != num_objects:
+            self._session = (
+                num_objects,
+                EngineSession(
+                    self.query_set.global_predicates,
+                    self.table,
+                    self.combine_params,
+                    self.costs,
+                    capacity=num_objects,
+                    max_tenants=self.query_set.num_queries,
+                    config=self.config,
+                    truth_masks=self.truth_masks,  # per-slot true-F on device
+                ),
+            )
+        return self._session[1]
+
+    def _to_session_state(self, state: MultiQueryState, for_donation: bool = False):
+        """MultiQueryState -> SessionState at capacity == N, every slot active.
+
+        Pure re-labelling: the substrate passes through, the Q-broadcast
+        derived leaves collapse to their shared [N, P] row, and the query
+        set's predicate masks become the tenant-slot masks.  A state headed
+        into a donating dispatch copies the leaves that alias engine-owned
+        buffers (bank outputs, query-set masks) so donation can never
+        invalidate them.
+        """
+        from repro.core.executor import SessionDerived, SessionState
+
+        q = self.query_set.num_queries
+        n = state.substrate.num_objects
+        if scan_capable(self.bank):
+            outputs = jnp.asarray(self.bank.outputs, jnp.float32)
+        else:  # loop driver: the buffer is never gathered, only shape matters
+            outputs = jnp.full(
+                (n, self.query_set.num_predicates, self.costs.shape[1]),
+                self.config.prior,
+                jnp.float32,
+            )
+        pred_mask = self.query_set.pred_mask
+        if for_donation:
+            outputs = jnp.array(outputs, copy=True)
+            pred_mask = jnp.array(pred_mask, copy=True)
+        return SessionState(
+            substrate=state.substrate,
+            derived=SessionDerived(
+                pred_prob=state.per_query.pred_prob[0],
+                uncertainty=state.per_query.uncertainty[0],
+                joint_prob=state.per_query.joint_prob,
+                in_answer=state.per_query.in_answer,
+            ),
+            bank_outputs=outputs,
+            pred_mask=pred_mask,
+            active=jnp.ones((q,), bool),
+            num_rows=jnp.asarray(n, jnp.int32),
+            ledger=ledger_lib.init_ledger(q),
+        )
+
+    def _from_session_state(self, sst) -> MultiQueryState:
+        q = self.query_set.num_queries
+        shape = (q,) + sst.derived.pred_prob.shape
+        return MultiQueryState(
+            substrate=sst.substrate,
+            per_query=PerQueryState(
+                pred_prob=jnp.broadcast_to(sst.derived.pred_prob[None], shape),
+                uncertainty=jnp.broadcast_to(sst.derived.uncertainty[None], shape),
+                joint_prob=sst.derived.joint_prob,
+                in_answer=sst.derived.in_answer,
+            ),
+        )
+
+    def _stats_from_session(self, hist, collect_masks: bool) -> list:
+        out = []
+        for h in hist:
+            tf = h.true_f  # computed on-device by the superstep, [S] floats
+            out.append(
+                MultiEpochStats(
+                    epoch=h.epoch,
+                    cost_spent=h.cost_spent,
+                    epoch_cost=h.epoch_cost,
+                    requested_cost=h.requested_cost,
+                    expected_f=h.expected_f,
+                    answer_size=h.answer_size,
+                    true_f=tf,
+                    plan_valid=h.plan_valid,
+                    merged_valid=h.merged_valid,
+                    wall_time_s=h.wall_time_s,
+                    answer_mask=h.answer_mask if collect_masks else None,
+                )
+            )
+        return out
+
+    # ---- derived-state maintenance (legacy per-epoch path) -------------------
 
     def _derive(self, substrate: SharedSubstrate) -> tuple[jax.Array, ...]:
         """Shared recombination + batched joint: the fan-out step.
@@ -454,10 +500,10 @@ class MultiQueryEngine:
             self.truth_masks = jnp.concatenate([self.truth_masks, truth_mask[None]])
         self._plan_fn = jax.jit(self._plan_epoch)
         self._update_fn = jax.jit(self._apply_and_select)
-        self._scan_cache.clear()  # Q (and truth_masks) changed shape
+        self._session = None  # stale Q-shaped facade session dropped
         return MultiQueryState(substrate=sub, per_query=new_per)
 
-    # ---- jitted stages ------------------------------------------------------
+    # ---- legacy jitted stages (general ASTs + per-epoch serving API) ---------
 
     def _benefits_batched(self, state: MultiQueryState) -> TripleBenefits:
         """Vectorized Eq. 11 with [Q, N, P] leaves over the global space.
@@ -470,10 +516,8 @@ class MultiQueryEngine:
 
         Conjunctive query sets route through the shared-substrate fast path
         (``benefit.compute_benefits_batched`` or the fused Pallas kernel per
-        ``config.backend``): substrate-keyed quantities are computed once at
-        [N, P] and only the joint update carries the Q axis.  ``pred_prob`` /
-        ``uncertainty`` are query-independent under shared combine params
-        (see ``PerQueryState``), so row 0 stands in for every query.
+        ``config.backend``); general ASTs re-evaluate per query with one
+        substituted column.
         """
         cfg = self.config
         sub = state.substrate
@@ -540,29 +584,26 @@ class MultiQueryEngine:
         # "auto" strategy under hot-query traffic.
         ui, inv = self.query_set.unique_rows, self.query_set.unique_index
         cand_u = jax.vmap(
-            lambda u, a, m: operator_lib.candidate_mask(
+            lambda u, a, m: candidate_mask(
                 u, a, cfg.candidate_strategy, pred_mask=m
             )
         )(per.uncertainty[ui], per.in_answer[ui], pred_mask[ui])  # [U, N]
         cand = cand_u[inv]  # [Q, N]
         benefit = jax.vmap(
-            lambda b, c: operator_lib.restrict_benefits(b, c, cfg.plan_size)
+            lambda b, c: restrict_benefits(b, c, cfg.plan_size)
         )(benefit, cand)
         return TripleBenefits(benefit=benefit, next_fn=nf, est_joint=est_joint, cost=cost)
-
-    def _select_plans(self, benefits: TripleBenefits) -> plan_lib.Plan:
-        return select_plans_batched(
-            benefits,
-            plan_size=self.config.plan_size,
-            num_shards=self.config.num_shards,
-            num_predicates=self.query_set.num_predicates,
-        )
 
     def _plan_epoch(self, state: MultiQueryState) -> tuple[plan_lib.Plan, plan_lib.Plan]:
         """-> (per-query plans [Q, K], merged deduplicated plan [M])."""
         cfg = self.config
         benefits = self._benefits_batched(state)
-        plans = self._select_plans(benefits)
+        plans = select_plans_batched(
+            benefits,
+            plan_size=cfg.plan_size,
+            num_shards=cfg.num_shards,
+            num_predicates=self.query_set.num_predicates,
+        )
         merged = plan_lib.merge_plans_dedup(
             plans,
             self.query_set.num_predicates,
@@ -595,119 +636,7 @@ class MultiQueryEngine:
         )
         return MultiQueryState(substrate=sub, per_query=per), sel
 
-    # ---- fused scan superstep ----------------------------------------------
-
-    def _superstep(self, state: MultiQueryState, collect_masks: bool):
-        """One plan -> execute -> apply epoch as a pure scan body.
-
-        Only valid when ``bank.execute`` is traceable (``supports_scan``,
-        e.g. the simulated bank's gather); the model-cascade bank batches at
-        the Python level and stays on the loop driver.
-        """
-        plans, merged = self._plan_epoch(state)
-        outputs = self.bank.execute(merged)
-        prev_cost = state.substrate.cost_spent
-        new_state, sel = self._apply_and_select(state, merged, outputs)
-        stats = dict(
-            cost_spent=new_state.substrate.cost_spent,
-            epoch_cost=new_state.substrate.cost_spent - prev_cost,
-            requested_cost=jnp.sum(jnp.where(plans.valid, plans.cost, 0.0)),
-            expected_f=sel.expected_f,
-            answer_size=sel.size,
-            plan_valid=jnp.sum(plans.valid, axis=1),
-            merged_valid=merged.num_valid(),
-        )
-        if self.truth_masks is not None:
-            stats["true_f"] = jax.vmap(
-                lambda m, t: true_f_alpha(m, t, self.config.alpha)
-            )(sel.mask, self.truth_masks)
-        if collect_masks:
-            stats["answer_mask"] = sel.mask
-        return new_state, stats
-
-    def _get_scan_fn(self, num_epochs: int, collect_masks: bool, donate: bool):
-        """Jitted scan over epochs, with optional buffer donation.
-
-        Donating the ``MultiQueryState`` argument lets XLA update the
-        substrate (the [N, P, F] tensors that dominate memory) in place
-        across the whole run instead of holding the pre-run copy alive.
-        Only states the driver created itself are donated: a caller-passed
-        state must stay readable after the run (loop-driver contract), and
-        CPU does not implement donation at all.
-        """
-        key = (num_epochs, collect_masks, donate)
-        if key not in self._scan_cache:
-
-            def run_fn(state):
-                return jax.lax.scan(
-                    lambda s, _: self._superstep(s, collect_masks),
-                    state,
-                    None,
-                    length=num_epochs,
-                )
-
-            argnums = (0,) if donate else ()
-            self._scan_cache[key] = jax.jit(run_fn, donate_argnums=argnums)
-        return self._scan_cache[key]
-
-    def run_scan(
-        self,
-        num_objects: int,
-        num_epochs: int,
-        state: Optional[MultiQueryState] = None,
-        stop_when_exhausted: bool = True,
-        collect_masks: bool = False,
-    ) -> tuple[MultiQueryState, list]:
-        """Run ``num_epochs`` epochs as ONE device dispatch (jitted lax.scan).
-
-        Eliminates the per-epoch dispatch + host-sync overhead of the loop
-        driver: per-epoch stats are accumulated on-device and crossed to the
-        host once at the end.  The scan has static length — epochs after
-        exhaustion are no-ops (nothing left to plan, nothing charged) and
-        their stats are trimmed to match the loop driver's early break.
-        Per-epoch ``wall_time_s`` is the amortized total (the scan has no
-        per-epoch host clock by construction).
-        """
-        donate = state is None and jax.default_backend() != "cpu"
-        if state is None:
-            state = self.init_state(num_objects)
-        fn = self._get_scan_fn(num_epochs, collect_masks, donate)
-        t0 = time.perf_counter()
-        state, stats = fn(state)
-        stats = jax.device_get(stats)  # the run's single host sync
-        state = jax.block_until_ready(state)
-        wall = time.perf_counter() - t0
-        history: list[MultiEpochStats] = []
-        for e in range(num_epochs):
-            merged_valid = int(stats["merged_valid"][e])
-            history.append(
-                MultiEpochStats(
-                    epoch=e,
-                    cost_spent=float(stats["cost_spent"][e]),
-                    epoch_cost=float(stats["epoch_cost"][e]),
-                    requested_cost=float(stats["requested_cost"][e]),
-                    expected_f=[float(x) for x in stats["expected_f"][e]],
-                    answer_size=[int(x) for x in stats["answer_size"][e]],
-                    true_f=(
-                        [float(x) for x in stats["true_f"][e]]
-                        if "true_f" in stats
-                        else None
-                    ),
-                    plan_valid=[int(x) for x in stats["plan_valid"][e]],
-                    merged_valid=merged_valid,
-                    wall_time_s=wall / num_epochs,
-                    answer_mask=(
-                        np.asarray(stats["answer_mask"][e])
-                        if collect_masks
-                        else None
-                    ),
-                )
-            )
-            if stop_when_exhausted and merged_valid == 0:
-                break
-        return state, history
-
-    # ---- public driver ------------------------------------------------------
+    # ---- public drivers ------------------------------------------------------
 
     def run_epoch(self, state: MultiQueryState):
         t0 = time.perf_counter()
@@ -718,32 +647,56 @@ class MultiQueryEngine:
         wall = time.perf_counter() - t0
         return state, sel, plans, merged, wall, prev_cost
 
-    def run(
+    def run_scan(
         self,
         num_objects: int,
         num_epochs: int,
         state: Optional[MultiQueryState] = None,
         stop_when_exhausted: bool = True,
-        driver: str = "auto",  # "auto" | "scan" | "loop"
+        collect_masks: bool = False,
+        chunk_size: Optional[int] = None,
     ) -> tuple[MultiQueryState, list]:
-        """Progressive evaluation for ``num_epochs`` epochs.
+        """Run ``num_epochs`` epochs through the unified chunked-scan
+        superstep (an ``EngineSession`` at capacity == N; per-epoch stats
+        accumulate on-device, one host sync at the end).
 
-        ``driver="auto"`` picks the fused scan superstep whenever the bank's
-        ``execute`` is traceable (``supports_scan``, the simulated bank) and
-        falls back to the per-epoch Python loop otherwise (the model-cascade
-        bank, which batches real model inference outside jit).
+        Non-conjunctive query sets fall back to the legacy per-epoch loop
+        with identical results (general ASTs are outside the session's
+        data-masked slot model).  Post-exhaustion epochs are no-ops trimmed
+        from the history; ``wall_time_s`` is the amortized total.
         """
-        if driver == "auto":
-            driver = "scan" if getattr(self.bank, "supports_scan", False) else "loop"
-        if driver == "scan":
-            return self.run_scan(
-                num_objects, num_epochs, state=state,
-                stop_when_exhausted=stop_when_exhausted,
-            )
-        if driver != "loop":
-            raise ValueError(f"unknown driver: {driver!r}")
+        created_here = state is None
         if state is None:
             state = self.init_state(num_objects)
+        if not self.query_set.all_conjunctive:
+            return self._run_legacy_loop(
+                state, num_epochs, stop_when_exhausted
+            )
+        session = self._session_for(num_objects)
+        if scan_capable(self.bank):
+            # donate driver-created states off-CPU (the pre-facade policy):
+            # XLA updates the [N, P, F] tensors in place across the run
+            donate = created_here and jax.default_backend() != "cpu"
+            sst, hist = session.program.run_scan(
+                self._to_session_state(state, for_donation=donate),
+                num_epochs, collect_masks=collect_masks,
+                stop_when_exhausted=stop_when_exhausted, chunk_size=chunk_size,
+                donate=donate,
+            )
+        else:
+            sst, hist = session.run_loop(
+                self._to_session_state(state), num_epochs, self.bank,
+                collect_masks=collect_masks,
+                stop_when_exhausted=stop_when_exhausted,
+            )
+        return (
+            self._from_session_state(sst),
+            self._stats_from_session(hist, collect_masks),
+        )
+
+    def _run_legacy_loop(
+        self, state: MultiQueryState, num_epochs: int, stop_when_exhausted: bool
+    ) -> tuple[MultiQueryState, list]:
         history: list[MultiEpochStats] = []
         for e in range(num_epochs):
             state, sel, plans, merged, wall, prev_cost = self.run_epoch(state)
@@ -773,3 +726,29 @@ class MultiQueryEngine:
             if stop_when_exhausted and merged_valid == 0:
                 break
         return state, history
+
+    def run(
+        self,
+        num_objects: int,
+        num_epochs: int,
+        state: Optional[MultiQueryState] = None,
+        stop_when_exhausted: bool = True,
+        driver: Optional[str] = None,  # DEPRECATED: run() routes itself
+        chunk_size: Optional[int] = None,
+    ) -> tuple[MultiQueryState, list]:
+        """Progressive evaluation for ``num_epochs`` epochs.
+
+        Routes to the unified scan superstep whenever the session facade can
+        serve the query set (all-conjunctive) — with the loop driver
+        substituted inside it for non-traceable banks — and to the legacy
+        per-epoch loop otherwise.  ``driver`` is a deprecated shim.
+        """
+        forced = resolve_deprecated_driver(driver)
+        if forced == "loop" or not self.query_set.all_conjunctive:
+            if state is None:
+                state = self.init_state(num_objects)
+            return self._run_legacy_loop(state, num_epochs, stop_when_exhausted)
+        return self.run_scan(
+            num_objects, num_epochs, state=state,
+            stop_when_exhausted=stop_when_exhausted, chunk_size=chunk_size,
+        )

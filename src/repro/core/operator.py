@@ -1,36 +1,40 @@
-"""The progressive integrated query operator (paper section 3): epoch loop of
-plan generation -> plan execution -> answer-set selection.
+"""The progressive integrated query operator (paper section 3), as a thin
+facade over the unified session executor.
 
-Two execution backends plug into the same loop:
+``ProgressiveQueryOperator`` keeps its paper-era API (EnrichmentState in,
+EpochStats out) but no longer owns a scan driver: a conjunctive query is ONE
+tenant slot of an ``EngineSession`` at ``capacity == N``, so ``run`` /
+``run_scan`` convert the state at the boundary and delegate to the shared
+``core.executor.EpochProgram`` (chunked fused-scan superstep for traceable
+banks, the split-at-the-bank loop driver for model cascades).  A legacy
+per-epoch path (``run_epoch`` + the jitted ``_plan_epoch`` /
+``_apply_and_select`` stages) survives for the query shapes the session's
+data-masked slots cannot express: non-conjunctive queries (general ASTs
+evaluate Python query structure), ``benefit_mode="exact_slow"`` (the
+paper's §6.3.3 default strategy), and custom ``benefit_fn`` overrides.
 
-* ``SimulatedBank`` (``repro.enrich.simulated``) — tagging-function outputs are
-  pre-materialized tensors; the whole epoch is a single jitted function.  Used
-  for the paper's experimental reproduction where functions are scikit-learn
-  scale, and for unit/property tests.
-* ``ModelCascadeBank`` (``repro.enrich.cascade``) — functions are transformer
-  backbones (the assigned architectures) applied with pjit; plan generation /
-  state update stay jitted, execution batches objects per function.
-
-Candidate selection (§4.1), budgeted plans (§3.2/4.4), Theorem-1 answer
-selection (§3.3) and the Eq. 11 benefit all live in sibling modules; this file
-is only the conductor.
+``candidate_mask`` / ``restrict_benefits`` moved to ``core.benefit`` (they
+are scoring policy, shared by every engine); re-exported for back-compat.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import benefit as benefit_lib
+from repro.core import ledger as ledger_lib
 from repro.core import plan as plan_lib
 from repro.core import state as state_lib
 from repro.core import threshold as threshold_lib
+from repro.core.benefit import candidate_mask, restrict_benefits  # noqa: F401
 from repro.core.combine import CombineParams
 from repro.core.decision_table import DecisionTable
+from repro.core.executor import EngineConfig, resolve_deprecated_driver, scan_capable
 from repro.core.metrics import true_f_alpha
 from repro.core.query import CompiledQuery
 
@@ -46,81 +50,7 @@ class OperatorConfig:
     benefit_mode: str = "fast"  # "fast" (Eq. 11) | "exact_slow" (§6.3.3 default)
     function_selection: str = "table"  # "table" (paper) | "best" (beyond-paper)
     prior: float = 0.5
-
-
-def candidate_mask(
-    uncertainty: jax.Array,  # [N, P]
-    in_answer: jax.Array,  # [N] bool
-    strategy: str,
-    pred_mask: Optional[jax.Array] = None,  # [P] bool: predicates the query uses
-    row_valid: Optional[jax.Array] = None,  # [N] bool: rows holding real objects
-) -> jax.Array:
-    """[N] bool candidate restriction (§4.1 + the beyond-paper "auto" widening).
-
-    ``pred_mask`` restricts the uncertainty aggregate to the query's own
-    predicate columns — required in the multi-query engine where ``P`` spans
-    the global predicate space and a query must not let other tenants'
-    columns drag its entropy statistics around.
-
-    ``row_valid`` restricts the "auto" median to rows holding real objects —
-    required by the capacity-padded session (``core.session``) where invalid
-    rows carry cold prior entropy that would drag the corpus median toward
-    the prior.  With every row valid the masked median is the plain median
-    bitwise (same sort, same middle-pair mean), so the padded path degenerates
-    exactly to this one at capacity == N.
-    """
-    if strategy == "all":
-        return jnp.ones(in_answer.shape, bool)
-    if strategy == "auto":
-        # Beyond-paper hardening (DESIGN.md section 8): the paper's
-        # outside-answer restriction (section 4.1) assumes the answer set is
-        # small/precise.  With diffuse early probabilities, Theorem-1
-        # selection admits most of the corpus and the restriction would
-        # refine only the hopeless tail.  "auto" additionally admits
-        # inside-answer objects that are still uncertain (entropy above
-        # the corpus median) so precision errors inside the set can be
-        # fixed; it reduces to the paper rule once the set sharpens.
-        if pred_mask is None:
-            mean_h = jnp.mean(uncertainty, axis=-1)  # [N]
-        else:
-            denom = jnp.maximum(jnp.sum(pred_mask), 1)
-            mean_h = jnp.sum(jnp.where(pred_mask[None, :], uncertainty, 0.0), -1) / denom
-        if row_valid is None:
-            med = jnp.median(mean_h)
-        else:
-            med = _masked_median(mean_h, row_valid)
-        return (~in_answer) | (mean_h >= jnp.maximum(med, 0.35))
-    return ~in_answer  # "outside_answer" — paper section 4.1 (Fig. 7 benchmarks)
-
-
-def _masked_median(values: jax.Array, valid: jax.Array) -> jax.Array:
-    """Median over the valid entries of ``values`` (shape-stable under jit).
-
-    Invalid entries sort to +inf; the median indices come from the valid
-    count.  Matches ``jnp.median`` bitwise when every entry is valid: same
-    ascending sort, same (lo + hi) / 2 middle-pair mean.
-    """
-    s = jnp.sort(jnp.where(valid, values, jnp.inf))
-    nv = jnp.maximum(jnp.sum(valid), 1)
-    lo = (nv - 1) // 2
-    hi = nv // 2
-    return (s[lo] + s[hi]) / 2
-
-
-def restrict_benefits(
-    benefit: jax.Array,  # [N, P]
-    cand: jax.Array,  # [N] bool
-    plan_size: int,
-) -> jax.Array:
-    """Apply the candidate restriction with a starvation guard: never leave
-    fewer valid triples than one plan; widen back to all objects when the
-    restriction would."""
-    restricted = jnp.where(cand[:, None], benefit, -jnp.inf)
-    n_valid = jnp.sum(jnp.isfinite(restricted))
-    use_restricted = n_valid >= jnp.minimum(
-        plan_size, jnp.sum(jnp.isfinite(benefit))
-    )
-    return jnp.where(use_restricted, restricted, benefit)
+    chunk_size: Optional[int] = None  # scan dispatch granularity (see executor)
 
 
 @dataclasses.dataclass
@@ -159,9 +89,119 @@ class ProgressiveQueryOperator:
         self._benefit_fn = benefit_fn
         self._plan_fn = jax.jit(self._plan_epoch)
         self._update_fn = jax.jit(self._apply_and_select)
-        self._scan_cache: dict = {}
+        self._session = None  # lazily built (num_objects, EngineSession)
 
-    # ---- jitted stages ------------------------------------------------------
+    # ---- session facade ------------------------------------------------------
+
+    @property
+    def _legacy_only(self) -> bool:
+        """Query shapes the session's data-masked slots cannot express."""
+        return (
+            self._benefit_fn is not None
+            or self.config.benefit_mode == "exact_slow"
+            or not self.query.is_conjunctive
+        )
+
+    def _engine_config(self) -> EngineConfig:
+        cfg = self.config
+        return EngineConfig(
+            plan_size=cfg.plan_size,
+            epoch_cost_budget=cfg.epoch_cost_budget,
+            alpha=cfg.alpha,
+            answer_mode=cfg.answer_mode,
+            candidate_strategy=cfg.candidate_strategy,
+            function_selection=cfg.function_selection,
+            prior=cfg.prior,
+            chunk_size=cfg.chunk_size,
+        )
+
+    def _session_for(self, num_objects: int):
+        from repro.core.session import EngineSession
+
+        if self._session is None or self._session[0] != num_objects:
+            self._session = (
+                num_objects,
+                EngineSession(
+                    self.query.predicates,
+                    self.table,
+                    self.combine_params,
+                    self.costs,
+                    capacity=num_objects,
+                    max_tenants=1,
+                    config=self._engine_config(),
+                    truth_masks=(
+                        None
+                        if self.truth_mask is None
+                        else jnp.asarray(self.truth_mask)[None]
+                    ),
+                ),
+            )
+        return self._session[1]
+
+    def _to_session_state(self, st: state_lib.EnrichmentState, for_donation=False):
+        """EnrichmentState -> one-tenant SessionState (pure re-labelling:
+        capacity == N, the single slot covers every predicate column).  A
+        state headed into a donating dispatch copies the bank-owned output
+        buffer so donation can never invalidate it."""
+        from repro.core.executor import SessionDerived, SessionState
+
+        n, p = st.pred_prob.shape
+        if scan_capable(self.bank):
+            outputs = jnp.asarray(self.bank.outputs, jnp.float32)
+            if for_donation:
+                outputs = jnp.array(outputs, copy=True)
+        else:  # loop driver: the buffer is never gathered, only shape matters
+            outputs = jnp.full((n, p, self.costs.shape[1]), self.config.prior)
+        return SessionState(
+            substrate=st.substrate,
+            derived=SessionDerived(
+                pred_prob=st.pred_prob,
+                uncertainty=st.uncertainty,
+                joint_prob=st.joint_prob[None],
+                in_answer=st.in_answer[None],
+            ),
+            bank_outputs=outputs,
+            pred_mask=jnp.ones((1, p), bool),
+            active=jnp.ones((1,), bool),
+            num_rows=jnp.asarray(n, jnp.int32),
+            ledger=ledger_lib.init_ledger(1),
+        )
+
+    def _from_session_state(self, sst) -> state_lib.EnrichmentState:
+        sub = sst.substrate
+        return state_lib.EnrichmentState(
+            func_probs=sub.func_probs,
+            exec_mask=sub.exec_mask,
+            pred_prob=sst.derived.pred_prob,
+            uncertainty=sst.derived.uncertainty,
+            joint_prob=sst.derived.joint_prob[0],
+            in_answer=sst.derived.in_answer[0],
+            cost_spent=sub.cost_spent,
+        )
+
+    def _stats_from_session(self, hist) -> list:
+        """SessionEpochStats [S=1] -> the operator's scalar EpochStats.
+        ``plan_cost`` / ``plan_valid`` map to the charged cost / merged lane
+        count: for one tenant every planned triple is new, so the budgeted
+        request equals the charge — the pre-facade numbers."""
+        out = []
+        for h in hist:
+            tf1 = h.true_f[0] if h.true_f is not None else None
+            out.append(
+                EpochStats(
+                    epoch=h.epoch,
+                    cost_spent=h.cost_spent,
+                    expected_f=h.expected_f[0],
+                    answer_size=h.answer_size[0],
+                    true_f1=tf1,
+                    plan_cost=h.epoch_cost,
+                    plan_valid=h.merged_valid,
+                    wall_time_s=h.wall_time_s,
+                )
+            )
+        return out
+
+    # ---- legacy jitted stages (general ASTs / exact_slow / benefit_fn) -------
 
     def _select_answer(self, joint_prob: jax.Array) -> threshold_lib.AnswerSelection:
         if self.config.answer_mode == "approx":
@@ -240,101 +280,48 @@ class ProgressiveQueryOperator:
         wall = time.perf_counter() - t0
         return state, sel, plan, wall
 
-    # ---- fused scan superstep ----------------------------------------------
-
-    def _superstep(self, state: state_lib.EnrichmentState, _):
-        """One plan -> execute -> apply epoch as a pure scan body (simulated
-        bank only: ``execute`` must be traceable)."""
-        plan = self._plan_epoch(state)
-        outputs = self.bank.execute(plan)
-        new_state, sel = self._apply_and_select(state, plan, outputs)
-        stats = dict(
-            cost_spent=new_state.cost_spent,
-            expected_f=sel.expected_f,
-            answer_size=sel.size,
-            plan_cost=plan.total_cost(),
-            plan_valid=plan.num_valid(),
-        )
-        if self.truth_mask is not None:
-            stats["true_f1"] = true_f_alpha(
-                sel.mask, self.truth_mask, self.config.alpha
-            )
-        return new_state, stats
-
-    def _get_scan_fn(self, num_epochs: int, donate: bool):
-        # Donation lets XLA update the [N, P, F] state in place over the whole
-        # run; only driver-created states are donated — a caller-passed state
-        # must stay readable after the run — and CPU has no donation at all.
-        key = (num_epochs, donate)
-        if key not in self._scan_cache:
-
-            def run_fn(state):
-                return jax.lax.scan(self._superstep, state, None, length=num_epochs)
-
-            argnums = (0,) if donate else ()
-            self._scan_cache[key] = jax.jit(run_fn, donate_argnums=argnums)
-        return self._scan_cache[key]
-
     def run_scan(
         self,
         num_objects: int,
         num_epochs: int,
         state: Optional[state_lib.EnrichmentState] = None,
         stop_when_exhausted: bool = True,
+        chunk_size: Optional[int] = None,
     ) -> tuple[state_lib.EnrichmentState, list[EpochStats]]:
-        """All epochs in ONE device dispatch (jitted lax.scan; no per-epoch
-        host syncs).  Post-exhaustion epochs are no-ops and are trimmed from
-        the history to match the loop driver's early break; ``wall_time_s``
-        is the amortized total."""
-        donate = state is None and jax.default_backend() != "cpu"
+        """All epochs through the unified chunked-scan superstep (one
+        ``EngineSession`` tenant at capacity == N; no per-epoch host syncs).
+        Query shapes outside the session's scope (general ASTs, exact_slow,
+        custom benefit_fn) fall back to the per-epoch loop with identical
+        results.  Post-exhaustion epochs are no-ops trimmed from the history;
+        ``wall_time_s`` is the amortized total."""
+        created_here = state is None
         if state is None:
             state = self.init_state(num_objects)
-        fn = self._get_scan_fn(num_epochs, donate)
-        t0 = time.perf_counter()
-        state, stats = fn(state)
-        stats = jax.device_get(stats)  # the run's single host sync
-        state = jax.block_until_ready(state)
-        wall = time.perf_counter() - t0
-        history: list[EpochStats] = []
-        for e in range(num_epochs):
-            n_valid = int(stats["plan_valid"][e])
-            history.append(
-                EpochStats(
-                    epoch=e,
-                    cost_spent=float(stats["cost_spent"][e]),
-                    expected_f=float(stats["expected_f"][e]),
-                    answer_size=int(stats["answer_size"][e]),
-                    true_f1=(
-                        float(stats["true_f1"][e]) if "true_f1" in stats else None
-                    ),
-                    plan_cost=float(stats["plan_cost"][e]),
-                    plan_valid=n_valid,
-                    wall_time_s=wall / num_epochs,
-                )
+        if self._legacy_only:
+            return self._run_legacy_loop(state, num_epochs, stop_when_exhausted)
+        session = self._session_for(num_objects)
+        if scan_capable(self.bank):
+            # donate driver-created states off-CPU (the pre-facade policy)
+            donate = created_here and jax.default_backend() != "cpu"
+            sst, hist = session.program.run_scan(
+                self._to_session_state(state, for_donation=donate),
+                num_epochs,
+                stop_when_exhausted=stop_when_exhausted,
+                chunk_size=chunk_size,
+                donate=donate,
             )
-            if stop_when_exhausted and n_valid == 0:
-                break
-        return state, history
-
-    def run(
-        self,
-        num_objects: int,
-        num_epochs: int,
-        state: Optional[state_lib.EnrichmentState] = None,
-        stop_when_exhausted: bool = True,
-        driver: str = "auto",  # "auto" | "scan" | "loop"
-    ) -> tuple[state_lib.EnrichmentState, list[EpochStats]]:
-        if driver == "auto":
-            driver = "scan" if getattr(self.bank, "supports_scan", False) else "loop"
-        if driver == "scan":
-            return self.run_scan(
-                num_objects, num_epochs, state=state,
+        else:
+            sst, hist = session.run_loop(
+                self._to_session_state(state),
+                num_epochs,
+                self.bank,
                 stop_when_exhausted=stop_when_exhausted,
             )
-        if driver != "loop":
-            raise ValueError(f"unknown driver: {driver!r}")
-        if state is None:
-            state = self.init_state(num_objects)
+        return self._from_session_state(sst), self._stats_from_session(hist)
+
+    def _run_legacy_loop(
+        self, state, num_epochs: int, stop_when_exhausted: bool
+    ) -> tuple[state_lib.EnrichmentState, list[EpochStats]]:
         history: list[EpochStats] = []
         for e in range(num_epochs):
             state, sel, plan, wall = self.run_epoch(state)
@@ -357,3 +344,27 @@ class ProgressiveQueryOperator:
             if stop_when_exhausted and n_valid == 0:
                 break
         return state, history
+
+    def run(
+        self,
+        num_objects: int,
+        num_epochs: int,
+        state: Optional[state_lib.EnrichmentState] = None,
+        stop_when_exhausted: bool = True,
+        driver: Optional[str] = None,  # DEPRECATED: run() routes itself
+        chunk_size: Optional[int] = None,
+    ) -> tuple[state_lib.EnrichmentState, list[EpochStats]]:
+        """Progressive evaluation for ``num_epochs`` epochs: the unified
+        scan superstep whenever the session facade can serve the query
+        (conjunctive, default scoring) — with the loop driver substituted
+        inside it for non-traceable banks — and the legacy per-epoch loop
+        otherwise.  ``driver`` is a deprecated shim."""
+        forced = resolve_deprecated_driver(driver)
+        if forced == "loop" or self._legacy_only:
+            if state is None:
+                state = self.init_state(num_objects)
+            return self._run_legacy_loop(state, num_epochs, stop_when_exhausted)
+        return self.run_scan(
+            num_objects, num_epochs, state=state,
+            stop_when_exhausted=stop_when_exhausted, chunk_size=chunk_size,
+        )

@@ -1,63 +1,59 @@
 """Session-oriented engine core: jit-stable serving under tenant + corpus churn.
 
-``MultiQueryEngine`` is construct-once: its shapes are keyed on (N objects,
-Q tenants), so admitting a tenant re-traces every jitted stage and ingesting
-an object is impossible.  Production pay-as-you-go serving (the IDEA ingestion
-framework, Wang & Carey 2019; ROADMAP "asynchronous tenant admission /
-retirement") needs both to be cheap *data* updates.  ``EngineSession`` makes
-every churn axis a masked, pre-allocated dimension so the fused epoch
-superstep compiles exactly once for the life of the session:
+Production pay-as-you-go serving (the IDEA ingestion framework, Wang & Carey
+2019) needs tenant admission and corpus ingestion to be cheap *data* updates.
+``EngineSession`` makes every churn axis a masked, pre-allocated dimension so
+the fused epoch superstep — owned by ``core.executor.EpochProgram``, the one
+executor every engine generation now shares — compiles once per capacity tier
+for the life of the session:
 
 * **capacity-padded substrate** — state tensors are allocated at
-  ``[capacity, P, F]`` with ``capacity >= num_objects``; a row-validity
-  prefix mask (one traced ``num_rows`` scalar) says which rows hold real
-  objects.  ``ingest(outputs)`` writes new objects' tagging outputs into the
-  next free rows and bumps the scalar — no shape changes anywhere.
+  ``[capacity, P, F]``; a row-validity prefix mask (one traced ``num_rows``
+  scalar) says which rows hold real objects.  ``ingest(outputs)`` writes new
+  objects' tagging outputs into the next free rows and bumps the scalar.
 * **tenant slots** — ``max_tenants`` slots are allocated up front; a slot is
-  its conjunctive query's predicate-column mask (``pred_mask[s]``) plus an
-  ``active[s]`` bit.  ``admit(query)`` fills a free slot and warm-starts its
-  derived state from whatever the substrate has accumulated; ``retire(slot)``
-  clears the bits.  Because a pure conjunction is *fully described by data*
-  (the masked product over its columns), no Python query structure is traced.
-* **masked planning** — invalid rows and inactive slots earn ``-inf`` benefit,
-  so they never win plan top-k, never execute, and never enter answer sets.
-* **cost ledger** — the dedup merge carries per-tenant want-bitmasks
-  (``plan.merge_plans_dedup_wants``) and ``core.ledger`` splits every newly
-  charged triple's cost fairly across the tenants whose plans wanted it,
-  inside the superstep.
+  its conjunctive query's predicate-column mask plus an ``active`` bit.
+  ``admit(query)`` fills a free slot (resetting its ledger accumulator — a
+  recycled slot must not inherit the previous occupant's bill) and
+  warm-starts its derived state from whatever the substrate has accumulated;
+  ``retire(slot)`` clears the bits.
+* **masked planning** — invalid rows and inactive slots earn ``-inf``
+  benefit, so they never win plan top-k and never enter answer sets.
+* **cost ledger** — the dedup merge carries per-tenant want-bitmasks and
+  ``core.ledger`` splits every newly charged triple's cost fairly across the
+  tenants whose plans wanted it, inside the superstep.
 * **capacity tiers** — with ``max_capacity > capacity`` the session owns a
-  geometric tier schedule (``capacity, 2c, 4c, ... >= max_capacity``, each
-  tier rounded up to the plan-shard count); an ``ingest`` that would
-  overflow the current tier migrates the full ``SessionState`` to the next
-  tier via ``pad_session_state`` (padded rows bitwise inert, row-validity
-  prefix preserved) instead of failing.  Each tier owns one compiled
-  superstep (the scan cache is keyed on tier capacity), so total retraces
-  over ANY event trace are bounded by ``1 + ceil(log2(max_capacity /
-  capacity))`` per distinct scan shape — ``retrace_bound``, observable via
-  ``superstep_traces``.
+  geometric tier schedule; an overflowing ``ingest`` migrates the full
+  ``SessionState`` to the next tier via ``pad_session_state`` (padded rows
+  bitwise inert).  Each tier compiles one superstep per scan length, so
+  total retraces over ANY event trace are bounded by ``1 +
+  ceil(log2(max_capacity / capacity))`` per length — ``retrace_bound``,
+  observable via ``superstep_traces``.
+* **async event overlap** — ``SessionPipeline`` stages ingest/admit/retire
+  events host-side and applies them between scan chunks while the previous
+  chunk is still in flight: every event method takes the host-shadowed
+  ``num_rows`` / ``active`` it needs, so the pipeline never blocks on device
+  data and ``jax.block_until_ready`` happens only at ``finish()``.  Zero
+  extra retraces: the pipeline dispatches the same chunk programs the
+  lockstep path uses.
 
 Exactness bars (tested): with ``capacity == num_objects`` and a fixed tenant
 set, per-epoch answer sets and ``cost_spent`` are bitwise identical to
-``MultiQueryEngine.run_scan``; across ingest/admit/retire events within one
-tier the scan superstep never re-traces (``superstep_traces`` stays 1); and
-a session grown ``capacity -> max_capacity`` across a churn trace is bitwise
-identical (answer sets, ``cost_spent``, ledger) to one pre-allocated at
-``max_capacity``, because tier migration pads with the allocator's own inert
-fill.
+``MultiQueryEngine.run_scan`` (now a facade over this class); chunked and
+pipelined runs are bitwise identical to lockstep ones; a session grown
+``capacity -> max_capacity`` across a churn trace is bitwise identical to one
+pre-allocated at ``max_capacity``.
 
 Scope: tenants must be pure conjunctions (the paper's Q1-Q5 shape and the
-multi-tenant fast path); general ASTs stay on ``MultiQueryEngine``.  The
-execution bank is the session-owned capacity-padded output buffer (the
-simulated-bank gather), which is what makes ``execute`` traceable inside the
-scan; model-cascade banks batch at the Python level and stay on the engine's
-loop driver.
+multi-tenant fast path); general ASTs stay on ``MultiQueryEngine``'s legacy
+loop.  The scan-driver execution bank is the session-owned capacity-padded
+output buffer (the simulated-bank gather); model-cascade banks go through
+``run_loop`` (the ``EpochProgram`` loop driver).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
-import math
 import time
 from typing import Optional, Sequence
 
@@ -65,21 +61,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import benefit as benefit_lib
 from repro.core import ledger as ledger_lib
-from repro.core import operator as operator_lib
-from repro.core import plan as plan_lib
 from repro.core import state as state_lib
-from repro.core import threshold as threshold_lib
-from repro.core.benefit import NEG_INF, TripleBenefits
-from repro.core.combine import CombineParams, combine_probabilities
-from repro.core.decision_table import DecisionTable
-from repro.core.entropy import binary_entropy
-from repro.core.errors import CapacityError, SlotsExhaustedError
-from repro.core.ledger import CostLedger
-from repro.core.multi_query import MultiQueryConfig, select_plans_batched
+from repro.core.errors import CapacityError, SlotActiveError, SlotsExhaustedError
+from repro.core.executor import (
+    EngineConfig,
+    EpochProgram,
+    SessionDerived,
+    SessionEpochStats,
+    SessionState,
+)
 from repro.core.query import CompiledQuery
 from repro.core.state import SharedSubstrate
+
+# Back-compat alias (the config moved to core.executor with the superstep).
+MultiQueryConfig = EngineConfig
 
 
 def tier_schedule(
@@ -152,95 +148,20 @@ def pad_session_state(
     )
 
 
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass
-class SessionDerived:
-    """Derived state with the slot-independent half stored ONCE.
-
-    Under shared combine params ``pred_prob`` / ``uncertainty`` are facts
-    about the substrate, identical for every slot — the engine's
-    ``PerQueryState`` broadcasts them onto the Q axis anyway (a documented
-    Q-fold memory tradeoff); the session, whose carry lives for the whole
-    serving lifetime at production capacity, stores the [C, P] half once and
-    broadcasts only at use sites.  Only the joint probability and answer
-    membership actually vary per slot.
-    """
-
-    pred_prob: jax.Array  # [C, P] f32, shared across slots
-    uncertainty: jax.Array  # [C, P] f32, shared across slots
-    joint_prob: jax.Array  # [S, C] f32
-    in_answer: jax.Array  # [S, C] bool
-
-
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass
-class SessionState:
-    """Everything churn can touch, as fixed-shape arrays (the scan carry)."""
-
-    substrate: SharedSubstrate  # [C, P, F] capacity-padded
-    derived: SessionDerived  # [C, P] shared + [S, C] per-slot derived state
-    bank_outputs: jax.Array  # [C, P, F] capacity-padded tagging outputs
-    pred_mask: jax.Array  # [S, P] bool: slot s's conjunctive predicate columns
-    active: jax.Array  # [S] bool: slot occupancy
-    num_rows: jax.Array  # [] int32: rows [0, num_rows) hold real objects
-    ledger: CostLedger  # [S] per-tenant attributed cost
-
-    @property
-    def capacity(self) -> int:
-        return self.substrate.num_objects
-
-    @property
-    def num_slots(self) -> int:
-        return self.pred_mask.shape[0]
-
-    @property
-    def cost_spent(self) -> jax.Array:
-        return self.substrate.cost_spent
-
-    def row_valid(self) -> jax.Array:
-        return state_lib.row_validity(self.capacity, self.num_rows)
-
-
-@dataclasses.dataclass
-class SessionEpochStats:
-    epoch: int
-    cost_spent: float  # cumulative substrate spend
-    epoch_cost: float  # newly charged this epoch (post-dedup)
-    requested_cost: float  # sum of per-slot plan costs before dedup
-    expected_f: list  # [S] per-slot E(F_alpha) (inactive slots: 0)
-    answer_size: list  # [S]
-    plan_valid: list  # [S]
-    merged_valid: int
-    active: list  # [S] bool snapshot
-    num_rows: int
-    attributed: list  # [S] cumulative ledger attribution snapshot
-    wall_time_s: float
-    answer_mask: Optional[np.ndarray] = None  # [S, C] when collect_masks
-
-    @property
-    def active_tenants(self) -> int:
-        return int(sum(self.active))
-
-    @property
-    def mean_expected_f(self) -> float:
-        """Mean E(F) over ACTIVE slots (0 when the session idles)."""
-        vals = [f for f, a in zip(self.expected_f, self.active) if a]
-        return sum(vals) / len(vals) if vals else 0.0
-
-
 class EngineSession:
     """Long-lived multi-tenant PIQUE engine with churn-stable jitted shapes."""
 
     def __init__(
         self,
         global_predicates: Sequence,  # the corpus schema (fixes the P axis)
-        table: DecisionTable,
-        combine_params: CombineParams,
+        table,
+        combine_params,
         costs: jax.Array,  # [P, F] over the global predicate space
         capacity: int,
         max_tenants: int,
-        config: MultiQueryConfig = MultiQueryConfig(),
+        config: EngineConfig = EngineConfig(),
         max_capacity: Optional[int] = None,
+        truth_masks: Optional[jax.Array] = None,  # [S, capacity] bool, metrics only
     ):
         if config.backend not in ("jnp", "pallas"):
             raise ValueError(f"unknown backend: {config.backend!r}")
@@ -275,9 +196,15 @@ class EngineSession:
                 f"({len(self.global_predicates)})"
             )
         self._pred_index = {p: i for i, p in enumerate(self.global_predicates)}
-        self._trace_count = 0  # superstep (re)traces; 1 for the session's life
-        self._scan_cache: dict = {}
-        self._refresh_fn = jax.jit(self._refresh)
+        if truth_masks is not None and self.max_capacity != self.capacity:
+            raise ValueError(
+                "truth_masks require a fixed-capacity session (the [S, C] "
+                "truth rows cannot follow tier growth)"
+            )
+        # the unified executor: one superstep + drivers for the session's life
+        self.program = EpochProgram(
+            table, combine_params, self.costs, config, truth_masks=truth_masks
+        )
 
     @property
     def num_predicates(self) -> int:
@@ -292,7 +219,7 @@ class EngineSession:
         """How many times the epoch superstep has been traced (churn-stability
         witness: stays 1 across any sequence of ingest/admit/retire events
         within a tier, and <= ``retrace_bound`` across tier growth)."""
-        return self._trace_count
+        return self.program.superstep_traces
 
     @property
     def tier_capacities(self) -> tuple[int, ...]:
@@ -311,60 +238,6 @@ class EngineSession:
         trace: one per tier, ``<= 1 + ceil(log2(max_capacity / capacity))``
         by the doubling schedule."""
         return len(self._tiers)
-
-    # ---- derived-state maintenance -----------------------------------------
-
-    def _derive(self, substrate, pred_mask, active, row_valid):
-        """Shared recombination + per-slot masked-conjunction joint.
-
-        ``pred_prob`` / ``uncertainty`` are slot-independent under shared
-        combine params (computed and stored once at [C, P]); the joint is the
-        masked product over each slot's predicate columns — the same
-        arithmetic as ``QuerySet.evaluate_batched`` on an all-conjunctive
-        set, with the mask as *data* so admit/retire never retrace.  Joint
-        probability is zeroed on invalid rows and inactive slots so they can
-        never enter an answer set or earn benefit.
-        """
-        pred_prob = combine_probabilities(
-            self.combine_params,
-            substrate.func_probs,
-            substrate.exec_mask,
-            prior=self.config.prior,
-        )  # [C, P]
-        joint = jnp.prod(
-            jnp.where(pred_mask[:, None, :], pred_prob[None], 1.0), axis=-1
-        )  # [S, C]
-        joint = jnp.where(active[:, None] & row_valid[None, :], joint, 0.0)
-        return pred_prob, binary_entropy(pred_prob), joint
-
-    def _select_answers(self, joint_prob: jax.Array) -> threshold_lib.AnswerSelection:
-        if self.config.answer_mode == "approx":
-            fn = functools.partial(
-                threshold_lib.select_answer_approx, alpha=self.config.alpha
-            )
-        else:
-            fn = functools.partial(threshold_lib.select_answer, alpha=self.config.alpha)
-        return jax.vmap(fn)(joint_prob)
-
-    def _refresh(self, state: SessionState) -> SessionState:
-        """Recompute all derived state from the substrate + masks.
-
-        This is the warm-start path for every event: an admitted slot's first
-        derived state already reflects every enrichment the substrate has
-        accumulated (paper §5 caching), ingested rows surface with cold prior
-        state, retired slots drop out of answers.  Jitted once — all shapes
-        are session constants.
-        """
-        row_valid = state.row_valid()
-        pp, unc, joint = self._derive(
-            state.substrate, state.pred_mask, state.active, row_valid
-        )
-        sel = self._select_answers(joint)
-        mask = sel.mask & state.active[:, None] & row_valid[None, :]
-        derived = SessionDerived(
-            pred_prob=pp, uncertainty=unc, joint_prob=joint, in_answer=mask
-        )
-        return dataclasses.replace(state, derived=derived)
 
     # ---- session lifecycle ---------------------------------------------------
 
@@ -419,7 +292,7 @@ class EngineSession:
         )
         state = SessionState(
             substrate=substrate,
-            derived=SessionDerived(  # placeholder; _refresh fills it
+            derived=SessionDerived(  # placeholder; refresh fills it
                 pred_prob=jnp.zeros((cap, self.num_predicates), jnp.float32),
                 uncertainty=jnp.zeros((cap, self.num_predicates), jnp.float32),
                 joint_prob=jnp.zeros((self.max_tenants, cap), jnp.float32),
@@ -431,7 +304,7 @@ class EngineSession:
             num_rows=jnp.asarray(n0, jnp.int32),
             ledger=ledger_lib.init_ledger(self.max_tenants),
         )
-        return self._refresh_fn(state)
+        return self.program.refresh(state)
 
     def _query_columns(self, query: CompiledQuery) -> list:
         if not query.is_conjunctive:
@@ -454,15 +327,27 @@ class EngineSession:
         state: SessionState,
         query: CompiledQuery,
         slot: Optional[int] = None,
+        *,
+        active=None,
     ) -> tuple[SessionState, int]:
         """Admit a tenant into a free slot between supersteps.
 
-        Pure data update (mask bits) + derived-state warm start from the
-        substrate; the compiled superstep is untouched.  Returns the new
-        state and the slot index (the tenant's ledger/billing handle).
+        Pure data update (mask bits + a ledger-slot reset) + derived-state
+        warm start from the substrate; the compiled superstep is untouched.
+        The slot's ledger accumulator resets so a recycled slot starts from a
+        zero bill (the previous occupant's spend moves to the ledger's
+        ``archived`` bucket — invoiced at retirement, never inherited).
+        Admitting into a still-occupied slot raises ``SlotActiveError``.
+
+        ``active`` may carry a host-side shadow of ``state.active`` (the
+        async event pipeline's no-sync path); by default it is read from the
+        device.  Returns the new state and the slot index (the tenant's
+        ledger/billing handle).
         """
         cols = self._query_columns(query)
-        active_np = np.asarray(jax.device_get(state.active))
+        if active is None:
+            active = jax.device_get(state.active)
+        active_np = np.asarray(active)
         if slot is None:
             free = np.flatnonzero(~active_np)
             if free.size == 0:
@@ -478,7 +363,10 @@ class EngineSession:
             if not 0 <= slot < self.max_tenants:
                 raise ValueError(f"slot {slot} out of range [0, {self.max_tenants})")
             if active_np[slot]:
-                raise ValueError(f"slot {slot} is already occupied; retire it first")
+                raise SlotActiveError(
+                    f"slot {slot} is already occupied; retire it first",
+                    slot=slot,
+                )
         row = jnp.zeros((self.num_predicates,), bool).at[
             jnp.asarray(cols, jnp.int32)
         ].set(True)
@@ -486,20 +374,30 @@ class EngineSession:
             state,
             pred_mask=state.pred_mask.at[slot].set(row),
             active=state.active.at[slot].set(True),
+            ledger=ledger_lib.reset_slot(state.ledger, slot),
         )
-        return self._refresh_fn(state), slot
+        return self.program.refresh(state), slot
 
-    def retire(self, state: SessionState, slot: int) -> SessionState:
+    def retire(
+        self, state: SessionState, slot: int, *, active=None
+    ) -> SessionState:
         """Retire a tenant slot between supersteps (mask bits off).
 
         The slot's enrichment stays in the substrate — it was shared property
-        the moment it executed — and its ledger row keeps the final bill.
+        the moment it executed — and its ledger row keeps the final bill
+        until the slot is recycled by a later ``admit`` (which archives it).
         Retiring the last active tenant is fine: the session idles (plans
-        empty, nothing charged) until the next ``admit``.
+        empty, nothing charged) until the next ``admit``.  ``active`` may
+        carry a host-side shadow (the async pipeline's no-sync path).
         """
         if not 0 <= slot < self.max_tenants:
             raise ValueError(f"slot {slot} out of range [0, {self.max_tenants})")
-        if not bool(jax.device_get(state.active[slot])):
+        occupied = (
+            bool(jax.device_get(state.active[slot]))
+            if active is None
+            else bool(np.asarray(active)[slot])
+        )
+        if not occupied:
             raise ValueError(f"slot {slot} is not active")
         state = dataclasses.replace(
             state,
@@ -508,7 +406,7 @@ class EngineSession:
             ),
             active=state.active.at[slot].set(False),
         )
-        return self._refresh_fn(state)
+        return self.program.refresh(state)
 
     def refresh(self, state: SessionState) -> SessionState:
         """Recompute all derived state from the substrate + masks (jitted).
@@ -517,15 +415,18 @@ class EngineSession:
         state migrated into a freshly built one (the rebuild baseline in
         ``benchmarks.growth``); normal churn events call it internally.
         """
-        return self._refresh_fn(state)
+        return self.program.refresh(state)
 
-    def _grow_padded(self, state: SessionState, min_rows: int) -> SessionState:
+    def _grow_padded(
+        self, state: SessionState, min_rows: int, used: int
+    ) -> SessionState:
         """Tier migration WITHOUT the derived-state refresh — for callers
         whose own tail refreshes anyway (``ingest``), sparing a second
-        full-width device pass per growth event."""
+        full-width device pass per growth event.  ``used`` is the host-known
+        occupied row count (no device read here — the async pipeline relies
+        on growth being sync-free)."""
         if min_rows <= state.capacity:
             return state
-        used = int(jax.device_get(state.num_rows))
         target = self._tier_for(min_rows, used=used, requested=min_rows - used)
         state = pad_session_state(state, target, self.config.prior)
         self.growths += 1
@@ -542,12 +443,15 @@ class EngineSession:
         recompile contract (``retrace_bound``).  Raises ``CapacityError``
         when ``min_rows`` exceeds the last tier.
         """
-        grown = self._grow_padded(state, min_rows)
-        if grown is state:
+        if min_rows <= state.capacity:
             return state
-        return self._refresh_fn(grown)
+        used = int(jax.device_get(state.num_rows))
+        grown = self._grow_padded(state, min_rows, used)
+        return self.program.refresh(grown)
 
-    def ingest(self, state: SessionState, outputs: jax.Array) -> SessionState:
+    def ingest(
+        self, state: SessionState, outputs: jax.Array, *, num_rows: Optional[int] = None
+    ) -> SessionState:
         """Stream new objects into pre-allocated rows between supersteps.
 
         ``outputs`` is [M, P, F] tagging-function outputs for the new objects
@@ -556,8 +460,12 @@ class EngineSession:
         empty exec mask — and become planning candidates in the next epoch
         because the row-validity prefix now covers them.  An ingest that
         overflows the current tier grows the session to the next tier that
-        holds it (``grow``) when ``max_capacity`` allows; past the last tier
-        it raises ``CapacityError``.
+        holds it when ``max_capacity`` allows; past the last tier it raises
+        ``CapacityError``.
+
+        ``num_rows`` may carry the host-shadowed occupied row count (the
+        async pipeline's no-sync path); by default it is read from the
+        device.
         """
         outputs = jnp.asarray(outputs, jnp.float32)
         if outputs.ndim != 3 or outputs.shape[1:] != (
@@ -568,7 +476,11 @@ class EngineSession:
                 f"ingest outputs must be [M, {self.num_predicates}, "
                 f"{self.num_functions}]; got {outputs.shape}"
             )
-        nr = int(jax.device_get(state.num_rows))
+        nr = (
+            int(jax.device_get(state.num_rows))
+            if num_rows is None
+            else int(num_rows)
+        )
         m = outputs.shape[0]
         if nr + m > self.max_capacity:
             raise CapacityError(
@@ -580,157 +492,14 @@ class EngineSession:
                 capacity=self.max_capacity,
                 requested=m,
             )
-        state = self._grow_padded(state, nr + m)  # the tail refresh covers it
-        bank, num_rows = state_lib.ingest_rows(
+        state = self._grow_padded(state, nr + m, nr)  # the tail refresh covers it
+        bank, new_rows = state_lib.ingest_rows(
             state.bank_outputs, state.num_rows, outputs
         )
-        state = dataclasses.replace(state, bank_outputs=bank, num_rows=num_rows)
-        return self._refresh_fn(state)
+        state = dataclasses.replace(state, bank_outputs=bank, num_rows=new_rows)
+        return self.program.refresh(state)
 
-    # ---- fused epoch superstep ----------------------------------------------
-
-    def _benefits(self, state: SessionState, row_valid: jax.Array) -> TripleBenefits:
-        """Masked Eq. 11 over [S, C, P]: the engine's conjunctive fast path
-        plus the session masks — inactive slots and invalid rows get -inf, so
-        they can never win top-k."""
-        cfg = self.config
-        der = state.derived
-        state_id = state.substrate.state_id()  # [C, P]
-        mode = (
-            "best"
-            if cfg.function_selection == "best" and self.table.delta_h_all is not None
-            else "table"
-        )
-        if cfg.backend == "pallas":
-            from repro.kernels.enrich_score import ops as es_ops
-
-            tb = es_ops.fused_benefits_batched(
-                der.pred_prob, der.uncertainty, state_id,
-                der.joint_prob, self.table, self.costs,
-                function_selection=mode,
-                interpret=cfg.pallas_interpret,
-            )
-        else:
-            tb = benefit_lib.compute_benefits_batched(
-                der.pred_prob, der.uncertainty, state_id,
-                der.joint_prob, self.table, self.costs,
-                function_selection=mode,
-            )
-        benefit, nf, est_joint, cost = tb
-        valid = (
-            (nf >= 0)
-            & state.pred_mask[:, None, :]
-            & state.active[:, None, None]
-            & row_valid[None, :, None]
-        )
-        benefit = jnp.where(valid, benefit, NEG_INF)
-        cand = jax.vmap(
-            lambda a, m: operator_lib.candidate_mask(
-                der.uncertainty, a, cfg.candidate_strategy,
-                pred_mask=m, row_valid=row_valid,
-            )
-        )(der.in_answer, state.pred_mask)  # [S, C]
-        benefit = jax.vmap(
-            lambda b, c: operator_lib.restrict_benefits(b, c, cfg.plan_size)
-        )(benefit, cand)
-        return TripleBenefits(benefit=benefit, next_fn=nf, est_joint=est_joint, cost=cost)
-
-    def _superstep(self, state: SessionState, collect_masks: bool):
-        """One plan -> execute -> apply -> attribute epoch as a pure scan body.
-
-        Identical arithmetic to ``MultiQueryEngine._superstep`` on the valid
-        region (the parity bar), plus the want-bit merge and ledger update.
-        Every shape is a constant of the state's capacity TIER (read off the
-        array shapes, never ``self``), so this traces once per tier.
-        """
-        self._trace_count += 1  # Python side effect: fires per TRACE, not per step
-        cfg = self.config
-        capacity = state.capacity  # the tier's row capacity, a trace constant
-        row_valid = state.row_valid()
-        benefits = self._benefits(state, row_valid)
-        plans = select_plans_batched(
-            benefits,
-            plan_size=cfg.plan_size,
-            num_shards=cfg.num_shards,
-            num_predicates=self.num_predicates,
-        )
-        merged, want_bits = plan_lib.merge_plans_dedup_wants(
-            plans,
-            self.num_predicates,
-            self.num_functions,
-            num_slots=self.max_tenants,
-            capacity=cfg.merged_capacity,
-            cost_budget=cfg.epoch_cost_budget,
-            num_objects=capacity,
-        )
-        # the bank: a gather from the session-owned capacity-padded outputs.
-        # Invalid merged lanes route to row 0 (NOT clipped onto row
-        # capacity-1, a real row once num_rows == capacity) and stay inert:
-        # apply drops them, chargeable/want-bits are valid-masked.
-        obj = plan_lib.gather_object_idx(merged, capacity)
-        outputs = state.bank_outputs[obj, merged.pred_idx, jnp.maximum(merged.func_idx, 0)]
-        # the SAME charging rule apply_outputs_to_substrate bills cost_spent
-        # with, so ledger attribution reconciles by construction
-        chargeable = state_lib.chargeable_mask(
-            state.substrate, merged.object_idx, merged.pred_idx,
-            merged.func_idx, merged.valid,
-        )
-        prev_cost = state.substrate.cost_spent
-        sub = state_lib.apply_outputs_to_substrate(
-            state.substrate,
-            merged.object_idx,
-            merged.pred_idx,
-            merged.func_idx,
-            outputs,
-            merged.cost,
-            merged.valid,
-        )
-        ledger = ledger_lib.attribute_epoch(state.ledger, merged, want_bits, chargeable)
-        pp, unc, joint = self._derive(sub, state.pred_mask, state.active, row_valid)
-        sel = self._select_answers(joint)
-        mask = sel.mask & state.active[:, None] & row_valid[None, :]
-        new_state = dataclasses.replace(
-            state,
-            substrate=sub,
-            derived=SessionDerived(
-                pred_prob=pp, uncertainty=unc, joint_prob=joint, in_answer=mask
-            ),
-            ledger=ledger,
-        )
-        stats = dict(
-            cost_spent=sub.cost_spent,
-            epoch_cost=sub.cost_spent - prev_cost,
-            requested_cost=jnp.sum(jnp.where(plans.valid, plans.cost, 0.0)),
-            expected_f=jnp.where(state.active, sel.expected_f, 0.0),
-            answer_size=jnp.sum(mask, axis=1),
-            plan_valid=jnp.sum(plans.valid, axis=1),
-            merged_valid=merged.num_valid(),
-            active=state.active,
-            num_rows=state.num_rows,
-            attributed=ledger.attributed,
-        )
-        if collect_masks:
-            stats["answer_mask"] = mask
-        return new_state, stats
-
-    def _get_scan_fn(self, capacity: int, num_epochs: int, collect_masks: bool):
-        # keyed on the tier capacity: each tier owns ONE compiled superstep
-        # per scan shape, which is what bounds total retraces over any event
-        # trace by len(self._tiers) (== retrace_bound) per shape.
-        key = (capacity, num_epochs, collect_masks)
-        if key not in self._scan_cache:
-
-            def run_fn(state):
-                return jax.lax.scan(
-                    lambda s, _: self._superstep(s, collect_masks),
-                    state,
-                    None,
-                    length=num_epochs,
-                )
-
-            # no donation: the session state is a long-lived caller handle
-            self._scan_cache[key] = jax.jit(run_fn)
-        return self._scan_cache[key]
+    # ---- drivers (delegating to the unified executor) ------------------------
 
     def run(
         self,
@@ -738,45 +507,154 @@ class EngineSession:
         num_epochs: int,
         collect_masks: bool = False,
         stop_when_exhausted: bool = True,
+        chunk_size: Optional[int] = None,
     ) -> tuple[SessionState, list]:
-        """Run ``num_epochs`` supersteps as ONE device dispatch.
+        """Run ``num_epochs`` supersteps as chunked fused-scan dispatches.
 
-        The same fused ``lax.scan`` driver as ``MultiQueryEngine.run_scan``;
-        between calls the caller may ``ingest`` / ``admit`` / ``retire``
+        Between calls the caller may ``ingest`` / ``admit`` / ``retire``
         freely — the compiled program is reused because every churn axis is
         data, and an ingest-driven tier migration switches to the target
         tier's own compiled program (at most ``retrace_bound`` per scan
-        shape).  With zero active tenants the session idles (every epoch
-        plans nothing and charges nothing).
+        length).  With zero active tenants the session idles.  See
+        ``EpochProgram.run_scan`` for chunking semantics and
+        ``SessionPipeline`` for overlapping events with in-flight chunks.
         """
-        fn = self._get_scan_fn(state.capacity, num_epochs, collect_masks)
-        t0 = time.perf_counter()
-        state, stats = fn(state)
-        stats = jax.device_get(stats)  # the run's single host sync
-        state = jax.block_until_ready(state)
-        wall = time.perf_counter() - t0
-        history: list[SessionEpochStats] = []
-        for e in range(num_epochs):
-            merged_valid = int(stats["merged_valid"][e])
-            history.append(
-                SessionEpochStats(
-                    epoch=e,
-                    cost_spent=float(stats["cost_spent"][e]),
-                    epoch_cost=float(stats["epoch_cost"][e]),
-                    requested_cost=float(stats["requested_cost"][e]),
-                    expected_f=[float(x) for x in stats["expected_f"][e]],
-                    answer_size=[int(x) for x in stats["answer_size"][e]],
-                    plan_valid=[int(x) for x in stats["plan_valid"][e]],
-                    merged_valid=merged_valid,
-                    active=[bool(x) for x in stats["active"][e]],
-                    num_rows=int(stats["num_rows"][e]),
-                    attributed=[float(x) for x in stats["attributed"][e]],
-                    wall_time_s=wall / num_epochs,
-                    answer_mask=(
-                        np.asarray(stats["answer_mask"][e]) if collect_masks else None
-                    ),
-                )
+        return self.program.run_scan(
+            state,
+            num_epochs,
+            chunk_size=chunk_size,
+            collect_masks=collect_masks,
+            stop_when_exhausted=stop_when_exhausted,
+        )
+
+    def run_loop(
+        self,
+        state: SessionState,
+        num_epochs: int,
+        bank,
+        collect_masks: bool = False,
+        stop_when_exhausted: bool = True,
+    ) -> tuple[SessionState, list]:
+        """Per-epoch loop driver for non-traceable banks (model cascades):
+        the same superstep arithmetic, with ``bank.execute(merged)`` called
+        on the host between the jitted plan and apply halves."""
+        return self.program.run_loop(
+            state,
+            num_epochs,
+            bank,
+            collect_masks=collect_masks,
+            stop_when_exhausted=stop_when_exhausted,
+        )
+
+    def pipeline(
+        self, state: SessionState, chunk_size: Optional[int] = None
+    ) -> "SessionPipeline":
+        """Open an async event pipeline over this session (one sync here —
+        the shadow snapshot — then none until ``finish()``)."""
+        return SessionPipeline(self, state, chunk_size=chunk_size)
+
+
+class SessionPipeline:
+    """Overlap churn-event application with in-flight scan chunks.
+
+    The lockstep serving loop blocks at every boundary: ``run`` materializes
+    its stats (a device sync) before the host even *looks* at the next
+    event, and each event reads ``num_rows`` / ``active`` back from the
+    device.  The pipeline removes every one of those barriers:
+
+    * scan chunks are DISPATCHED, never waited on — JAX's async dispatch
+      queues them on the device stream and hands back futures;
+    * events validate against host-side shadows of ``num_rows`` and
+      ``active`` (maintained here, exactly; every event's effect on them is
+      host-computable) and apply as enqueued jitted data updates on the
+      in-flight carry;
+    * stats futures accumulate per chunk and materialize once, in
+      ``finish()`` — the only ``jax.block_until_ready`` in the pipeline.
+
+    So event latency hides behind device compute, with ZERO extra retraces:
+    the pipeline dispatches the same compiled chunk programs the lockstep
+    path uses (``superstep_traces`` is identical per tier), and the result —
+    answer sets, ``cost_spent``, ledger — is bitwise identical to applying
+    the same events lockstep, because the dispatch ORDER is identical; only
+    the waiting moved.
+    """
+
+    def __init__(
+        self,
+        session: EngineSession,
+        state: SessionState,
+        chunk_size: Optional[int] = None,
+    ):
+        self.session = session
+        self.state = state
+        self.chunk_size = (
+            chunk_size if chunk_size is not None else session.config.chunk_size
+        )
+        # the pipeline's ONE upfront sync: snapshot the host shadows
+        self.num_rows = int(jax.device_get(state.num_rows))
+        self.active = np.asarray(jax.device_get(state.active)).copy()
+        self._chunks = []  # (epoch_base_within_run, length, stats, collect)
+        self.epochs_dispatched = 0
+        self.events_staged = 0  # churn events only (ingest/admit/retire)
+        self.stamps: list = []  # (wall_s, mean_active_expected_f) per epoch
+        self._t0 = time.perf_counter()
+
+    def run(self, num_epochs: int, collect_masks: bool = False) -> None:
+        """Dispatch ``num_epochs`` supersteps as chunked scans (non-blocking)."""
+        prog = self.session.program
+        base = 0
+        for length in prog.chunk_lengths(num_epochs, self.chunk_size):
+            self.state, stats = prog.dispatch_scan(
+                self.state, length, collect_masks
             )
-            if stop_when_exhausted and merged_valid == 0:
-                break
-        return state, history
+            self._chunks.append((base, length, stats, collect_masks))
+            base += length
+        self.epochs_dispatched += num_epochs
+
+    def ingest(self, outputs: jax.Array) -> None:
+        """Stage an ingest against the in-flight carry (no device sync;
+        bounds-checked and tier-grown from the host shadow)."""
+        self.state = self.session.ingest(
+            self.state, outputs, num_rows=self.num_rows
+        )
+        self.num_rows += int(jnp.asarray(outputs).shape[0])
+        self.events_staged += 1
+
+    def admit(self, query: CompiledQuery, slot: Optional[int] = None) -> int:
+        """Stage a tenant admission (slot chosen from the host shadow)."""
+        self.state, slot = self.session.admit(
+            self.state, query, slot=slot, active=self.active
+        )
+        self.active[slot] = True
+        self.events_staged += 1
+        return slot
+
+    def retire(self, slot: int) -> None:
+        """Stage a tenant retirement (validated against the host shadow)."""
+        self.state = self.session.retire(self.state, slot, active=self.active)
+        self.active[slot] = False
+        self.events_staged += 1
+
+    def finish(self) -> tuple[SessionState, list]:
+        """Drain the pipeline: materialize every chunk's stats (in dispatch
+        order, so each ``device_get`` stamps that chunk's true completion
+        time while later chunks keep running) and return the final state +
+        concatenated history.  The only blocking point of the pipeline."""
+        prog = self.session.program
+        history: list[SessionEpochStats] = []
+        for base, length, stats, collect in self._chunks:
+            host = jax.device_get(stats)  # blocks until THIS chunk completes
+            t_done = time.perf_counter() - self._t0
+            chunk_hist = prog.materialize_history(
+                [(length, host)],
+                wall_per_epoch=t_done / max(self.epochs_dispatched, 1),
+                collect_masks=collect,
+                stop_when_exhausted=False,
+                epoch_base=base,
+            )
+            for h in chunk_hist:
+                self.stamps.append((t_done, h.mean_expected_f))
+            history.extend(chunk_hist)
+        self.state = jax.block_until_ready(self.state)
+        self._chunks = []
+        return self.state, history

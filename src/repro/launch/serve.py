@@ -404,6 +404,10 @@ class SessionServeReport:
     max_capacity: int = 0
     growths: int = 0  # tier migrations the trace forced
     retrace_bound: int = 1  # max traces per scan shape (1 + ceil(log2(max/cap)))
+    overlap: bool = False  # events applied against in-flight chunks
+    chunk_size: Optional[int] = None
+    num_events: int = 0
+    events_per_sec: float = 0.0
 
 
 def serve_session_trace(
@@ -414,40 +418,68 @@ def serve_session_trace(
     preds=None,  # schema predicates, for admit events
     seed: int = 0,
     preemption: Optional[PreemptionHandler] = None,
+    overlap: bool = False,
+    chunk_size: Optional[int] = None,
 ) -> SessionServeReport:
     """Drive a scripted arrival trace through one long-lived session.
 
     Every event between runs is a masked data update; the report's
-    ``superstep_traces`` staying 1 is the churn-without-retrace witness.
+    ``superstep_traces`` staying within the retrace bound is the
+    churn-without-retrace witness.
+
+    ``overlap=True`` drives the trace through ``SessionPipeline``: scan
+    chunks are dispatched without waiting, events validate against host
+    shadows and apply to the in-flight carry, and the single device sync is
+    the final drain — bitwise-identical results, with event latency hidden
+    behind device compute.  ``chunk_size`` sets the scan dispatch
+    granularity for both modes (lockstep still blocks at every run/event
+    boundary, which is exactly the overhead ``overlap`` removes).
     """
     rng = np.random.default_rng(seed)
     pool_off = 0
     history = []
+    pipe = session.pipeline(state, chunk_size=chunk_size) if overlap else None
     t0 = time.perf_counter()
     for kind, arg in events:
         if preemption is not None and preemption.should_stop:
             break
         if kind == "run":
-            state, h = session.run(state, arg, stop_when_exhausted=False)
-            history.extend(h)
+            if pipe is not None:
+                pipe.run(arg)
+            else:
+                state, h = session.run(
+                    state, arg, stop_when_exhausted=False, chunk_size=chunk_size
+                )
+                history.extend(h)
         elif kind == "admit":
             if preds is None:
                 raise ValueError("admit events need the schema predicates")
             k = min(max(1, arg), len(preds))
             cols = sorted(rng.choice(len(preds), size=k, replace=False))
-            state, slot = session.admit(
-                state, conjunction(*[preds[c] for c in cols])
-            )
+            query = conjunction(*[preds[c] for c in cols])
+            if pipe is not None:
+                pipe.admit(query)
+            else:
+                state, slot = session.admit(state, query)
         elif kind == "ingest":
             if pool is None or pool_off + arg > pool.shape[0]:
                 raise ValueError(
                     f"ingest of {arg} exceeds the remaining pool "
                     f"({0 if pool is None else pool.shape[0] - pool_off})"
                 )
-            state = session.ingest(state, pool[pool_off:pool_off + arg])
+            batch = pool[pool_off:pool_off + arg]
+            if pipe is not None:
+                pipe.ingest(batch)
+            else:
+                state = session.ingest(state, batch)
             pool_off += arg
         else:  # retire
-            state = session.retire(state, arg)
+            if pipe is not None:
+                pipe.retire(arg)
+            else:
+                state = session.retire(state, arg)
+    if pipe is not None:
+        state, history = pipe.finish()  # the pipeline's single sync point
     wall = time.perf_counter() - t0
     last = history[-1] if history else None
     return SessionServeReport(
@@ -466,6 +498,10 @@ def serve_session_trace(
         max_capacity=session.max_capacity,
         growths=session.growths,
         retrace_bound=session.retrace_bound,
+        overlap=overlap,
+        chunk_size=chunk_size,
+        num_events=len(events),
+        events_per_sec=len(events) / max(wall, 1e-9),
     )
 
 
@@ -498,6 +534,14 @@ def main(argv=None):
     ap.add_argument("--trace", default=None,
                     help="session arrival trace, e.g. "
                          "'admit:2;run:4;ingest:64;admit:3;run:4;retire:0;run:4'")
+    ap.add_argument("--chunk-size", type=int, default=None,
+                    help="scan dispatch granularity: run events scan this many "
+                         "epochs per device dispatch (bitwise inert; the unit "
+                         "of event overlap)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="apply trace events against in-flight scan chunks "
+                         "(async pipeline: no device syncs until the final "
+                         "drain) instead of lockstep between runs")
     args = ap.parse_args(argv)
 
     handler = PreemptionHandler().install()
@@ -518,12 +562,15 @@ def main(argv=None):
         events = parse_trace(spec)
         report = serve_session_trace(
             session, state, events, pool=pool, preds=preds,
-            preemption=handler,
+            preemption=handler, overlap=args.overlap,
+            chunk_size=args.chunk_size,
         )
         eps = report.epochs / max(report.wall_s, 1e-9)
         bills = {i: f"{c:.3f}" for i, c in enumerate(report.attributed) if c > 0}
+        mode = "overlap" if args.overlap else "lockstep"
         print(
-            f"[serve] session trace {spec!r}: {report.epochs} epochs, "
+            f"[serve] session trace {spec!r} ({mode}, chunk="
+            f"{args.chunk_size}): {report.epochs} epochs, "
             f"{report.num_rows} rows (tier {report.capacity} of "
             f"{report.max_capacity} max, {report.growths} growths), "
             f"{report.active_tenants} active tenants, "
@@ -531,15 +578,21 @@ def main(argv=None):
             f"mean E(F1)={report.mean_expected_f:.3f}, "
             f"ledger={bills} (+{report.unattributed:.4f} unattributed), "
             f"superstep traces={report.superstep_traces}, "
-            f"wall={report.wall_s:.1f}s ({eps:.2f} epochs/s)"
+            f"wall={report.wall_s:.1f}s ({eps:.2f} epochs/s, "
+            f"{report.events_per_sec:.2f} events/s)"
         )
-        # each DISTINCT run length legitimately compiles its own scan program
-        # once per capacity tier the trace actually VISITED (growths + 1);
-        # anything beyond means a churn event re-traced the superstep
-        expected = (
-            max(len({a for k, a in events if k == "run"}), 1)
-            * (report.growths + 1)
-        )
+        # each DISTINCT scan length (with chunking: chunk length + tail
+        # remainders, not run length) legitimately compiles its own scan
+        # program once per capacity tier the trace actually VISITED
+        # (growths + 1); anything beyond means a churn event re-traced the
+        # superstep
+        from repro.core import EpochProgram
+
+        lengths = set()
+        for k, a in events:
+            if k == "run":
+                lengths.update(EpochProgram.chunk_lengths(a, args.chunk_size))
+        expected = max(len(lengths), 1) * (report.growths + 1)
         if report.superstep_traces > expected:
             print(
                 f"[serve] WARNING: superstep re-traced under churn "

@@ -1,0 +1,362 @@
+"""Unified executor: chunked-scan bitwise equivalence (including across
+mid-run tier growth), async event-pipeline equivalence with zero extra
+retraces, chunk-program reuse across run lengths, and the recycled-slot
+ledger reset with its typed error path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    EngineSession,
+    EpochProgram,
+    MultiQueryConfig,
+    Predicate,
+    SlotActiveError,
+    conjunction,
+    fallback_decision_table,
+)
+from repro.core.combine import default_combine_params
+from repro.data.synthetic import make_corpus
+
+P_GLOBAL, F, N = 4, 4, 160
+
+
+def _world(seed=0, num_objects=N):
+    preds = [Predicate(i, 1) for i in range(P_GLOBAL)]
+    corpus = make_corpus(
+        jax.random.PRNGKey(seed), num_objects, [p.tag_type for p in preds],
+        [p.tag for p in preds], selectivity=[0.3, 0.4, 0.25, 0.35],
+    )
+    combine = default_combine_params(corpus.aucs)
+    table = fallback_decision_table(P_GLOBAL, F, corpus.aucs)
+    return preds, corpus, combine, table
+
+
+def _session(preds, corpus, combine, table, capacity, max_tenants,
+             max_capacity=None, **cfg_kw):
+    cfg = MultiQueryConfig(**{"plan_size": 32, **cfg_kw})
+    return EngineSession(
+        [p.positive() for p in preds], table, combine, corpus.costs,
+        capacity=capacity, max_tenants=max_tenants, config=cfg,
+        max_capacity=max_capacity,
+    )
+
+
+def _assert_histories_bitwise(h1, h2):
+    assert len(h1) == len(h2)
+    for a, b in zip(h1, h2):
+        assert a.cost_spent == b.cost_spent  # bitwise, not approx
+        assert a.epoch_cost == b.epoch_cost
+        assert a.merged_valid == b.merged_valid
+        assert a.attributed == b.attributed
+        if a.answer_mask is not None or b.answer_mask is not None:
+            np.testing.assert_array_equal(
+                np.asarray(a.answer_mask), np.asarray(b.answer_mask)
+            )
+
+
+# ------------------------------------------------------ chunked-scan parity --
+
+
+def test_chunk_lengths_partitioning():
+    cl = EpochProgram.chunk_lengths
+    assert cl(6, None) == [6]
+    assert cl(6, 2) == [2, 2, 2]
+    assert cl(7, 3) == [3, 3, 1]
+    assert cl(2, 8) == [2]
+    assert cl(0, 3) == []
+    with pytest.raises(ValueError, match="chunk_size"):
+        cl(4, 0)
+    with pytest.raises(ValueError, match="num_epochs"):
+        cl(-1, 2)
+
+
+@pytest.mark.parametrize("chunk", [1, 2, 3])
+def test_chunked_scan_bitwise_identical(chunk):
+    """run(E) vs chunked E = k*chunk (+ remainder): bitwise-identical answer
+    sets, cost_spent, and ledger bills at every epoch."""
+    preds, corpus, combine, table = _world()
+    queries = [conjunction(preds[0], preds[1]), conjunction(preds[1], preds[2])]
+
+    def run(chunk_size):
+        sess = _session(preds, corpus, combine, table, capacity=N, max_tenants=2)
+        st = sess.init_state(corpus.func_probs)
+        for q in queries:
+            st, _ = sess.admit(st, q)
+        st, hist = sess.run(st, 6, collect_masks=True, chunk_size=chunk_size)
+        return sess, st, hist
+
+    _, st_m, h_m = run(None)  # monolithic
+    sess_c, st_c, h_c = run(chunk)
+    _assert_histories_bitwise(h_m, h_c)
+    assert float(st_m.cost_spent) == float(st_c.cost_spent)
+    np.testing.assert_array_equal(
+        np.asarray(st_m.derived.in_answer), np.asarray(st_c.derived.in_answer)
+    )
+    bills_m = st_m.ledger.bills(st_m.cost_spent)
+    bills_c = st_c.ledger.bills(st_c.cost_spent)
+    np.testing.assert_array_equal(bills_m, bills_c)
+
+
+def test_chunked_scan_bitwise_across_tier_growth():
+    """A chunked run sequence with a mid-trace ingest that forces tier growth
+    is bitwise identical to the unchunked sequence (answers, cost_spent,
+    bills), and chunking adds no traces beyond one per (tier, chunk length)."""
+    preds, corpus, combine, table = _world(num_objects=256)
+    q = conjunction(preds[0], preds[1])
+
+    def drive(chunk_size):
+        sess = _session(preds, corpus, combine, table, capacity=64,
+                        max_tenants=2, max_capacity=256)
+        st = sess.init_state(corpus.func_probs[:48])
+        st, _ = sess.admit(st, q)
+        hist = []
+        st, h = sess.run(st, 4, collect_masks=True, chunk_size=chunk_size)
+        hist += h
+        st = sess.ingest(st, corpus.func_probs[48:108])  # 108 rows -> tier 128
+        st, h = sess.run(st, 4, collect_masks=True, chunk_size=chunk_size)
+        hist += h
+        return sess, st, hist
+
+    sess_m, st_m, h_m = drive(None)
+    sess_c, st_c, h_c = drive(2)
+    _assert_histories_bitwise(h_m, h_c)
+    assert float(st_m.cost_spent) == float(st_c.cost_spent)
+    np.testing.assert_array_equal(
+        st_m.ledger.bills(st_m.cost_spent), st_c.ledger.bills(st_c.cost_spent)
+    )
+    assert sess_c.growths == sess_m.growths == 1
+    # monolithic: one 4-epoch program per visited tier; chunked: one 2-epoch
+    # program per visited tier — growth multiplies lengths, never adds them
+    assert sess_m.superstep_traces == 2
+    assert sess_c.superstep_traces == 2
+
+
+def test_chunked_scan_reuses_one_program_across_run_lengths():
+    """Distinct run lengths amortize onto the SAME chunk program: epochs=8
+    then epochs=6 at chunk=2 compile exactly one superstep."""
+    preds, corpus, combine, table = _world()
+    sess = _session(preds, corpus, combine, table, capacity=N, max_tenants=1,
+                    chunk_size=2)  # config-level default granularity
+    st = sess.init_state(corpus.func_probs)
+    st, _ = sess.admit(st, conjunction(preds[0], preds[1]))
+    st, _ = sess.run(st, 8, stop_when_exhausted=False)
+    st, _ = sess.run(st, 6, stop_when_exhausted=False)
+    assert sess.superstep_traces == 1
+    # a remainder chunk is a second length, compiled once
+    st, _ = sess.run(st, 5, stop_when_exhausted=False)
+    assert sess.superstep_traces == 2
+
+
+# ------------------------------------------------------ async event pipeline --
+
+
+def test_pipeline_bitwise_equals_lockstep_with_zero_extra_retraces():
+    """The async pipeline (events applied against in-flight chunks, one sync
+    at finish) produces bitwise-identical answers / cost_spent / ledger to
+    lockstep application of the SAME trace, with identical superstep traces
+    per tier."""
+    preds, corpus, combine, table = _world(num_objects=512)
+    q0 = conjunction(preds[0], preds[1])
+    q1 = conjunction(preds[1], preds[2])
+    q2 = conjunction(preds[2], preds[3])
+
+    def lockstep():
+        sess = _session(preds, corpus, combine, table, capacity=128,
+                        max_tenants=3, max_capacity=512)
+        st = sess.init_state(corpus.func_probs[:96])
+        st, s0 = sess.admit(st, q0)
+        st, s1 = sess.admit(st, q1)
+        hist = []
+        st, h = sess.run(st, 4, chunk_size=2, stop_when_exhausted=False)
+        hist += h
+        st = sess.ingest(st, corpus.func_probs[96:160])  # 160 rows -> tier 256
+        st, h = sess.run(st, 4, chunk_size=2, stop_when_exhausted=False)
+        hist += h
+        st, s2 = sess.admit(st, q2)
+        st = sess.retire(st, s0)
+        st, h = sess.run(st, 4, chunk_size=2, stop_when_exhausted=False)
+        hist += h
+        return sess, st, hist
+
+    def pipelined():
+        sess = _session(preds, corpus, combine, table, capacity=128,
+                        max_tenants=3, max_capacity=512)
+        st = sess.init_state(corpus.func_probs[:96])
+        pipe = sess.pipeline(st, chunk_size=2)
+        s0 = pipe.admit(q0)
+        pipe.admit(q1)
+        pipe.run(4)
+        pipe.ingest(corpus.func_probs[96:160])
+        pipe.run(4)
+        pipe.admit(q2)
+        pipe.retire(s0)
+        pipe.run(4)
+        return sess, pipe, *pipe.finish()
+
+    sess_l, st_l, h_l = lockstep()
+    sess_p, pipe, st_p, h_p = pipelined()
+    assert len(h_l) == len(h_p) == 12
+    for a, b in zip(h_l, h_p):
+        assert a.cost_spent == b.cost_spent
+        assert a.merged_valid == b.merged_valid
+        assert a.attributed == b.attributed
+        assert a.active == b.active
+        assert a.num_rows == b.num_rows
+    assert float(st_l.cost_spent) == float(st_p.cost_spent)
+    np.testing.assert_array_equal(
+        np.asarray(st_l.derived.in_answer), np.asarray(st_p.derived.in_answer)
+    )
+    np.testing.assert_array_equal(
+        st_l.ledger.bills(st_l.cost_spent), st_p.ledger.bills(st_p.cost_spent)
+    )
+    # zero extra retraces: the pipeline dispatched the same chunk programs
+    assert sess_p.superstep_traces == sess_l.superstep_traces
+    assert sess_p.superstep_traces <= sess_p.retrace_bound * 1  # one length
+    # host shadows tracked the device state exactly
+    assert pipe.num_rows == int(st_p.num_rows) == 160
+    np.testing.assert_array_equal(pipe.active, np.asarray(st_p.active))
+    assert len(pipe.stamps) == len(h_p)
+
+
+def test_pipeline_shadow_validation_matches_lockstep_errors():
+    """Pipeline events validate against host shadows: the same guard rails
+    fire without ever reading the device."""
+    preds, corpus, combine, table = _world()
+    sess = _session(preds, corpus, combine, table, capacity=N, max_tenants=2)
+    st = sess.init_state(corpus.func_probs)
+    pipe = sess.pipeline(st)
+    slot = pipe.admit(conjunction(preds[0]))
+    with pytest.raises(SlotActiveError):
+        pipe.admit(conjunction(preds[1]), slot=slot)
+    with pytest.raises(ValueError, match="overflows capacity"):
+        pipe.ingest(jnp.full((1, P_GLOBAL, F), 0.5))
+    pipe.retire(slot)
+    with pytest.raises(ValueError, match="not active"):
+        pipe.retire(slot)
+    # the pipeline is still coherent after rejected events
+    pipe.admit(conjunction(preds[1]))
+    pipe.run(2)
+    _, hist = pipe.finish()
+    assert len(hist) == 2 and hist[-1].merged_valid > 0
+
+
+# ------------------------------------------------- recycled-slot ledger reset --
+
+
+def test_admit_into_recycled_slot_resets_ledger_and_derived_state():
+    """retire(slot) then admit() into the same slot: the new tenant starts
+    from a ZERO ledger accumulator (the predecessor's bill moves to the
+    archived bucket; totals still reconcile with cost_spent) and from
+    warm-started derived state, not the predecessor's."""
+    preds, corpus, combine, table = _world()
+    sess = _session(preds, corpus, combine, table, capacity=N, max_tenants=1)
+    st = sess.init_state(corpus.func_probs)
+    st, slot = sess.admit(st, conjunction(preds[0], preds[1]))
+    st, _ = sess.run(st, 3)
+    first_bill = float(st.ledger.attributed[slot])
+    spent_before = float(st.cost_spent)
+    assert first_bill == spent_before > 0
+
+    st = sess.retire(st, slot)
+    assert float(st.ledger.attributed[slot]) == first_bill  # final bill kept
+
+    st, slot2 = sess.admit(st, conjunction(preds[2], preds[3]))
+    assert slot2 == slot  # recycled
+    # the recycled slot starts clean; the old bill is archived, not lost
+    assert float(st.ledger.attributed[slot]) == 0.0
+    assert float(st.ledger.triples[slot]) == 0.0
+    assert int(st.ledger.wanted[slot]) == 0
+    assert float(st.ledger.archived) == first_bill
+    assert float(st.ledger.reconcile(st.cost_spent)) == 0.0
+    # derived state reflects the NEW query (warm start), not the old one
+    np.testing.assert_array_equal(
+        np.asarray(st.pred_mask[slot]), np.array([False, False, True, True])
+    )
+
+    st, _ = sess.run(st, 3)
+    led = st.ledger
+    # the new tenant is billed only for its own epochs, and the books close:
+    # archived + new bill == total substrate spend
+    assert 0 < float(led.attributed[slot]) < float(st.cost_spent)
+    assert float(led.reconcile(st.cost_spent)) == pytest.approx(0.0, abs=1e-3)
+    bills = led.bills(st.cost_spent)
+    acc = np.float32(np.float32(led.archived) + np.float32(led.unattributed))
+    for v in bills:
+        acc = np.float32(acc + v)
+    assert acc == np.float32(np.asarray(st.cost_spent))
+    # no retrace through the whole retire/admit/run cycle
+    assert sess.superstep_traces == 1
+
+
+def test_admitting_into_active_slot_raises_typed_error():
+    preds, corpus, combine, table = _world()
+    sess = _session(preds, corpus, combine, table, capacity=N, max_tenants=2)
+    st = sess.init_state(corpus.func_probs)
+    st, slot = sess.admit(st, conjunction(preds[0]))
+    with pytest.raises(SlotActiveError, match="already occupied") as ei:
+        sess.admit(st, conjunction(preds[1]), slot=slot)
+    assert isinstance(ei.value, ValueError)  # back-compat with old handlers
+    assert ei.value.slot == slot
+
+
+def test_donated_scan_matches_undonated():
+    """The donation path (facades donate driver-created states off-CPU)
+    compiles and produces identical results; on CPU JAX ignores the donation
+    but the donate-keyed program is exercised end to end."""
+    preds, corpus, combine, table = _world()
+    q = conjunction(preds[0], preds[1])
+
+    def run(donate):
+        sess = _session(preds, corpus, combine, table, capacity=N, max_tenants=1)
+        st = sess.init_state(corpus.func_probs)
+        st, _ = sess.admit(st, q)
+        return sess.program.run_scan(st, 4, collect_masks=True, donate=donate)
+
+    st_p, h_p = run(False)
+    st_d, h_d = run(True)
+    _assert_histories_bitwise(h_p, h_d)
+    assert float(st_p.cost_spent) == float(st_d.cost_spent)
+
+
+# --------------------------------------------------------- facade chunking --
+
+
+def test_facades_accept_chunked_runs_bitwise():
+    """The operator and multi-query facades pass chunk_size through to the
+    unified executor with bitwise-identical results."""
+    from repro.core import (
+        MultiQueryEngine, OperatorConfig, ProgressiveQueryOperator,
+        build_query_set,
+    )
+    from repro.enrich.simulated import SimulatedBank
+
+    preds, corpus, combine, table = _world()
+    bank = SimulatedBank(outputs=corpus.func_probs, costs=corpus.costs)
+    qset = build_query_set(
+        [conjunction(preds[0], preds[1]), conjunction(preds[1], preds[2])],
+        global_predicates=[p.positive() for p in preds],
+    )
+    eng = MultiQueryEngine(qset, table, combine, bank.costs, bank,
+                           MultiQueryConfig(plan_size=32))
+    s1, h1 = eng.run_scan(N, 6, collect_masks=True)
+    s2, h2 = eng.run_scan(N, 6, collect_masks=True, chunk_size=2)
+    assert [h.cost_spent for h in h1] == [h.cost_spent for h in h2]
+    np.testing.assert_array_equal(
+        np.asarray(s1.per_query.in_answer), np.asarray(s2.per_query.in_answer)
+    )
+
+    op = ProgressiveQueryOperator(
+        conjunction(preds[0], preds[1]), table.subset([0, 1]),
+        default_combine_params(corpus.aucs[:2]), corpus.costs[:2],
+        SimulatedBank(outputs=bank.outputs[:, :2], costs=bank.costs[:2]),
+        OperatorConfig(plan_size=32),
+    )
+    so1, ho1 = op.run(N, 5)
+    so2, ho2 = op.run(N, 5, chunk_size=2)
+    assert [h.cost_spent for h in ho1] == [h.cost_spent for h in ho2]
+    np.testing.assert_array_equal(
+        np.asarray(so1.in_answer), np.asarray(so2.in_answer)
+    )

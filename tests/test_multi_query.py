@@ -288,17 +288,19 @@ def test_admit_duplicate_tenant_dedups_via_unique_rows():
 
 
 def test_admit_after_run_scan_epochs():
-    """Admission after the scan driver has completed epochs: the scan cache is
-    invalidated, Q grows, and both drivers keep running on the new shape."""
+    """Admission after the scan driver has completed epochs: the facade's
+    session is invalidated, Q grows, and both drivers keep running on the new
+    shape."""
     preds, corpus, bank, combine, table = _world()
     eng = _engine([conjunction(preds[0], preds[1])], preds, bank, combine, table)
     state, hist = eng.run_scan(N, 3)
-    assert len(eng._scan_cache) == 1
+    assert eng._session is not None and eng._session[1].max_tenants == 1
     spent = float(state.cost_spent)
     state = eng.admit(state, conjunction(preds[1], preds[2]))
-    assert not eng._scan_cache  # stale Q=1 program dropped
+    assert eng._session is None  # stale Q=1 facade session dropped
     assert float(state.cost_spent) == pytest.approx(spent)
     state, hist2 = eng.run_scan(N, 3, state=state)
+    assert eng._session[1].max_tenants == 2
     assert state.per_query.num_queries == 2
     assert len(hist2) == 3
     assert hist2[-1].cost_spent > spent

@@ -159,8 +159,8 @@ def test_ingested_rows_become_candidates_and_invalid_rows_never_plan():
     st, _ = sess.run(st, 2)
 
     def valid_plan_objects(state):
-        benefits = sess._benefits(state, state.row_valid())
-        from repro.core.multi_query import select_plans_batched
+        benefits = sess.program._benefits(state, state.row_valid())
+        from repro.core.executor import select_plans_batched
 
         plans = select_plans_batched(
             benefits, plan_size=sess.config.plan_size,
@@ -370,7 +370,7 @@ def test_padded_plan_lanes_inert_at_num_rows_equals_capacity():
     application, or ledger want-bits, even when poisoned with huge costs and
     aliased onto the last real row."""
     from repro.core import state as state_lib
-    from repro.core.multi_query import select_plans_batched
+    from repro.core.executor import select_plans_batched
     from repro.core.plan import gather_object_idx
 
     preds, corpus, combine, table = _world()
@@ -379,7 +379,7 @@ def test_padded_plan_lanes_inert_at_num_rows_equals_capacity():
     st, _ = sess.admit(st, conjunction(preds[0], preds[1]))
     assert int(st.num_rows) == st.capacity
 
-    benefits = sess._benefits(st, st.row_valid())
+    benefits = sess.program._benefits(st, st.row_valid())
     plans = select_plans_batched(
         benefits, plan_size=sess.config.plan_size, num_shards=1,
         num_predicates=sess.num_predicates,

@@ -59,6 +59,18 @@ def _queries(preds):
     ]
 
 
+class OpaqueBank:
+    """A traceable bank with its ``supports_scan`` flag hidden: ``run()``
+    must route it to the per-epoch loop driver (the model-cascade posture)."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.costs = inner.costs
+
+    def execute(self, plan):
+        return self.inner.execute(plan)
+
+
 def _assert_plans_identical(a: Plan, b: Plan, msg=""):
     ca, cb = canonicalize_plan(a), canonicalize_plan(b)
     for field in Plan._fields:
@@ -73,8 +85,9 @@ def _assert_plans_identical(a: Plan, b: Plan, msg=""):
 
 def test_scan_driver_matches_loop_driver():
     preds, corpus, bank, combine, table = _world()
+    eng_l = _engine(_queries(preds), preds, OpaqueBank(bank), combine, table)
     eng = _engine(_queries(preds), preds, bank, combine, table)
-    state_l, hist_l = eng.run(N, 6, driver="loop")
+    state_l, hist_l = eng_l.run(N, 6)  # opaque bank -> loop driver
     state_s, hist_s = eng.run_scan(N, 6, collect_masks=True)
     assert len(hist_l) == len(hist_s)
     for a, b in zip(hist_l, hist_s):
@@ -104,25 +117,17 @@ def test_scan_driver_trims_after_exhaustion():
     preds, corpus, bank, combine, table = _world()
     eng = _engine([conjunction(preds[0])], preds, bank, combine, table,
                   plan_size=256, candidate_strategy="all")
-    state, hist = eng.run(N, 40, driver="scan")
+    state, hist = eng.run_scan(N, 40)
     state2, hist2 = _engine(
-        [conjunction(preds[0])], preds, bank, combine, table,
+        [conjunction(preds[0])], preds, OpaqueBank(bank), combine, table,
         plan_size=256, candidate_strategy="all",
-    ).run(N, 40, driver="loop")
+    ).run(N, 40)
     assert len(hist) == len(hist2) < 40
     assert hist[-1].merged_valid == 0
     assert hist[-1].cost_spent == pytest.approx(hist2[-1].cost_spent, rel=1e-6)
 
 
 def test_run_auto_routes_by_bank():
-    class OpaqueBank:
-        def __init__(self, inner):
-            self.inner = inner
-            self.costs = inner.costs
-
-        def execute(self, plan):
-            return self.inner.execute(plan)
-
     preds, corpus, bank, combine, table = _world()
     eng_scan = _engine(_queries(preds), preds, bank, combine, table)
     assert getattr(eng_scan.bank, "supports_scan", False)
@@ -130,8 +135,27 @@ def test_run_auto_routes_by_bank():
     s1, h1 = eng_scan.run(N, 3)  # auto -> scan
     s2, h2 = eng_loop.run(N, 3)  # auto -> loop
     assert [h.cost_spent for h in h1] == [h.cost_spent for h in h2]
-    with pytest.raises(ValueError):
-        eng_scan.run(N, 2, driver="bogus")
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError):
+            eng_scan.run(N, 2, driver="bogus")
+
+
+def test_run_driver_kwarg_is_a_deprecated_shim():
+    """The old explicit driver routing survives as a warning shim with
+    unchanged results; the repo itself no longer calls it (tier-1 runs with
+    -W error::DeprecationWarning in CI)."""
+    preds, corpus, bank, combine, table = _world()
+    eng = _engine(_queries(preds), preds, bank, combine, table)
+    base, hist = eng.run(N, 3)
+    for forced in ("auto", "scan", "loop"):
+        e2 = _engine(_queries(preds), preds, bank, combine, table)
+        with pytest.warns(DeprecationWarning, match="driver=.*deprecated"):
+            s2, h2 = e2.run(N, 3, driver=forced)
+        assert [h.cost_spent for h in h2] == [h.cost_spent for h in hist]
+        np.testing.assert_array_equal(
+            np.asarray(base.per_query.in_answer),
+            np.asarray(s2.per_query.in_answer),
+        )
 
 
 def test_single_query_scan_matches_loop():
@@ -143,8 +167,14 @@ def test_single_query_scan_matches_loop():
         corpus.costs[:2], SimulatedBank(outputs=bank.outputs[:, :2], costs=bank.costs[:2]),
         OperatorConfig(plan_size=32), truth_mask=truth,
     )
-    state_l, hist_l = op.run(N, 5, driver="loop")
-    state_s, hist_s = op.run(N, 5, driver="scan")
+    op_l = ProgressiveQueryOperator(
+        query, table.subset([0, 1]), default_combine_params(corpus.aucs[:2]),
+        corpus.costs[:2],
+        OpaqueBank(SimulatedBank(outputs=bank.outputs[:, :2], costs=bank.costs[:2])),
+        OperatorConfig(plan_size=32), truth_mask=truth,
+    )
+    state_l, hist_l = op_l.run(N, 5)  # opaque bank -> loop driver
+    state_s, hist_s = op.run(N, 5)  # traceable bank -> fused scan
     assert len(hist_l) == len(hist_s)
     for a, b in zip(hist_l, hist_s):
         # float aggregates may differ by one float32 ulp: the scan fuses the
@@ -185,8 +215,8 @@ def test_engine_pallas_backend_matches_jnp(function_selection):
                     backend="jnp", **kw)
     eng_p = _engine(_queries(preds), preds, bank, combine, table,
                     backend="pallas", **kw)
-    s_j, h_j = eng_j.run(N, 3, driver="scan")
-    s_p, h_p = eng_p.run(N, 3, driver="scan")
+    s_j, h_j = eng_j.run_scan(N, 3)
+    s_p, h_p = eng_p.run_scan(N, 3)
     assert len(h_j) == len(h_p)
     for a, b in zip(h_j, h_p):
         # kernel LUT/one-hot gathers vs jnp gathers: equal to f32 tolerance
