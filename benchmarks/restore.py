@@ -1,0 +1,265 @@
+"""Durability benchmark: checkpoint overhead, restore latency, bitwise resume.
+
+The durable-session contract (``core.durability``) has two costs and one
+guarantee, and this benchmark measures all three on the SAME scripted arrival
+trace:
+
+* **checkpoint overhead** — the trace runs once without a checkpointer
+  (control) and once snapshotting on the default cadence; the overhead is the
+  fraction of serving wall time spent inside ``save_session_checkpoint``
+  (``checkpoint_overhead_frac``, CI bar: < 10%).  The checkpointed run must
+  itself stay bitwise identical to the control — snapshots at chunk
+  boundaries observe the carry, never perturb it.
+* **restore latency** — wall seconds from ``restore_session_checkpoint`` to a
+  ready-to-run state (meta validation + npz load + re-pad + placement).
+* **bitwise resume** — a third run is preempted mid-trace (cooperative
+  countdown handler: the deterministic stand-in for SIGTERM), force-saves at
+  the boundary it drained to, and two fresh processes resume it: one on the
+  saving topology and one planning over ``num_shards=2``.  Both must finish
+  with ``cost_spent`` / per-tenant bills / answers bitwise equal to the
+  uninterrupted control (``resume_bitwise`` in the payload; CI validates it
+  is ``true``).
+
+Results land in ``BENCH_restore.json`` with the shared ``meta`` block.
+
+    PYTHONPATH=src python -m benchmarks.restore [--full] [--out BENCH_restore.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+
+from benchmarks.common import bench_meta
+from repro.core import (
+    EngineSession,
+    MultiQueryConfig,
+    Predicate,
+    SessionCheckpointer,
+    fallback_decision_table,
+    restore_session_checkpoint,
+)
+from repro.core.combine import default_combine_params
+from repro.data.synthetic import make_corpus
+from repro.launch.serve import serve_session_trace
+from repro.runtime.fault_tolerance import PreemptionHandler
+
+P_GLOBAL, F = 4, 4
+
+
+class _CountdownPreemption(PreemptionHandler):
+    """Deterministic preemption: trip after N ``should_stop`` polls, so the
+    bench exercises the drain/force-save path without real signals."""
+
+    def __init__(self, after: int):
+        super().__init__()
+        self._after = after
+        self._polls = 0
+
+    @property
+    def should_stop(self) -> bool:
+        if not self._requested:
+            self._polls += 1
+            if self._polls > self._after:
+                self._requested = True
+        return self._requested
+
+
+def _world(num_objects: int, seed: int = 0):
+    preds = [Predicate(i, 1) for i in range(P_GLOBAL)]
+    corpus = make_corpus(
+        jax.random.PRNGKey(seed), num_objects, [p.tag_type for p in preds],
+        [p.tag for p in preds], selectivity=[0.3, 0.4, 0.25, 0.35],
+    )
+    return preds, corpus, default_combine_params(corpus.aucs), \
+        fallback_decision_table(P_GLOBAL, F, corpus.aucs)
+
+
+def _session(world, capacity, max_capacity, plan_size, num_shards=1):
+    preds, corpus, combine, table = world
+    return EngineSession(
+        [p.positive() for p in preds], table, combine, corpus.costs,
+        capacity=capacity, max_tenants=4,
+        config=MultiQueryConfig(plan_size=plan_size, num_shards=num_shards),
+        max_capacity=max_capacity,
+    )
+
+
+def _serve(world, events, n0, capacity, max_capacity, plan_size, chunk,
+           num_shards=1, checkpointer=None, preemption=None, resume=None,
+           state=None, session=None):
+    preds, corpus, _, _ = world
+    if session is None:
+        session = _session(world, capacity, max_capacity, plan_size,
+                           num_shards=num_shards)
+    if state is None:
+        state = session.init_state(corpus.func_probs[:n0])
+    report = serve_session_trace(
+        session, state, events, pool=corpus.func_probs[n0:], preds=preds,
+        seed=11, chunk_size=chunk, checkpointer=checkpointer,
+        preemption=preemption, resume=resume,
+    )
+    return session, report
+
+
+def _digests(report):
+    return (report.cost_hex, tuple(report.bills_hex), report.answer_digest,
+            report.epochs_total)
+
+
+def bench_restore(small: bool = True, out_path: str = "BENCH_restore.json"):
+    n0 = 256 if small else 1024
+    capacity = 2 * n0
+    max_capacity = 4 * n0
+    plan_size = 64 if small else 256
+    chunk = 4
+    every = 4  # the serve default cadence (--checkpoint-every)
+    run = 16 if small else 32
+    events = [
+        ("admit", 2), ("admit", 3), ("run", run), ("ingest", n0),
+        ("run", run), ("admit", 2), ("run", run),
+    ]
+    world = _world(2 * n0)
+
+    # warm the scan program on a scratch session so every timed run below
+    # measures steady-state serving, not XLA compilation
+    _serve(world, [("admit", 2), ("run", chunk)], n0, capacity, max_capacity,
+           plan_size, chunk)
+
+    t0 = time.perf_counter()
+    _, control = _serve(world, events, n0, capacity, max_capacity, plan_size,
+                        chunk)
+    control_wall = time.perf_counter() - t0
+
+    with tempfile.TemporaryDirectory() as tmp:
+        # ---- checkpoint overhead at the default cadence ------------------
+        ck_dir = Path(tmp) / "cadence"
+        sess = _session(world, capacity, max_capacity, plan_size)
+        ck = SessionCheckpointer(sess, ck_dir, every=every, keep=3)
+        t0 = time.perf_counter()
+        _, ckrep = _serve(world, events, n0, capacity, max_capacity,
+                          plan_size, chunk, checkpointer=ck, session=sess)
+        ck_wall = time.perf_counter() - t0
+        overhead_frac = ck.save_seconds / max(ck_wall, 1e-9)
+        checkpoint_inert = _digests(ckrep) == _digests(control)
+
+        # ---- preempt mid-trace, force-save at the drained boundary -------
+        kill_dir = Path(tmp) / "preempt"
+        vsess = _session(world, capacity, max_capacity, plan_size)
+        vck = SessionCheckpointer(vsess, kill_dir, every=every, keep=3)
+        handler = _CountdownPreemption(after=3 + run // chunk + 2)
+        _, vrep = _serve(world, events, n0, capacity, max_capacity,
+                         plan_size, chunk, checkpointer=vck, session=vsess,
+                         preemption=handler)
+        assert vrep.preempted and vck.last_step == vrep.epochs_total
+
+        # ---- restore latency + bitwise resume, same topology -------------
+        rsess = _session(world, capacity, max_capacity, plan_size)
+        t0 = time.perf_counter()
+        rstate, rstep, extra = restore_session_checkpoint(rsess, kill_dir)
+        rstate = jax.block_until_ready(rstate)
+        restore_latency_s = time.perf_counter() - t0
+        _, rrep = _serve(world, events, n0, capacity, max_capacity,
+                         plan_size, chunk, resume=extra["host"],
+                         session=rsess, state=rstate)
+
+        # ---- bitwise resume onto a DIFFERENT topology (2 plan shards) ----
+        r2sess = _session(world, capacity, max_capacity, plan_size,
+                          num_shards=2)
+        r2state, _, extra2 = restore_session_checkpoint(r2sess, kill_dir)
+        _, r2rep = _serve(world, events, n0, capacity, max_capacity,
+                          plan_size, chunk, resume=extra2["host"],
+                          session=r2sess, state=r2state)
+
+    resumed_ok = _digests(rrep) == _digests(control)
+    resumed2_ok = _digests(r2rep) == _digests(control)
+    resume_bitwise = bool(checkpoint_inert and resumed_ok and resumed2_ok)
+
+    payload = dict(
+        benchmark="restore",
+        meta=bench_meta(
+            capacity=capacity,
+            active_tenants=3,
+            events=events,
+            chunk_size=chunk,
+            backend="jnp",
+            num_shards=1,
+        ),
+        config=dict(
+            num_objects=n0, capacity=capacity, max_capacity=max_capacity,
+            plan_size=plan_size, chunk_size=chunk, checkpoint_every=every,
+            small=small,
+        ),
+        control=dict(
+            wall_s=control_wall, epochs_total=control.epochs_total,
+            cost_hex=control.cost_hex, answer_digest=control.answer_digest,
+            superstep_traces=control.superstep_traces,
+            retrace_bound=control.retrace_bound,
+        ),
+        checkpointed=dict(
+            wall_s=ck_wall, saves=ck.saves,
+            checkpoint_seconds=ck.save_seconds,
+            bytes_written=ck.bytes_written,
+            bitwise_vs_control=bool(checkpoint_inert),
+        ),
+        preempted=dict(
+            epochs_total=vrep.epochs_total, saved_step=vck.last_step,
+            events_done=vrep.events_done,
+        ),
+        restore=dict(
+            latency_s=restore_latency_s, restored_step=rstep,
+            resumed_epochs_total=rrep.epochs_total,
+            resumed_bitwise=bool(resumed_ok),
+            resumed_shards2_bitwise=bool(resumed2_ok),
+            resumed_superstep_traces=rrep.superstep_traces,
+            resumed_retrace_bound=rrep.retrace_bound,
+        ),
+        checkpoint_overhead_frac=overhead_frac,
+        resume_bitwise=resume_bitwise,
+    )
+    with open(out_path, "w") as fh:
+        json.dump(payload, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    return [
+        dict(
+            name=f"checkpoint_cadence{every}_N{n0}_C{capacity}",
+            us_per_call=1e6 * ck.save_seconds / max(ck.saves, 1),
+            derived=(
+                f"overhead_frac={overhead_frac:.4f}"
+                f";saves={ck.saves}"
+                f";bytes={ck.bytes_written}"
+                f";bitwise_vs_control={checkpoint_inert}"
+            ),
+        ),
+        dict(
+            name=f"restore_N{n0}_C{capacity}",
+            us_per_call=1e6 * restore_latency_s,
+            derived=(
+                f"resume_bitwise={resume_bitwise}"
+                f";resumed_shards2_bitwise={resumed2_ok}"
+                f";restored_step={rstep}"
+                f";traces={rrep.superstep_traces}/{rrep.retrace_bound}"
+            ),
+        ),
+    ]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--out", default="BENCH_restore.json")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    for r in bench_restore(small=not args.full, out_path=args.out):
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,6 +4,7 @@ Layout per step directory (atomic via rename):
 
     <root>/step_<n>.tmp/            -> <root>/step_<n>/
         meta.json                   tree structure + global shapes + dtypes
+                                    + an optional caller ``extra`` block
         proc<k>.npz                 per-process shard payloads
 
 Every process writes only the addressable shards it owns (deduplicated by
@@ -12,11 +13,19 @@ Restore re-shards onto ANY mesh: each restoring process reads whichever
 files contain the index ranges its new sharding needs (elastic scaling:
 save on 512 chips, restore on 256, or vice versa).  On this single-process
 CPU runtime all shards land in proc0.npz; the index math is identical.
+
+Round-trip contract (exercised by ``tests/test_durability.py`` over the full
+``SessionState`` leaf zoo): every leaf restores bitwise with its logical
+dtype — bf16 rides as a uint16 byte view (via ``tobytes``/``frombuffer`` so
+0-d scalars and non-contiguous layouts survive every numpy version), uint32
+bitmask words and bool masks round-trip unchanged, 0-d scalars stay 0-d, and
+the empty tree is a valid checkpoint.  Restore is STRICT: a ``like`` leaf
+whose shape or dtype disagrees with the stored leaf, or a tree whose keys
+don't match the checkpoint's, is a loud error, never a silent cast.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import shutil
@@ -38,8 +47,40 @@ def _flatten_with_paths(tree):
     return out, treedef
 
 
-def save_checkpoint(root: str | Path, step: int, tree: Any) -> Path:
-    """Write a sharded checkpoint atomically; returns the final directory."""
+def _to_storable(arr: np.ndarray) -> tuple[np.ndarray, str]:
+    """-> (npz-serializable array, logical dtype name).
+
+    numpy cannot serialize ml_dtypes bf16; it rides as a uint16 byte view.
+    ``tobytes``/``frombuffer`` instead of ``.view`` so 0-d scalars and
+    non-contiguous layouts survive (``.view`` rejects both on older numpy).
+    """
+    if arr.dtype == jnp.bfloat16:
+        stored = np.frombuffer(
+            np.ascontiguousarray(arr).tobytes(), np.uint16
+        ).reshape(arr.shape)
+        return stored, "bfloat16"
+    return arr, str(arr.dtype)
+
+
+def _from_storable(stored: np.ndarray, logical_dtype: str) -> np.ndarray:
+    """Invert ``_to_storable``: rehydrate the logical dtype bitwise."""
+    if logical_dtype == "bfloat16":
+        return np.frombuffer(
+            np.ascontiguousarray(stored).tobytes(), jnp.bfloat16
+        ).reshape(stored.shape)
+    return stored
+
+
+def save_checkpoint(
+    root: str | Path, step: int, tree: Any, extra: Optional[dict] = None
+) -> Path:
+    """Write a sharded checkpoint atomically; returns the final directory.
+
+    ``extra`` is an optional JSON-able dict stored inside ``meta.json`` under
+    the same atomic rename — host-side metadata (event cursors, RNG states,
+    epoch counters) that must never be newer or older than the array payload
+    it describes.  Read it back with ``load_meta``.
+    """
     root = Path(root)
     final = root / f"step_{step:08d}"
     tmp = root / f"step_{step:08d}.tmp"
@@ -49,19 +90,20 @@ def save_checkpoint(root: str | Path, step: int, tree: Any) -> Path:
 
     flat, _ = _flatten_with_paths(tree)
     meta = {"step": step, "leaves": {}, "time": time.time()}
+    if extra is not None:
+        meta["extra"] = extra
     payload: dict = {}
     for key, leaf in flat:
         arr = np.asarray(jax.device_get(leaf))
-        logical_dtype = str(arr.dtype)
-        if arr.dtype == jnp.bfloat16:  # numpy cannot serialize bf16
-            arr = arr.view(np.uint16)
-            logical_dtype = "bfloat16"
+        stored, logical_dtype = _to_storable(arr)
         meta["leaves"][key] = {
             "shape": list(arr.shape),
             "dtype": logical_dtype,
         }
-        payload[key] = arr
-    # single-process runtime: all shards owned by proc 0
+        payload[key] = stored
+    # single-process runtime: all shards owned by proc 0.  np.savez of zero
+    # arrays still writes a valid (empty) archive, so the empty tree is a
+    # checkpoint like any other.
     np.savez(tmp / "proc0.npz", **{k.replace("/", "|"): v for k, v in payload.items()})
     (tmp / "meta.json").write_text(json.dumps(meta))
     if final.exists():
@@ -70,17 +112,45 @@ def save_checkpoint(root: str | Path, step: int, tree: Any) -> Path:
     return final
 
 
-def latest_step(root: str | Path) -> Optional[int]:
-    root = Path(root)
+def _complete_steps(root: Path) -> list[int]:
     if not root.exists():
-        return None
-    steps = [
+        return []
+    return sorted(
         int(p.name.split("_")[1])
         for p in root.iterdir()
         if p.is_dir() and p.name.startswith("step_") and not p.name.endswith(".tmp")
         and (p / "meta.json").exists()
-    ]
-    return max(steps) if steps else None
+    )
+
+
+def available_steps(root: str | Path) -> list[int]:
+    """Ascending step numbers of every COMPLETE checkpoint under ``root``
+    (a ``step_*`` directory missing ``meta.json`` — a crash between mkdir
+    and rename can't produce one, but a torn copy can — is not a
+    checkpoint)."""
+    return _complete_steps(Path(root))
+
+
+def latest_step(root: str | Path) -> Optional[int]:
+    steps = _complete_steps(Path(root))
+    return steps[-1] if steps else None
+
+
+def load_meta(root: str | Path, step: Optional[int] = None) -> dict:
+    """Read a checkpoint's ``meta.json`` (latest step when ``step`` is None).
+
+    The cheap host-side half of a restore: leaf shapes/dtypes plus the
+    caller's ``extra`` block, no array payload touched.
+    """
+    root = Path(root)
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {root}")
+    d = root / f"step_{step:08d}"
+    meta = json.loads((d / "meta.json").read_text())
+    meta["step"] = step  # authoritative even for hand-moved directories
+    return meta
 
 
 def restore_checkpoint(
@@ -91,7 +161,14 @@ def restore_checkpoint(
 ) -> tuple[Any, int]:
     """Restore into the structure of ``like`` (a pytree of arrays or
     ShapeDtypeStructs).  ``shardings``: optional pytree of NamedShardings for
-    elastic placement onto the CURRENT mesh (may differ from save-time)."""
+    elastic placement onto the CURRENT mesh (may differ from save-time).
+
+    Strict: every ``like`` leaf must exist in the checkpoint with the same
+    shape AND logical dtype (restoring uint32 bitmask words into an int32
+    slot would silently reinterpret bits — that is an error here), and
+    checkpoint leaves absent from ``like`` are reported, not dropped
+    silently.
+    """
     root = Path(root)
     if step is None:
         step = latest_step(root)
@@ -102,6 +179,15 @@ def restore_checkpoint(
     payload = np.load(d / "proc0.npz")
 
     flat_like, treedef = _flatten_with_paths(like)
+    like_keys = [k for k, _ in flat_like]
+    missing = [k for k in like_keys if k not in meta["leaves"]]
+    unused = [k for k in meta["leaves"] if k not in set(like_keys)]
+    if missing or unused:
+        raise ValueError(
+            f"checkpoint step {step} does not match the restore target: "
+            f"missing from checkpoint {missing or '[]'}, "
+            f"present but unconsumed {unused or '[]'}"
+        )
     if shardings is not None:
         flat_sh, _ = _flatten_with_paths(shardings)
         sh_by_key = dict(flat_sh)
@@ -110,13 +196,18 @@ def restore_checkpoint(
 
     leaves = []
     for key, leaf in flat_like:
-        stored = payload[key.replace("/", "|")]
-        if meta["leaves"][key]["dtype"] == "bfloat16":
-            stored = stored.view(jnp.bfloat16)
+        logical_dtype = meta["leaves"][key]["dtype"]
+        stored = _from_storable(payload[key.replace("/", "|")], logical_dtype)
         want_shape = tuple(leaf.shape)
         if tuple(stored.shape) != want_shape:
             raise ValueError(
                 f"checkpoint leaf {key}: shape {stored.shape} != {want_shape}"
+            )
+        want_dtype = str(jnp.dtype(leaf.dtype))
+        if logical_dtype != want_dtype:
+            raise ValueError(
+                f"checkpoint leaf {key}: dtype {logical_dtype} != {want_dtype} "
+                "(restore is bitwise; cast after restoring if you mean it)"
             )
         arr = jnp.asarray(stored, dtype=leaf.dtype)
         sh = sh_by_key.get(key)
@@ -126,11 +217,36 @@ def restore_checkpoint(
     return jax.tree_util.tree_unflatten(treedef, leaves), step
 
 
-def prune_old(root: str | Path, keep: int = 3) -> None:
+def prune_old(root: str | Path, keep: int = 3) -> list[int]:
+    """Delete all but the newest ``keep`` COMPLETE checkpoints; returns the
+    deleted step numbers.
+
+    Safety rails for preemptible serving: ``keep`` must be >= 1 (a pruner
+    that can delete every restore point is a data-loss primitive, not a
+    janitor); only complete steps (``meta.json`` present) count toward
+    ``keep``, so a torn directory can never crowd out real checkpoints; and
+    the newest complete step is NEVER deleted while any ``.tmp`` sibling
+    exists — an in-flight save may still crash before its rename, leaving
+    that newest complete step as the only valid restore point.  ``.tmp``
+    directories themselves are never touched (the next ``save_checkpoint``
+    of that step reclaims them).
+    """
+    if keep < 1:
+        raise ValueError(f"keep must be >= 1 (got {keep}); pruning every "
+                         "checkpoint would leave nothing to restore")
     root = Path(root)
-    steps = sorted(
-        p for p in root.iterdir()
-        if p.is_dir() and p.name.startswith("step_") and not p.name.endswith(".tmp")
+    steps = _complete_steps(root)
+    if not steps:
+        return []
+    tmp_in_flight = any(
+        p.is_dir() and p.name.startswith("step_") and p.name.endswith(".tmp")
+        for p in root.iterdir()
     )
-    for p in steps[:-keep]:
-        shutil.rmtree(p)
+    protected = {steps[-1]} if tmp_in_flight else set()
+    deleted = []
+    for s in steps[:-keep]:
+        if s in protected:
+            continue
+        shutil.rmtree(root / f"step_{s:08d}")
+        deleted.append(s)
+    return deleted

@@ -55,6 +55,13 @@ from repro.core.session import (
     pad_session_state,
     tier_schedule,
 )
+from repro.core.durability import (
+    SessionCheckpointer,
+    restore_session_checkpoint,
+    save_session_checkpoint,
+    session_state_spec,
+    shard_session_state,
+)
 from repro.core.baselines import StaticOrderEvaluator
 
 __all__ = [
@@ -73,5 +80,7 @@ __all__ = [
     "SessionPipeline", "pad_session_state", "tier_schedule",
     "CapacityError", "SlotActiveError", "SlotsExhaustedError",
     "CostLedger", "init_ledger", "attribute_epoch", "migrate_ledger", "reset_slot",
+    "SessionCheckpointer", "save_session_checkpoint", "restore_session_checkpoint",
+    "session_state_spec", "shard_session_state",
     "StaticOrderEvaluator",
 ]

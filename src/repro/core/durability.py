@@ -1,0 +1,315 @@
+"""Durable sessions: checkpoint/restore for a live ``EngineSession``.
+
+PIQUE's pay-as-you-go contract is that enrichment spend — already billed to
+tenants through the ledger — is never wasted.  A preempted worker that loses
+its ``SessionState`` breaks that contract retroactively: the substrate's
+enrichment, the answer prefixes, and the per-tenant bills all evaporate
+while the invoices stand.  This module makes the full session state durable:
+
+* ``save_session_checkpoint`` snapshots the ENTIRE ``SessionState`` pytree —
+  capacity-padded substrate, shared+per-slot derived state, bank outputs,
+  tenant masks, the ``num_rows`` validity scalar, and every ``CostLedger``
+  accumulator — through ``checkpoint.store.save_checkpoint`` (atomic
+  tmp/rename), with host-side shadows (event cursor, RNG state, epoch
+  counter, tier index) riding in the same ``meta.json`` so driver state can
+  never be newer or older than the arrays it describes.
+* ``restore_session_checkpoint`` rebuilds a live state inside ANY compatible
+  session: the checkpoint is validated (format, predicate/function/slot
+  axes) and loaded at its SAVED capacity, then re-padded through
+  ``pad_session_state`` onto the smallest capacity tier of the restoring
+  session that holds it — replaying ``migrate_ledger`` so bills still
+  reconcile — and optionally re-placed onto the current device mesh via
+  ``shard_session_state``.  Restoring onto a different shard count or a
+  larger capacity tier is therefore a data operation, not a recompile: the
+  restored state is bitwise the saved state plus provably-inert padding.
+
+**The chunk-boundary-only snapshot invariant.**  Snapshots are taken ONLY
+between scan chunks — never mid-chunk — so every checkpoint sits at a
+superstep boundary: the saved carry is exactly the carry the fused
+``lax.scan`` would have handed to the next superstep.  Because the chunked
+scan is bitwise inert (the carry crosses chunk boundaries unchanged; see
+``EpochProgram.run_scan``), a process that restores a boundary snapshot and
+runs the REMAINING epochs retraces the uninterrupted run bit for bit:
+answers, ``cost_spent``, and per-tenant ledger bills are all bitwise
+identical, which is what the CI kill-and-resume gate asserts.  The
+restore deliberately does NOT call ``refresh`` — derived state is restored
+from the snapshot rather than recombined, because only the saved bits are
+guaranteed equal to the uninterrupted run's bits (an independent recompute
+could legally differ in ulps under a different XLA fusion).
+
+``SessionCheckpointer`` packages the cadence policy (save every ``every``-th
+chunk boundary, keep the newest ``keep`` checkpoints, force-save on
+preemption) plus save-cost accounting for the overhead benchmark; the
+serving integration lives in ``launch/serve.py`` (``--checkpoint-dir`` /
+``--checkpoint-every`` / ``--restore``) and ``SessionPipeline``.
+"""
+
+from __future__ import annotations
+
+import time
+from pathlib import Path
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import store
+from repro.core import state as state_lib
+from repro.core.errors import CapacityError
+from repro.core.executor import SessionDerived, SessionState
+from repro.core.ledger import ledger_spec, migrate_ledger
+from repro.core.session import EngineSession, pad_session_state
+from repro.core.state import SharedSubstrate
+
+# Bump when the SessionState leaf set changes shape-incompatibly; restore
+# refuses checkpoints from a different format instead of mis-zipping leaves.
+CHECKPOINT_FORMAT = 1
+
+
+def session_state_spec(session: EngineSession, capacity: int) -> SessionState:
+    """A ``SessionState`` of ``jax.ShapeDtypeStruct`` leaves for ``session``
+    at ``capacity`` rows — the abstract ``like`` tree a restore validates
+    stored shapes/dtypes against without allocating anything."""
+    p = session.num_predicates
+    f = session.num_functions
+    s = session.max_tenants
+    sds = jax.ShapeDtypeStruct
+    return SessionState(
+        substrate=SharedSubstrate(
+            func_probs=sds((capacity, p, f), jnp.float32),
+            exec_mask=sds((capacity, p, f), jnp.bool_),
+            cost_spent=sds((), jnp.float32),
+        ),
+        derived=SessionDerived(
+            pred_prob=sds((capacity, p), jnp.float32),
+            uncertainty=sds((capacity, p), jnp.float32),
+            joint_prob=sds((s, capacity), jnp.float32),
+            in_answer=sds((s, capacity), jnp.bool_),
+        ),
+        bank_outputs=sds((capacity, p, f), jnp.float32),
+        pred_mask=sds((s, p), jnp.bool_),
+        active=sds((s,), jnp.bool_),
+        num_rows=sds((), jnp.int32),
+        ledger=ledger_spec(s),
+    )
+
+
+def _session_extra(session: EngineSession, state: SessionState) -> dict:
+    """The session-level ``meta.json`` block: format + axis fingerprint +
+    the host shadows every driver needs before touching array data."""
+    num_rows = int(jax.device_get(state.num_rows))
+    active = [bool(x) for x in jax.device_get(state.active)]
+    capacity = state.capacity
+    return {
+        "format": CHECKPOINT_FORMAT,
+        "capacity": capacity,
+        "num_predicates": session.num_predicates,
+        "num_functions": session.num_functions,
+        "num_slots": session.max_tenants,
+        "num_rows": num_rows,
+        "active": active,
+        "tier_index": session.tier_capacities.index(capacity)
+        if capacity in session.tier_capacities
+        else -1,
+    }
+
+
+def save_session_checkpoint(
+    root: str | Path,
+    step: int,
+    session: EngineSession,
+    state: SessionState,
+    host_meta: Optional[dict] = None,
+) -> Path:
+    """Snapshot a live session state at a superstep boundary.
+
+    The caller guarantees the boundary (the chunk-boundary-only invariant —
+    ``run_scan``'s ``on_chunk`` hook and ``SessionPipeline.checkpoint`` are
+    the two integration points that do); this function blocks on the carry,
+    so an in-flight chunk drains here rather than being torn mid-superstep.
+    ``host_meta`` (JSON-able driver shadows: event cursor, RNG state, epoch
+    counter) lands under ``extra["host"]`` in the same atomic rename.
+    """
+    state = jax.block_until_ready(state)
+    extra = _session_extra(session, state)
+    if host_meta is not None:
+        extra["host"] = host_meta
+    return store.save_checkpoint(root, step, state, extra=extra)
+
+
+def _target_capacity(session: EngineSession, saved_capacity: int) -> int:
+    """Smallest tier of the restoring session holding the saved rows.
+
+    Padding can only grow (padded rows are inert; occupied rows cannot be
+    dropped), so a session whose last tier is smaller than the saved
+    capacity cannot adopt the checkpoint.
+    """
+    for t in session.tier_capacities:
+        if t >= saved_capacity:
+            return t
+    raise CapacityError(
+        f"checkpoint capacity {saved_capacity} exceeds the restoring "
+        f"session's last tier {session.max_capacity} (tiers "
+        f"{session.tier_capacities}); open the session with max_capacity >= "
+        "the saved capacity",
+        used=saved_capacity,
+        capacity=session.max_capacity,
+        requested=saved_capacity - session.max_capacity,
+    )
+
+
+def shard_session_state(state: SessionState, mesh) -> SessionState:
+    """Place a (restored) session state onto a device mesh.
+
+    Row-axis leaves shard over the mesh's object axes — the substrate, bank
+    outputs, and shared derived maps on axis 0, the per-slot ``[S, C]``
+    leaves on axis 1 — while slot-axis leaves (``pred_mask``, ``active``),
+    scalars, and the ledger replicate EXPLICITLY: ``shard_over_objects``'s
+    axis-0 heuristic would happily split ``pred_mask`` over tenant slots,
+    which is never the serving layout.  Save-time placement is irrelevant
+    (``save_checkpoint`` device_gets to host); this is how a checkpoint
+    written on one topology lands on another.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    replicate = NamedSharding(mesh, PartitionSpec())
+
+    def rep(tree):
+        return jax.tree.map(lambda x: jax.device_put(x, replicate), tree)
+
+    return SessionState(
+        substrate=state_lib.shard_substrate(state.substrate, mesh),
+        derived=SessionDerived(
+            pred_prob=state_lib.shard_over_objects(state.derived.pred_prob, mesh),
+            uncertainty=state_lib.shard_over_objects(
+                state.derived.uncertainty, mesh
+            ),
+            joint_prob=state_lib.shard_over_objects(
+                state.derived.joint_prob, mesh, object_axis=1
+            ),
+            in_answer=state_lib.shard_over_objects(
+                state.derived.in_answer, mesh, object_axis=1
+            ),
+        ),
+        bank_outputs=state_lib.shard_over_objects(state.bank_outputs, mesh),
+        pred_mask=rep(state.pred_mask),
+        active=rep(state.active),
+        num_rows=rep(state.num_rows),
+        ledger=rep(state.ledger),
+    )
+
+
+def restore_session_checkpoint(
+    session: EngineSession,
+    root: str | Path,
+    step: Optional[int] = None,
+    mesh=None,
+) -> tuple[SessionState, int, dict]:
+    """Rebuild a live state from a checkpoint inside ``session``.
+
+    -> (state, step, extra): the restored carry, the step it came from, and
+    the ``meta.json`` extra block (``extra["host"]`` holds the driver
+    shadows ``save_session_checkpoint`` was given).
+
+    The checkpoint loads at its SAVED capacity (strict shape/dtype match —
+    the bitwise-resume foundation), then pads onto the restoring session's
+    smallest holding tier via ``pad_session_state`` (``migrate_ledger``
+    replayed inside; padded rows provably inert), so the restoring session
+    may differ from the saving one in shard count AND capacity tier.  NO
+    ``refresh`` happens here: derived state is the saved bits, which is what
+    makes resume bitwise rather than merely close (see module docstring).
+    """
+    meta = store.load_meta(root, step)
+    extra = meta.get("extra", {})
+    fmt = extra.get("format")
+    if fmt != CHECKPOINT_FORMAT:
+        raise ValueError(
+            f"checkpoint format {fmt!r} != supported {CHECKPOINT_FORMAT} "
+            "(not a session checkpoint, or from an incompatible version)"
+        )
+    for field, have in (
+        ("num_predicates", session.num_predicates),
+        ("num_functions", session.num_functions),
+        ("num_slots", session.max_tenants),
+    ):
+        if extra[field] != have:
+            raise ValueError(
+                f"checkpoint {field}={extra[field]} != session {have}; a "
+                "session can only adopt checkpoints over its own schema"
+            )
+    saved_capacity = int(extra["capacity"])
+    target = _target_capacity(session, saved_capacity)
+    like = session_state_spec(session, saved_capacity)
+    state, step = store.restore_checkpoint(root, meta["step"], like)
+    if target != saved_capacity:
+        # re-pad onto this session's tier; migrate_ledger replays inside
+        state = pad_session_state(state, target, session.config.prior)
+    else:
+        # same-tier restore still routes the ledger through the audited hop
+        migrate_ledger(state.ledger, session.max_tenants)
+    if mesh is not None:
+        state = shard_session_state(state, mesh)
+    return state, step, extra
+
+
+class SessionCheckpointer:
+    """Cadence + retention policy around ``save_session_checkpoint``.
+
+    ``maybe_save`` is called at every scan-chunk boundary (the ONLY legal
+    snapshot points); it counts boundaries and saves on every ``every``-th
+    one, or immediately when ``force=True`` (the preemption drain path).
+    After each save the newest ``keep`` checkpoints are retained via
+    ``store.prune_old`` (which never deletes the latest complete step while
+    a ``.tmp`` sibling exists).  Save cost is accounted (``saves``,
+    ``save_seconds``, ``bytes_written``) so ``benchmarks/restore.py`` can
+    report checkpoint overhead at a given cadence.
+    """
+
+    def __init__(
+        self,
+        session: EngineSession,
+        root: str | Path,
+        every: int = 1,
+        keep: int = 3,
+    ):
+        if every < 1:
+            raise ValueError(f"every must be >= 1, got {every}")
+        self.session = session
+        self.root = Path(root)
+        self.every = int(every)
+        self.keep = int(keep)
+        self.saves = 0
+        self.save_seconds = 0.0
+        self.bytes_written = 0
+        self.last_step: Optional[int] = None
+        self._boundaries = 0  # chunk boundaries seen since the last save
+
+    def save(
+        self, state: SessionState, step: int, host_meta: Optional[dict] = None
+    ) -> Path:
+        t0 = time.perf_counter()
+        path = save_session_checkpoint(
+            self.root, step, self.session, state, host_meta=host_meta
+        )
+        self.save_seconds += time.perf_counter() - t0
+        self.bytes_written += sum(
+            f.stat().st_size for f in path.iterdir() if f.is_file()
+        )
+        self.saves += 1
+        self.last_step = step
+        self._boundaries = 0
+        store.prune_old(self.root, keep=self.keep)
+        return path
+
+    def maybe_save(
+        self,
+        state: SessionState,
+        step: int,
+        host_meta: Optional[dict] = None,
+        force: bool = False,
+    ) -> Optional[Path]:
+        """Called at a chunk boundary; saves on cadence (or ``force``)."""
+        self._boundaries += 1
+        if force or self._boundaries >= self.every:
+            return self.save(state, step, host_meta=host_meta)
+        return None

@@ -544,6 +544,7 @@ class EpochProgram:
         collect_masks: bool = False,
         stop_when_exhausted: bool = True,
         donate: bool = False,
+        on_chunk=None,
     ):
         """Run ``num_epochs`` supersteps as chunked fused-scan dispatches.
 
@@ -556,22 +557,35 @@ class EpochProgram:
         buffer of ``state``, e.g. a facade that just created it) lets XLA
         reuse the input buffers in place; each chunk's input is then either
         the donated original or a previous chunk's output, both driver-owned.
+
+        ``on_chunk(carry, epochs_dispatched)`` fires after each chunk
+        dispatch with the in-flight carry and the cumulative epoch count of
+        this run; returning truthy stops dispatching FURTHER chunks (the
+        already-dispatched ones complete and appear in the history).  Chunk
+        boundaries are superstep boundaries, so this is the one legal hook
+        for durability snapshots and cooperative preemption
+        (``core.durability``) — the carry handed to the callback is exactly
+        what the next superstep would consume.
         """
         if chunk_size is None:
             chunk_size = self.config.chunk_size
         t0 = time.perf_counter()
         chunks = []
+        dispatched = 0
         for length in self.chunk_lengths(num_epochs, chunk_size):
             state, stats = self.dispatch_scan(
                 state, length, collect_masks, donate=donate
             )
             chunks.append((length, stats))
+            dispatched += length
+            if on_chunk is not None and on_chunk(state, dispatched):
+                break
         hosts = [(length, jax.device_get(s)) for length, s in chunks]
         state = jax.block_until_ready(state)
         wall = time.perf_counter() - t0
         history = self.materialize_history(
             hosts,
-            wall_per_epoch=wall / max(num_epochs, 1),
+            wall_per_epoch=wall / max(dispatched, 1),
             collect_masks=collect_masks,
             stop_when_exhausted=stop_when_exhausted,
         )

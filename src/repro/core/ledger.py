@@ -123,6 +123,21 @@ def init_ledger(num_slots: int, dtype=jnp.float32) -> CostLedger:
     )
 
 
+def ledger_spec(num_slots: int, dtype=jnp.float32) -> CostLedger:
+    """``CostLedger`` of ``jax.ShapeDtypeStruct`` leaves — the abstract
+    restore target ``checkpoint.store.restore_checkpoint`` validates stored
+    shapes/dtypes against (``core.durability`` builds the full
+    ``SessionState`` spec from this), allocating nothing."""
+    s = jax.ShapeDtypeStruct
+    return CostLedger(
+        attributed=s((num_slots,), dtype),
+        triples=s((num_slots,), dtype),
+        wanted=s((num_slots,), jnp.int32),
+        unattributed=s((), dtype),
+        archived=s((), dtype),
+    )
+
+
 def reset_slot(ledger: CostLedger, slot: int) -> CostLedger:
     """Zero a tenant slot's accumulators, archiving its outstanding bill.
 

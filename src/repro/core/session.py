@@ -508,6 +508,7 @@ class EngineSession:
         collect_masks: bool = False,
         stop_when_exhausted: bool = True,
         chunk_size: Optional[int] = None,
+        on_chunk=None,
     ) -> tuple[SessionState, list]:
         """Run ``num_epochs`` supersteps as chunked fused-scan dispatches.
 
@@ -516,8 +517,9 @@ class EngineSession:
         data, and an ingest-driven tier migration switches to the target
         tier's own compiled program (at most ``retrace_bound`` per scan
         length).  With zero active tenants the session idles.  See
-        ``EpochProgram.run_scan`` for chunking semantics and
-        ``SessionPipeline`` for overlapping events with in-flight chunks.
+        ``EpochProgram.run_scan`` for chunking semantics (including the
+        ``on_chunk`` superstep-boundary hook durability and preemption use)
+        and ``SessionPipeline`` for overlapping events with in-flight chunks.
         """
         return self.program.run_scan(
             state,
@@ -525,6 +527,7 @@ class EngineSession:
             chunk_size=chunk_size,
             collect_masks=collect_masks,
             stop_when_exhausted=stop_when_exhausted,
+            on_chunk=on_chunk,
         )
 
     def run_loop(
@@ -547,11 +550,21 @@ class EngineSession:
         )
 
     def pipeline(
-        self, state: SessionState, chunk_size: Optional[int] = None
+        self,
+        state: SessionState,
+        chunk_size: Optional[int] = None,
+        preemption=None,
+        heartbeat=None,
     ) -> "SessionPipeline":
         """Open an async event pipeline over this session (one sync here —
-        the shadow snapshot — then none until ``finish()``)."""
-        return SessionPipeline(self, state, chunk_size=chunk_size)
+        the shadow snapshot — then none until ``finish()``).  ``preemption``
+        (a ``runtime.fault_tolerance.PreemptionHandler``) is polled at chunk
+        boundaries so SIGTERM stops dispatch cooperatively; ``heartbeat``
+        beats worker 0 per dispatched chunk."""
+        return SessionPipeline(
+            self, state, chunk_size=chunk_size,
+            preemption=preemption, heartbeat=heartbeat,
+        )
 
 
 class SessionPipeline:
@@ -584,12 +597,17 @@ class SessionPipeline:
         session: EngineSession,
         state: SessionState,
         chunk_size: Optional[int] = None,
+        preemption=None,
+        heartbeat=None,
     ):
         self.session = session
         self.state = state
         self.chunk_size = (
             chunk_size if chunk_size is not None else session.config.chunk_size
         )
+        self.preemption = preemption  # polled at chunk boundaries
+        self.heartbeat = heartbeat  # beaten per dispatched chunk
+        self.preempted = False  # a chunk-boundary poll saw should_stop
         # the pipeline's ONE upfront sync: snapshot the host shadows
         self.num_rows = int(jax.device_get(state.num_rows))
         self.active = np.asarray(jax.device_get(state.active)).copy()
@@ -600,16 +618,39 @@ class SessionPipeline:
         self._t0 = time.perf_counter()
 
     def run(self, num_epochs: int, collect_masks: bool = False) -> None:
-        """Dispatch ``num_epochs`` supersteps as chunked scans (non-blocking)."""
+        """Dispatch ``num_epochs`` supersteps as chunked scans (non-blocking).
+
+        With a ``preemption`` handler attached, each chunk boundary polls
+        ``should_stop``: on preemption no FURTHER chunks are dispatched
+        (``preempted`` latches, ``epochs_dispatched`` counts only what was
+        actually dispatched) — in-flight chunks drain normally at
+        ``finish()``/``checkpoint()``, so the stop is always at a superstep
+        boundary.
+        """
         prog = self.session.program
         base = 0
         for length in prog.chunk_lengths(num_epochs, self.chunk_size):
+            if self.preemption is not None and self.preemption.should_stop:
+                self.preempted = True
+                break
             self.state, stats = prog.dispatch_scan(
                 self.state, length, collect_masks
             )
             self._chunks.append((base, length, stats, collect_masks))
             base += length
-        self.epochs_dispatched += num_epochs
+            if self.heartbeat is not None:
+                self.heartbeat.beat(0)
+        self.epochs_dispatched += base
+
+    def checkpoint(self, checkpointer, step: int, host_meta=None, force=True):
+        """Drain in-flight chunks and snapshot the carry (superstep boundary
+        by construction — dispatches only happen whole-chunk).  The pipeline
+        keeps running afterwards: stats futures stay queued for ``finish()``,
+        host shadows are untouched.  Returns the checkpoint path (or None if
+        the cadence said skip and ``force`` is False)."""
+        return checkpointer.maybe_save(
+            self.state, step, host_meta=host_meta, force=force
+        )
 
     def ingest(self, outputs: jax.Array) -> None:
         """Stage an ingest against the in-flight carry (no device sync;

@@ -25,6 +25,8 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import hashlib
+import json
 import time
 from typing import Optional
 
@@ -40,14 +42,20 @@ from repro.core import (
     OperatorConfig,
     Predicate,
     ProgressiveQueryOperator,
+    SessionCheckpointer,
     build_query_set,
     conjunction,
     learn_decision_table,
+    restore_session_checkpoint,
 )
 from repro.core.combine import auc_score, fit_combine_weights
 from repro.data.synthetic import make_corpus, split_corpus, truth_answer_mask
 from repro.enrich.cascade import ModelCascadeBank, build_cascade, train_level
-from repro.runtime.fault_tolerance import PreemptionHandler, StragglerMonitor
+from repro.runtime.fault_tolerance import (
+    Heartbeat,
+    PreemptionHandler,
+    StragglerMonitor,
+)
 
 
 @dataclasses.dataclass
@@ -408,6 +416,20 @@ class SessionServeReport:
     chunk_size: Optional[int] = None
     num_events: int = 0
     events_per_sec: float = 0.0
+    # ---- durability (checkpoint/restore/preemption) ----
+    preempted: bool = False  # the trace stopped at a preemption drain
+    epochs_total: int = 0  # cumulative epochs INCLUDING pre-restore progress
+    events_done: int = 0  # trace events fully completed (cumulative)
+    restored_step: Optional[int] = None  # checkpoint step this run resumed from
+    cost_hex: str = ""  # float.hex of cost_spent (bitwise-diffable in CI)
+    bills_hex: list = dataclasses.field(default_factory=list)  # [S] invoice hex
+    answer_digest: str = ""  # sha256 over in_answer[:, :num_rows] (tier-free)
+    scan_lengths: list = dataclasses.field(default_factory=list)  # distinct dispatched
+    checkpoint_saves: int = 0
+    checkpoint_seconds: float = 0.0
+
+
+HOST_META_FORMAT = 1  # driver-shadow block version inside extra["host"]
 
 
 def serve_session_trace(
@@ -420,6 +442,9 @@ def serve_session_trace(
     preemption: Optional[PreemptionHandler] = None,
     overlap: bool = False,
     chunk_size: Optional[int] = None,
+    checkpointer: Optional[SessionCheckpointer] = None,
+    resume: Optional[dict] = None,
+    heartbeat: Optional[Heartbeat] = None,
 ) -> SessionServeReport:
     """Drive a scripted arrival trace through one long-lived session.
 
@@ -434,23 +459,135 @@ def serve_session_trace(
     behind device compute.  ``chunk_size`` sets the scan dispatch
     granularity for both modes (lockstep still blocks at every run/event
     boundary, which is exactly the overhead ``overlap`` removes).
+
+    **Durability.**  With a ``checkpointer``, snapshots land ONLY at scan-
+    chunk boundaries (superstep boundaries — the ``core.durability``
+    invariant): lockstep runs snapshot on the checkpointer's cadence via the
+    ``on_chunk`` hook; overlap mode snapshots at event boundaries (a cadence
+    snapshot there would force the drain the pipeline exists to avoid).  A
+    ``preemption`` request stops dispatch at the next boundary, force-saves,
+    and returns a ``preempted=True`` report — the SIGTERM -> drain ->
+    checkpoint -> exit-0 path.  A clean completion force-saves a final
+    checkpoint (event cursor past the end).  ``resume`` takes the
+    ``extra["host"]`` block of a checkpoint (see ``main`` ``--restore``):
+    the trace re-enters at the saved event cursor, skipping already-run
+    epochs of a partially-complete run event, with the ingest-pool cursor
+    and the admit RNG's bit-generator state restored — so the resumed
+    process replays the uninterrupted run bitwise (``cost_hex``,
+    ``bills_hex``, ``answer_digest`` in the report are the CI diff surface).
     """
     rng = np.random.default_rng(seed)
     pool_off = 0
+    start_event = 0
+    start_into = 0  # epochs already run of the resumed-into run event
+    epochs_total = 0  # cumulative across restarts (the checkpoint step)
+    restored_step = None
+    if resume is not None:
+        if resume.get("format") != HOST_META_FORMAT:
+            raise ValueError(
+                f"resume host-meta format {resume.get('format')!r} != "
+                f"{HOST_META_FORMAT}"
+            )
+        rng.bit_generator.state = resume["rng_state"]
+        pool_off = int(resume["pool_offset"])
+        start_event = int(resume["event_cursor"])
+        start_into = int(resume["epochs_into_event"])
+        epochs_total = int(resume["epochs_total"])
+        restored_step = epochs_total
+
+    def host_meta(cursor: int, into: int, total: int) -> dict:
+        # everything the restarted driver needs BEFORE touching array data;
+        # rng state must be captured at snapshot time (admits mutate it)
+        return dict(
+            format=HOST_META_FORMAT,
+            event_cursor=cursor,
+            epochs_into_event=into,
+            epochs_total=total,
+            pool_offset=pool_off,
+            rng_state=rng.bit_generator.state,
+        )
+
     history = []
-    pipe = session.pipeline(state, chunk_size=chunk_size) if overlap else None
+    scan_lengths: set = set()
+    pipe = (
+        session.pipeline(
+            state, chunk_size=chunk_size,
+            preemption=preemption, heartbeat=heartbeat,
+        )
+        if overlap
+        else None
+    )
+    preempted = False
+    events_done = start_event
     t0 = time.perf_counter()
-    for kind, arg in events:
+    for idx in range(start_event, len(events)):
+        kind, arg = events[idx]
         if preemption is not None and preemption.should_stop:
+            preempted = True
             break
+        into0 = start_into if idx == start_event else 0
         if kind == "run":
+            run_epochs = arg - into0
+            if run_epochs <= 0:
+                events_done = idx + 1
+                continue
             if pipe is not None:
-                pipe.run(arg)
+                n_chunks = len(pipe._chunks)
+                pipe.run(run_epochs)
+                scan_lengths.update(
+                    length for _, length, _, _ in pipe._chunks[n_chunks:]
+                )
+                this_run = sum(
+                    length for _, length, _, _ in pipe._chunks[n_chunks:]
+                )
+                epochs_total += this_run
+                if pipe.preempted:
+                    preempted = True
+                    if checkpointer is not None:
+                        done = into0 + this_run
+                        cursor, into = (
+                            (idx + 1, 0) if done >= arg else (idx, done)
+                        )
+                        pipe.checkpoint(
+                            checkpointer, epochs_total,
+                            host_meta=host_meta(cursor, into, epochs_total),
+                        )
+                    break
             else:
+                base_total = epochs_total
+                stop_box = {"stop": False}
+                prev_done = [0]
+
+                def on_chunk(carry, done, _idx=idx, _arg=arg, _into0=into0,
+                             _base=base_total, _stop=stop_box, _prev=prev_done):
+                    scan_lengths.add(done - _prev[0])
+                    _prev[0] = done
+                    if heartbeat is not None:
+                        heartbeat.beat(0)
+                    stop = preemption is not None and preemption.should_stop
+                    if checkpointer is not None:
+                        into = _into0 + done
+                        cursor, rem = (
+                            (_idx + 1, 0) if into >= _arg else (_idx, into)
+                        )
+                        checkpointer.maybe_save(
+                            carry, _base + done,
+                            host_meta=host_meta(cursor, rem, _base + done),
+                            force=stop,
+                        )
+                    if stop:
+                        _stop["stop"] = True
+                    return stop
+
                 state, h = session.run(
-                    state, arg, stop_when_exhausted=False, chunk_size=chunk_size
+                    state, run_epochs, stop_when_exhausted=False,
+                    chunk_size=chunk_size, on_chunk=on_chunk,
                 )
                 history.extend(h)
+                epochs_total = base_total + prev_done[0]
+                if stop_box["stop"]:
+                    preempted = True
+                    break
         elif kind == "admit":
             if preds is None:
                 raise ValueError("admit events need the schema predicates")
@@ -478,17 +615,45 @@ def serve_session_trace(
                 pipe.retire(arg)
             else:
                 state = session.retire(state, arg)
+        events_done = idx + 1
+        if pipe is not None and checkpointer is not None:
+            # overlap cadence: event boundaries (drains the in-flight chunks)
+            pipe.checkpoint(
+                checkpointer, epochs_total,
+                host_meta=host_meta(idx + 1, 0, epochs_total),
+                force=False,
+            )
     if pipe is not None:
         state, history = pipe.finish()  # the pipeline's single sync point
+    if preempted and checkpointer is not None:
+        # preemption seen BETWEEN events (the in-run paths force-saved
+        # already, leaving last_step == epochs_total): snapshot at the event
+        # cursor so the restart replays any later churn events untouched
+        if checkpointer.last_step != epochs_total:
+            checkpointer.save(
+                state, epochs_total,
+                host_meta=host_meta(events_done, 0, epochs_total),
+            )
+    if not preempted and checkpointer is not None:
+        # clean completion: a final restore point past the last event
+        checkpointer.save(
+            state, epochs_total,
+            host_meta=host_meta(len(events), 0, epochs_total),
+        )
     wall = time.perf_counter() - t0
     last = history[-1] if history else None
+    num_rows = int(state.num_rows)
+    answers = np.ascontiguousarray(
+        np.asarray(state.derived.in_answer)[:, :num_rows]
+    )
+    bills = state.ledger.bills(state.cost_spent)
     return SessionServeReport(
         epochs=len(history),
         events=[dict(kind=k, arg=a) for k, a in events],
         cost_spent=float(state.cost_spent),
         mean_expected_f=last.mean_expected_f if last else 0.0,
         active_tenants=int(np.asarray(state.active).sum()),
-        num_rows=int(state.num_rows),
+        num_rows=num_rows,
         attributed=[float(x) for x in np.asarray(state.ledger.attributed)],
         unattributed=float(state.ledger.unattributed),
         superstep_traces=session.superstep_traces,
@@ -502,6 +667,18 @@ def serve_session_trace(
         chunk_size=chunk_size,
         num_events=len(events),
         events_per_sec=len(events) / max(wall, 1e-9),
+        preempted=preempted,
+        epochs_total=epochs_total,
+        events_done=events_done,
+        restored_step=restored_step,
+        cost_hex=float(state.cost_spent).hex(),
+        bills_hex=[float(b).hex() for b in bills],
+        answer_digest=hashlib.sha256(answers.tobytes()).hexdigest(),
+        scan_lengths=sorted(scan_lengths),
+        checkpoint_saves=0 if checkpointer is None else checkpointer.saves,
+        checkpoint_seconds=(
+            0.0 if checkpointer is None else checkpointer.save_seconds
+        ),
     )
 
 
@@ -542,6 +719,27 @@ def main(argv=None):
                     help="apply trace events against in-flight scan chunks "
                          "(async pipeline: no device syncs until the final "
                          "drain) instead of lockstep between runs")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="durable sessions: snapshot the full session state "
+                         "here at scan-chunk boundaries (atomic step_N dirs); "
+                         "SIGTERM drains in-flight chunks, checkpoints, and "
+                         "exits 0")
+    ap.add_argument("--checkpoint-every", type=int, default=4,
+                    help="snapshot cadence in scan-chunk boundaries "
+                         "(lockstep mode; overlap snapshots at event "
+                         "boundaries)")
+    ap.add_argument("--checkpoint-keep", type=int, default=3,
+                    help="checkpoints retained after each save")
+    ap.add_argument("--restore", action="store_true",
+                    help="resume the trace from the latest checkpoint in "
+                         "--checkpoint-dir (bitwise-identical to an "
+                         "uninterrupted run; works onto a different "
+                         "--plan-shards or capacity tier)")
+    ap.add_argument("--restore-step", type=int, default=None,
+                    help="restore this checkpoint step instead of the latest")
+    ap.add_argument("--report", default=None,
+                    help="write the session serve report as JSON (the CI "
+                         "kill-and-resume job's bitwise diff surface)")
     args = ap.parse_args(argv)
 
     handler = PreemptionHandler().install()
@@ -552,6 +750,31 @@ def main(argv=None):
             plan_shards=args.plan_shards, backend=args.backend,
             max_capacity=args.max_capacity,
         )
+        checkpointer = None
+        if args.checkpoint_dir:
+            checkpointer = SessionCheckpointer(
+                session, args.checkpoint_dir,
+                every=args.checkpoint_every, keep=args.checkpoint_keep,
+            )
+        resume = None
+        if args.restore:
+            if not args.checkpoint_dir:
+                ap.error("--restore requires --checkpoint-dir")
+            # build_session_server is deterministic given (args, seed), so
+            # the restored state drops into an identically-schema'd session;
+            # the restore re-pads onto THIS session's tiers and shard count
+            state, step, extra = restore_session_checkpoint(
+                session, args.checkpoint_dir, step=args.restore_step
+            )
+            resume = extra.get("host")
+            if resume is None:
+                ap.error("checkpoint has no serve host metadata to resume")
+            print(
+                f"[serve] restored step {step} (event cursor "
+                f"{resume['event_cursor']}, {resume['epochs_total']} epochs "
+                f"done, {extra['num_rows']} rows) onto tier "
+                f"{state.capacity} x {args.plan_shards} shard(s)"
+            )
         e = max(args.epochs // 4, 1)
         # the default trace's big ingest forces tier growth when
         # --max-capacity extends the pool past the base capacity
@@ -564,13 +787,15 @@ def main(argv=None):
             session, state, events, pool=pool, preds=preds,
             preemption=handler, overlap=args.overlap,
             chunk_size=args.chunk_size,
+            checkpointer=checkpointer, resume=resume,
         )
         eps = report.epochs / max(report.wall_s, 1e-9)
         bills = {i: f"{c:.3f}" for i, c in enumerate(report.attributed) if c > 0}
         mode = "overlap" if args.overlap else "lockstep"
         print(
             f"[serve] session trace {spec!r} ({mode}, chunk="
-            f"{args.chunk_size}): {report.epochs} epochs, "
+            f"{args.chunk_size}): {report.epochs} epochs "
+            f"({report.epochs_total} total), "
             f"{report.num_rows} rows (tier {report.capacity} of "
             f"{report.max_capacity} max, {report.growths} growths), "
             f"{report.active_tenants} active tenants, "
@@ -580,19 +805,31 @@ def main(argv=None):
             f"superstep traces={report.superstep_traces}, "
             f"wall={report.wall_s:.1f}s ({eps:.2f} epochs/s, "
             f"{report.events_per_sec:.2f} events/s)"
+            + (f", {report.checkpoint_saves} checkpoints"
+               if checkpointer is not None else "")
+            + (" [PREEMPTED: drained + checkpointed]"
+               if report.preempted else "")
         )
-        # each DISTINCT scan length (with chunking: chunk length + tail
-        # remainders, not run length) legitimately compiles its own scan
+        if args.report:
+            payload = {
+                k: getattr(report, k)
+                for k in (
+                    "epochs", "epochs_total", "events_done", "num_events",
+                    "cost_spent", "cost_hex", "bills_hex", "answer_digest",
+                    "attributed", "unattributed", "num_rows", "capacity",
+                    "growths", "superstep_traces", "retrace_bound",
+                    "preempted", "restored_step", "scan_lengths",
+                    "checkpoint_saves", "active_tenants", "mean_expected_f",
+                )
+            }
+            with open(args.report, "w") as fh:
+                json.dump(payload, fh, indent=1, sort_keys=True)
+        # each DISTINCT dispatched scan length (with chunking: chunk length +
+        # tail remainders, not run length) legitimately compiles its own scan
         # program once per capacity tier the trace actually VISITED
         # (growths + 1); anything beyond means a churn event re-traced the
         # superstep
-        from repro.core import EpochProgram
-
-        lengths = set()
-        for k, a in events:
-            if k == "run":
-                lengths.update(EpochProgram.chunk_lengths(a, args.chunk_size))
-        expected = max(len(lengths), 1) * (report.growths + 1)
+        expected = max(len(report.scan_lengths), 1) * (report.growths + 1)
         if report.superstep_traces > expected:
             print(
                 f"[serve] WARNING: superstep re-traced under churn "

@@ -17,18 +17,42 @@ from typing import Callable, Optional
 
 @dataclasses.dataclass
 class PreemptionHandler:
-    """SIGTERM -> finish current step -> checkpoint -> exit cleanly."""
+    """SIGTERM -> finish current step -> checkpoint -> exit cleanly.
 
+    The cooperative-preemption contract the session serving loop implements
+    (``core.durability`` + ``launch/serve.py``): the signal handler only sets
+    a flag; the driver polls ``should_stop`` at scan-chunk boundaries, drains
+    in-flight chunks, checkpoints at the superstep boundary it landed on,
+    and exits 0.  ``request()`` sets the same flag without a signal, so tests
+    exercise the full drain/checkpoint path deterministically.
+    """
+
+    signals: tuple = (signal.SIGTERM,)
     _requested: bool = False
     _installed: bool = False
 
+    def __post_init__(self):
+        self._previous: dict = {}
+
     def install(self):
         if not self._installed:
-            signal.signal(signal.SIGTERM, self._on_sigterm)
+            for sig in self.signals:
+                self._previous[sig] = signal.signal(sig, self._on_signal)
             self._installed = True
         return self
 
-    def _on_sigterm(self, signum, frame):
+    def uninstall(self):
+        """Restore the handlers ``install`` displaced (idempotent) — so a
+        scoped serving loop doesn't leave its flag-setter wired into an
+        embedding process's signal table after it returns."""
+        if self._installed:
+            for sig, prev in self._previous.items():
+                signal.signal(sig, prev if prev is not None else signal.SIG_DFL)
+            self._previous = {}
+            self._installed = False
+        return self
+
+    def _on_signal(self, signum, frame):
         self._requested = True
 
     def request(self):  # test hook / cooperative preemption

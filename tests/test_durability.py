@@ -1,0 +1,404 @@
+"""Durable preemption-safe sessions (ISSUE 6).
+
+The bars: checkpoint round-trips are bitwise for the full SessionState leaf
+zoo (bf16 views, uint32 want-bitmask words, 0-d scalars, the empty tree);
+restore works onto a DIFFERENT topology — (save shards -> restore shards) in
+{1->2, 2->1} and onto a larger capacity tier — with answers, ``cost_spent``,
+and per-tenant ledger bills bitwise identical to an uninterrupted run and
+``superstep_traces`` within ``retrace_bound``; preemption and heartbeats are
+exercised deterministically (``request()`` / simulated clocks — no real
+signals, no sleeps); and ``prune_old`` can never delete the last restore
+point.
+"""
+
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.core import (
+    CapacityError,
+    EngineSession,
+    MultiQueryConfig,
+    Predicate,
+    SessionCheckpointer,
+    conjunction,
+    fallback_decision_table,
+    restore_session_checkpoint,
+    save_session_checkpoint,
+    session_state_spec,
+)
+from repro.core.combine import default_combine_params
+from repro.data.synthetic import make_corpus
+from repro.launch.serve import serve_session_trace
+from repro.runtime.fault_tolerance import Heartbeat, PreemptionHandler
+
+P_GLOBAL, F = 4, 4
+
+
+def _world(seed=0, num_objects=256):
+    preds = [Predicate(i, 1) for i in range(P_GLOBAL)]
+    corpus = make_corpus(
+        jax.random.PRNGKey(seed), num_objects, [p.tag_type for p in preds],
+        [p.tag for p in preds], selectivity=[0.3, 0.4, 0.25, 0.35],
+    )
+    combine = default_combine_params(corpus.aucs)
+    table = fallback_decision_table(P_GLOBAL, F, corpus.aucs)
+    return preds, corpus, combine, table
+
+
+def _session(preds, corpus, combine, table, capacity, max_tenants=3,
+             max_capacity=None, num_shards=1):
+    cfg = MultiQueryConfig(plan_size=32, num_shards=num_shards)
+    return EngineSession(
+        [p.positive() for p in preds], table, combine, corpus.costs,
+        capacity=capacity, max_tenants=max_tenants, config=cfg,
+        max_capacity=max_capacity,
+    )
+
+
+def _assert_state_bitwise(a, b, cap=None):
+    """Bitwise equality of the durable outcome: spend, answers, ledger."""
+    assert float(a.cost_spent) == float(b.cost_spent)
+    ma, mb = np.asarray(a.derived.in_answer), np.asarray(b.derived.in_answer)
+    w = cap if cap is not None else min(ma.shape[1], mb.shape[1])
+    np.testing.assert_array_equal(ma[:, :w], mb[:, :w])
+    assert not ma[:, w:].any() and not mb[:, w:].any()
+    for leaf in ("attributed", "triples", "wanted", "unattributed", "archived"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.ledger, leaf)),
+            np.asarray(getattr(b.ledger, leaf)),
+        )
+
+
+# --------------------------------------------------------- store round-trips --
+
+
+def _zoo():
+    """Every dtype/shape class SessionState exercises, plus edge shapes."""
+    return {
+        "f32": jnp.linspace(0, 1, 12, dtype=jnp.float32).reshape(3, 4),
+        "bf16": jnp.linspace(-2, 2, 8, dtype=jnp.bfloat16).reshape(2, 4),
+        "bf16_scalar": jnp.asarray(1.5, jnp.bfloat16),
+        "want_words": jnp.asarray([0, 1, 0xFFFFFFFF, 7], jnp.uint32),
+        "num_rows": jnp.asarray(37, jnp.int32),
+        "cost": jnp.asarray(0.017, jnp.float32),
+        "mask": jnp.asarray([[True, False], [False, True]]),
+    }
+
+
+def test_roundtrip_leaf_zoo_bitwise(tmp_path):
+    tree = _zoo()
+    store.save_checkpoint(tmp_path, 3, tree)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    out, step = store.restore_checkpoint(tmp_path, None, like)
+    assert step == 3
+    for k in tree:
+        assert out[k].dtype == tree[k].dtype and out[k].shape == tree[k].shape
+        # bitwise, not approx: compare the raw byte views
+        a = np.ascontiguousarray(np.asarray(tree[k]))
+        b = np.ascontiguousarray(np.asarray(out[k]))
+        assert a.tobytes() == b.tobytes(), k
+
+
+def test_empty_tree_roundtrips(tmp_path):
+    store.save_checkpoint(tmp_path, 0, {})
+    out, step = store.restore_checkpoint(tmp_path, 0, {})
+    assert out == {} and step == 0
+
+
+def test_restore_is_strict_about_dtype_and_shape(tmp_path):
+    store.save_checkpoint(tmp_path, 0, {"w": jnp.asarray([1, 2], jnp.uint32)})
+    with pytest.raises(ValueError, match="dtype"):
+        store.restore_checkpoint(
+            tmp_path, 0, {"w": jax.ShapeDtypeStruct((2,), jnp.int32)}
+        )
+    with pytest.raises(ValueError, match="shape"):
+        store.restore_checkpoint(
+            tmp_path, 0, {"w": jax.ShapeDtypeStruct((3,), jnp.uint32)}
+        )
+
+
+def test_restore_reports_key_mismatches(tmp_path):
+    store.save_checkpoint(tmp_path, 0, {"a": jnp.zeros(2), "b": jnp.zeros(2)})
+    with pytest.raises(ValueError, match="unconsumed"):
+        store.restore_checkpoint(
+            tmp_path, 0, {"a": jax.ShapeDtypeStruct((2,), jnp.float32)}
+        )
+    with pytest.raises(ValueError, match="missing"):
+        store.restore_checkpoint(
+            tmp_path, 0,
+            {"a": jax.ShapeDtypeStruct((2,), jnp.float32),
+             "b": jax.ShapeDtypeStruct((2,), jnp.float32),
+             "c": jax.ShapeDtypeStruct((2,), jnp.float32)},
+        )
+
+
+def test_meta_extra_block_roundtrips(tmp_path):
+    extra = {"format": 1, "host": {"event_cursor": 4, "rng": [1, 2]}}
+    store.save_checkpoint(tmp_path, 7, {"x": jnp.zeros(1)}, extra=extra)
+    meta = store.load_meta(tmp_path)
+    assert meta["step"] == 7 and meta["extra"] == extra
+    assert store.available_steps(tmp_path) == [7]
+
+
+def test_prune_old_guards(tmp_path):
+    for s in (1, 2, 3, 4):
+        store.save_checkpoint(tmp_path, s, {"x": jnp.asarray(float(s))})
+    with pytest.raises(ValueError, match="keep"):
+        store.prune_old(tmp_path, keep=0)
+    # a torn directory (no meta.json) is not a checkpoint and never counts
+    (tmp_path / "step_00000099").mkdir()
+    # an in-flight .tmp protects the newest COMPLETE step from deletion
+    (tmp_path / "step_00000005.tmp").mkdir()
+    deleted = store.prune_old(tmp_path, keep=1)
+    assert deleted == [1, 2, 3]
+    assert store.latest_step(tmp_path) == 4
+    # even keep=1 with the newest protected: nothing left to delete
+    assert store.prune_old(tmp_path, keep=1) == []
+    assert (tmp_path / "step_00000005.tmp").exists()  # never touched
+    assert store.available_steps(tmp_path) == [4]
+
+
+def test_checkpointer_cadence_and_retention(tmp_path):
+    preds, corpus, combine, table = _world(num_objects=64)
+    sess = _session(preds, corpus, combine, table, capacity=64)
+    st = sess.init_state(corpus.func_probs)
+    ck = SessionCheckpointer(sess, tmp_path, every=2, keep=2)
+    with pytest.raises(ValueError, match="every"):
+        SessionCheckpointer(sess, tmp_path, every=0)
+    assert ck.maybe_save(st, 1) is None  # boundary 1 of 2: cadence skips
+    assert ck.maybe_save(st, 2) is not None  # boundary 2: saves
+    assert ck.maybe_save(st, 3) is None
+    assert ck.maybe_save(st, 4, force=True) is not None  # preemption drain
+    assert ck.maybe_save(st, 5) is None  # force reset the boundary counter
+    assert ck.maybe_save(st, 6) is not None
+    assert ck.saves == 3 and ck.last_step == 6
+    assert store.available_steps(tmp_path) == [4, 6]  # keep=2 pruned step 2
+    assert ck.save_seconds > 0 and ck.bytes_written > 0
+
+
+# ------------------------------------------- restore onto another topology --
+
+
+def _churn_to_checkpoint(sess, corpus, preds):
+    """Admit two tenants, run, ingest, run — ends mid-trace at 108 rows."""
+    st = sess.init_state(corpus.func_probs[:48])
+    st, _ = sess.admit(st, conjunction(preds[0], preds[1]))
+    st, _ = sess.admit(st, conjunction(preds[1], preds[2]))
+    st, _ = sess.run(st, 3)
+    st = sess.ingest(st, corpus.func_probs[48:108])
+    st, _ = sess.run(st, 3)
+    return st
+
+
+def _finish_trace(sess, st, corpus):
+    """The remaining half of the churn trace: grow to 228 rows and run."""
+    st = sess.ingest(st, corpus.func_probs[108:228])
+    st, _ = sess.run(st, 3)
+    return st
+
+
+@pytest.mark.parametrize("save_shards,restore_shards", [(1, 2), (2, 1)])
+def test_restore_across_shard_counts_bitwise(tmp_path, save_shards,
+                                             restore_shards):
+    """Save under one plan-shard count, restore under another, finish the
+    trace: answers / cost / ledger bitwise vs the uninterrupted run, and the
+    restored session stays within its retrace bound."""
+    preds, corpus, combine, table = _world()
+    saver = _session(preds, corpus, combine, table, capacity=64,
+                     max_capacity=256, num_shards=save_shards)
+    st = _churn_to_checkpoint(saver, corpus, preds)
+    save_session_checkpoint(tmp_path, 6, saver, st, host_meta={"epochs": 6})
+
+    restorer = _session(preds, corpus, combine, table, capacity=64,
+                        max_capacity=256, num_shards=restore_shards)
+    rst, step, extra = restore_session_checkpoint(restorer, tmp_path)
+    assert step == 6 and extra["host"] == {"epochs": 6}
+    assert extra["num_rows"] == 108 and rst.capacity == 128
+
+    control = _session(preds, corpus, combine, table, capacity=64,
+                       max_capacity=256, num_shards=save_shards)
+    cst = _finish_trace(control, _churn_to_checkpoint(control, corpus, preds),
+                        corpus)
+    rst = _finish_trace(restorer, rst, corpus)
+    _assert_state_bitwise(rst, cst)
+    assert restorer.superstep_traces <= restorer.retrace_bound
+
+
+def test_restore_onto_larger_tier_and_keep_growing(tmp_path):
+    """A checkpoint from tier 128 restores into a session whose FIRST tier
+    is 256 (re-padded through pad_session_state, ledger migrated), keeps
+    ingesting, and stays bitwise with the uninterrupted grown run."""
+    preds, corpus, combine, table = _world()
+    saver = _session(preds, corpus, combine, table, capacity=64,
+                     max_capacity=256)
+    st = _churn_to_checkpoint(saver, corpus, preds)  # tier 128, 108 rows
+    assert st.capacity == 128
+    save_session_checkpoint(tmp_path, 6, saver, st)
+
+    bigger = _session(preds, corpus, combine, table, capacity=256)
+    rst, _, extra = restore_session_checkpoint(bigger, tmp_path)
+    assert rst.capacity == 256 and extra["capacity"] == 128
+    assert int(jax.device_get(rst.num_rows)) == 108
+    # padded rows carry the allocator's inert fill, not the saved garbage
+    assert not bool(jnp.any(rst.substrate.exec_mask[128:]))
+    assert not bool(jnp.any(rst.derived.in_answer[:, 128:]))
+
+    control = _session(preds, corpus, combine, table, capacity=64,
+                       max_capacity=256)
+    cst = _finish_trace(control, _churn_to_checkpoint(control, corpus, preds),
+                        corpus)
+    rst = _finish_trace(bigger, rst, corpus)
+    _assert_state_bitwise(rst, cst)
+    assert bigger.superstep_traces <= bigger.retrace_bound == 1
+
+
+def test_restore_validates_format_schema_and_capacity(tmp_path):
+    preds, corpus, combine, table = _world(num_objects=64)
+    sess = _session(preds, corpus, combine, table, capacity=64)
+    st = sess.init_state(corpus.func_probs)
+    save_session_checkpoint(tmp_path, 0, sess, st)
+    # capacity: a session whose last tier is smaller cannot adopt it
+    small = _session(preds, corpus, combine, table, capacity=32)
+    with pytest.raises(CapacityError, match="last tier"):
+        restore_session_checkpoint(small, tmp_path)
+    # schema: slot axis must match
+    other = _session(preds, corpus, combine, table, capacity=64, max_tenants=5)
+    with pytest.raises(ValueError, match="num_slots"):
+        restore_session_checkpoint(other, tmp_path)
+    # format: a non-session checkpoint is refused up front
+    store.save_checkpoint(tmp_path / "alien", 0, {"x": jnp.zeros(1)})
+    with pytest.raises(ValueError, match="format"):
+        restore_session_checkpoint(sess, tmp_path / "alien")
+    # the spec helper mirrors the live state's structure exactly
+    spec = session_state_spec(sess, 64)
+    flat_spec = jax.tree_util.tree_leaves_with_path(spec)
+    flat_live = jax.tree_util.tree_leaves_with_path(st)
+    assert [(p, l.shape, l.dtype) for p, l in flat_spec] == [
+        (p, l.shape, l.dtype) for p, l in flat_live
+    ]
+
+
+# --------------------------------------- deterministic preemption/heartbeat --
+
+
+class CountdownHandler(PreemptionHandler):
+    """Deterministic preemption: ``should_stop`` flips after N polls — the
+    test stand-in for a SIGTERM landing mid-trace, no signals involved."""
+
+    def __init__(self, after: int):
+        super().__init__()
+        self.polls = 0
+        self.after = after
+
+    @property
+    def should_stop(self) -> bool:
+        if not self._requested:
+            self.polls += 1
+            if self.polls > self.after:
+                self._requested = True
+        return self._requested
+
+
+def test_preemption_request_is_cooperative_and_uninstall_restores():
+    h = PreemptionHandler()
+    assert not h.should_stop
+    h.request()
+    assert h.should_stop
+
+    def sentinel(signum, frame):  # a known prior handler to restore to
+        pass
+
+    prev = signal.signal(signal.SIGTERM, sentinel)
+    try:
+        h2 = PreemptionHandler().install()
+        assert signal.getsignal(signal.SIGTERM) == h2._on_signal
+        h2.install()  # idempotent
+        h2.uninstall()
+        assert signal.getsignal(signal.SIGTERM) is sentinel
+        h2.uninstall()  # idempotent
+        assert signal.getsignal(signal.SIGTERM) is sentinel
+    finally:
+        signal.signal(signal.SIGTERM, prev)
+
+
+def test_heartbeat_simulated_clock():
+    t = [0.0]
+    hb = Heartbeat(num_workers=3, timeout_s=10.0, clock=lambda: t[0])
+    assert hb.healthy()
+    t[0] = 8.0
+    hb.beat(0)
+    hb.beat(1)
+    t[0] = 15.0  # worker 2 last seen at 0: 15 > 10 -> failed
+    assert hb.failed_workers() == [2]
+    assert not hb.healthy()
+    hb.beat(2)
+    assert hb.healthy()
+
+
+def test_pipeline_preemption_stops_at_chunk_boundary():
+    preds, corpus, combine, table = _world(num_objects=64)
+    sess = _session(preds, corpus, combine, table, capacity=64)
+    st = sess.init_state(corpus.func_probs)
+    st, _ = sess.admit(st, conjunction(preds[0], preds[1]))
+    handler = PreemptionHandler()
+    t = [0.0]
+    hb = Heartbeat(num_workers=1, timeout_s=10.0, clock=lambda: t[0])
+    pipe = sess.pipeline(st, chunk_size=2, preemption=handler, heartbeat=hb)
+    pipe.run(4)
+    assert pipe.epochs_dispatched == 4 and not pipe.preempted
+    handler.request()
+    pipe.run(6)  # poll at the first boundary sees the flag: nothing dispatched
+    assert pipe.epochs_dispatched == 4 and pipe.preempted
+    state, history = pipe.finish()  # in-flight chunks drain normally
+    assert len(history) == 4
+
+
+def test_serve_trace_preempt_checkpoint_resume_bitwise(tmp_path):
+    """The CI kill-and-resume gate, in-process and deterministic: a trace
+    preempted mid-run checkpoints at a chunk boundary and exits; a fresh
+    session restores and replays the rest — final answers, cost, and bills
+    bitwise identical to the uninterrupted control."""
+    preds, corpus, combine, table = _world()
+    events = [("admit", 2), ("admit", 2), ("run", 6), ("ingest", 60),
+              ("run", 6), ("admit", 3), ("run", 6)]
+
+    control = _session(preds, corpus, combine, table, capacity=64,
+                       max_capacity=256)
+    cst = control.init_state(corpus.func_probs[:48])
+    crep = serve_session_trace(control, cst, events,
+                               pool=corpus.func_probs[48:], preds=preds,
+                               seed=7, chunk_size=2)
+    assert not crep.preempted and crep.epochs_total == 18
+
+    victim = _session(preds, corpus, combine, table, capacity=64,
+                      max_capacity=256)
+    vst = victim.init_state(corpus.func_probs[:48])
+    ck = SessionCheckpointer(victim, tmp_path, every=1, keep=3)
+    handler = CountdownHandler(after=6)
+    vrep = serve_session_trace(victim, vst, events,
+                               pool=corpus.func_probs[48:], preds=preds,
+                               seed=7, chunk_size=2, checkpointer=ck,
+                               preemption=handler)
+    assert vrep.preempted and vrep.epochs_total < 18
+    assert ck.last_step == vrep.epochs_total
+
+    resumer = _session(preds, corpus, combine, table, capacity=64,
+                       max_capacity=256)
+    rst, step, extra = restore_session_checkpoint(resumer, tmp_path)
+    assert step == vrep.epochs_total
+    rrep = serve_session_trace(resumer, rst, events,
+                               pool=corpus.func_probs[48:], preds=preds,
+                               seed=7, chunk_size=2, resume=extra["host"])
+    assert not rrep.preempted
+    assert rrep.epochs_total == crep.epochs_total == 18
+    assert rrep.restored_step == step
+    assert rrep.cost_hex == crep.cost_hex
+    assert rrep.bills_hex == crep.bills_hex
+    assert rrep.answer_digest == crep.answer_digest
+    assert rrep.attributed == crep.attributed
+    assert resumer.superstep_traces <= resumer.retrace_bound
