@@ -1,0 +1,217 @@
+"""Failover benchmark: recovery latency + time-to-quality under 1 failure.
+
+The supervised runtime (``runtime.supervisor``) promises that a worker death
+mid-trace costs wall time, never answers: the supervisor detects the silent
+shard via missed heartbeats, shrinks the plan mesh per ``ElasticPolicy``,
+restores the newest checkpoint onto the shrunken session, and replays the
+host-shadowed event cursor.  This benchmark measures what that promise costs
+on one scripted arrival trace:
+
+* **recovery latency** — seconds from failure detection to the first
+  post-restore chunk dispatch (``Supervisor.recovery_latency_s``).  This
+  includes the elastic reshard's superstep recompile and the checkpoint
+  restore — the two real components of a cold failover.
+* **time-to-quality** — wall seconds to finish the trace (both runs end at
+  the same quality because recovery is bitwise) under one injected failure
+  vs. the failure-free baseline, and the overhead fraction between them.
+* **resume_bitwise** — the recovered run's ``cost_hex`` / ``bills_hex`` /
+  ``answer_digest`` / ``epochs_total`` must equal the uninterrupted
+  control's (CI validates ``resume_bitwise: true``).
+
+Results land in ``BENCH_failover.json`` with the shared ``meta`` block.
+
+    PYTHONPATH=src python -m benchmarks.failover [--full] [--out BENCH_failover.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+
+from benchmarks.common import bench_meta
+from repro.core import (
+    EngineSession,
+    MultiQueryConfig,
+    Predicate,
+    fallback_decision_table,
+)
+from repro.core.combine import default_combine_params
+from repro.data.synthetic import make_corpus
+from repro.launch.serve import serve_session_trace
+from repro.runtime.chaos import parse_fault_spec
+from repro.runtime.supervisor import Supervisor, SupervisorConfig
+
+P_GLOBAL, F = 4, 4
+
+
+def _world(num_objects: int, seed: int = 0):
+    preds = [Predicate(i, 1) for i in range(P_GLOBAL)]
+    corpus = make_corpus(
+        jax.random.PRNGKey(seed), num_objects, [p.tag_type for p in preds],
+        [p.tag for p in preds], selectivity=[0.3, 0.4, 0.25, 0.35],
+    )
+    return preds, corpus, default_combine_params(corpus.aucs), \
+        fallback_decision_table(P_GLOBAL, F, corpus.aucs)
+
+
+def _session(world, capacity, max_capacity, plan_size, num_shards):
+    preds, corpus, combine, table = world
+    return EngineSession(
+        [p.positive() for p in preds], table, combine, corpus.costs,
+        capacity=capacity, max_tenants=4,
+        config=MultiQueryConfig(plan_size=plan_size, num_shards=num_shards),
+        max_capacity=max_capacity,
+    )
+
+
+def _digests(report):
+    return (report.cost_hex, tuple(report.bills_hex), report.answer_digest,
+            report.epochs_total)
+
+
+def bench_failover(small: bool = True, out_path: str = "BENCH_failover.json"):
+    n0 = 256 if small else 1024
+    capacity = 2 * n0
+    max_capacity = 4 * n0
+    plan_size = 64 if small else 256
+    chunk = 4
+    run = 16 if small else 32
+    shards = 2
+    events = [
+        ("admit", 2), ("admit", 3), ("run", run), ("ingest", n0),
+        ("run", run), ("admit", 2), ("run", run),
+    ]
+    # kill shard 1 one boundary into the second run; with the default
+    # 2-boundary heartbeat timeout, detection lands two boundaries later
+    kill_boundary = run // chunk + 1
+    fault_spec = f"kill:w1@chunk:{kill_boundary}"
+    world = _world(2 * n0)
+    preds, corpus, _, _ = world
+
+    # warm the failure-free scan program so the control run measures
+    # steady-state serving (the supervised run's 1-shard recompile stays IN
+    # the recovery latency on purpose — it is a real failover cost)
+    wsess = _session(world, capacity, max_capacity, plan_size, shards)
+    wst = wsess.init_state(corpus.func_probs[:n0])
+    serve_session_trace(wsess, wst, [("admit", 2), ("run", chunk)],
+                        pool=corpus.func_probs[n0:], preds=preds,
+                        seed=11, chunk_size=chunk)
+
+    # ---- failure-free baseline (2 plan shards, no supervisor) ------------
+    csess = _session(world, capacity, max_capacity, plan_size, shards)
+    cst = csess.init_state(corpus.func_probs[:n0])
+    t0 = time.perf_counter()
+    control = serve_session_trace(csess, cst, events,
+                                  pool=corpus.func_probs[n0:], preds=preds,
+                                  seed=11, chunk_size=chunk)
+    control_wall = time.perf_counter() - t0
+    assert not control.preempted
+
+    # ---- one injected worker death under supervision ---------------------
+    with tempfile.TemporaryDirectory() as tmp:
+        vsess = _session(world, capacity, max_capacity, plan_size, shards)
+        vst = vsess.init_state(corpus.func_probs[:n0])
+        sup = Supervisor(
+            vsess, vst, events,
+            pool=corpus.func_probs[n0:], preds=preds, seed=11,
+            checkpoint_dir=Path(tmp) / "ck", chunk_size=chunk,
+            fault_plan=parse_fault_spec(fault_spec),
+            config=SupervisorConfig(checkpoint_every=4, checkpoint_keep=3),
+        )
+        t0 = time.perf_counter()
+        vrep = sup.serve()
+        victim_wall = time.perf_counter() - t0
+
+    summary = sup.summary()
+    resume_bitwise = _digests(vrep) == _digests(control)
+    recovery_latency_s = (
+        summary["recovery_latency_s"][0]
+        if summary["recovery_latency_s"] else float("nan")
+    )
+    overhead_frac = (victim_wall - control_wall) / max(control_wall, 1e-9)
+
+    payload = dict(
+        benchmark="failover",
+        meta=bench_meta(
+            capacity=capacity,
+            active_tenants=3,
+            events=events,
+            chunk_size=chunk,
+            backend="jnp",
+            num_shards=shards,
+        ),
+        config=dict(
+            num_objects=n0, capacity=capacity, max_capacity=max_capacity,
+            plan_size=plan_size, chunk_size=chunk, plan_shards=shards,
+            fault_spec=fault_spec, checkpoint_every=4, small=small,
+        ),
+        control=dict(
+            wall_s=control_wall, epochs_total=control.epochs_total,
+            mean_expected_f=control.mean_expected_f,
+            cost_hex=control.cost_hex, answer_digest=control.answer_digest,
+        ),
+        failover=dict(
+            wall_s=victim_wall, epochs_total=vrep.epochs_total,
+            mean_expected_f=vrep.mean_expected_f,
+            recovery_latency_s=recovery_latency_s,
+            restarts=summary["restarts"],
+            shrinks=summary["shrinks"],
+            failed_workers=summary["failed_workers"],
+            final_state=summary["final_state"],
+            restored_steps=summary["restored_steps"],
+            checkpoint_saves_total=summary["checkpoint_saves_total"],
+        ),
+        time_to_quality=dict(
+            # recovery is bitwise, so both runs end at the SAME quality —
+            # the failure costs wall time only
+            control_s=control_wall,
+            one_failure_s=victim_wall,
+            overhead_frac=overhead_frac,
+        ),
+        resume_bitwise=bool(resume_bitwise),
+    )
+    with open(out_path, "w") as fh:
+        json.dump(payload, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    return [
+        dict(
+            name=f"failover_kill_N{n0}_C{capacity}_S{shards}",
+            us_per_call=1e6 * recovery_latency_s,
+            derived=(
+                f"resume_bitwise={resume_bitwise}"
+                f";shrinks={summary['shrinks']}"
+                f";restarts={summary['restarts']}"
+                f";final_state={summary['final_state']}"
+            ),
+        ),
+        dict(
+            name=f"time_to_quality_N{n0}_C{capacity}",
+            us_per_call=1e6 * victim_wall,
+            derived=(
+                f"control_s={control_wall:.3f}"
+                f";one_failure_s={victim_wall:.3f}"
+                f";overhead_frac={overhead_frac:.3f}"
+            ),
+        ),
+    ]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--out", default="BENCH_failover.json")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    for r in bench_failover(small=not args.full, out_path=args.out):
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

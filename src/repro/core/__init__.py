@@ -38,7 +38,12 @@ from repro.core.multi_query import (
     QuerySet,
     build_query_set,
 )
-from repro.core.errors import CapacityError, SlotActiveError, SlotsExhaustedError
+from repro.core.errors import (
+    CapacityError,
+    MeshShrinkError,
+    SlotActiveError,
+    SlotsExhaustedError,
+)
 from repro.core.ledger import (
     CostLedger,
     attribute_epoch,
@@ -78,7 +83,8 @@ __all__ = [
     "QuerySet", "build_query_set",
     "EngineSession", "SessionState", "SessionDerived", "SessionEpochStats",
     "SessionPipeline", "pad_session_state", "tier_schedule",
-    "CapacityError", "SlotActiveError", "SlotsExhaustedError",
+    "CapacityError", "MeshShrinkError", "SlotActiveError",
+    "SlotsExhaustedError",
     "CostLedger", "init_ledger", "attribute_epoch", "migrate_ledger", "reset_slot",
     "SessionCheckpointer", "save_session_checkpoint", "restore_session_checkpoint",
     "session_state_spec", "shard_session_state",

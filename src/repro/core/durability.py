@@ -63,7 +63,8 @@ from repro.core.state import SharedSubstrate
 
 # Bump when the SessionState leaf set changes shape-incompatibly; restore
 # refuses checkpoints from a different format instead of mis-zipping leaves.
-CHECKPOINT_FORMAT = 1
+# 2: SessionState grew the [P, F] ``quarantined`` enrichment-function mask.
+CHECKPOINT_FORMAT = 2
 
 
 def session_state_spec(session: EngineSession, capacity: int) -> SessionState:
@@ -91,6 +92,7 @@ def session_state_spec(session: EngineSession, capacity: int) -> SessionState:
         active=sds((s,), jnp.bool_),
         num_rows=sds((), jnp.int32),
         ledger=ledger_spec(s),
+        quarantined=sds((p, f), jnp.bool_),
     )
 
 
@@ -100,6 +102,13 @@ def _session_extra(session: EngineSession, state: SessionState) -> dict:
     num_rows = int(jax.device_get(state.num_rows))
     active = [bool(x) for x in jax.device_get(state.active)]
     capacity = state.capacity
+    q = jax.device_get(state.quarantined)
+    quarantined = [
+        [i, j]
+        for i in range(q.shape[0])
+        for j in range(q.shape[1])
+        if bool(q[i, j])
+    ]
     return {
         "format": CHECKPOINT_FORMAT,
         "capacity": capacity,
@@ -108,6 +117,7 @@ def _session_extra(session: EngineSession, state: SessionState) -> dict:
         "num_slots": session.max_tenants,
         "num_rows": num_rows,
         "active": active,
+        "quarantined": quarantined,
         "tier_index": session.tier_capacities.index(capacity)
         if capacity in session.tier_capacities
         else -1,
@@ -196,6 +206,7 @@ def shard_session_state(state: SessionState, mesh) -> SessionState:
         active=rep(state.active),
         num_rows=rep(state.num_rows),
         ledger=rep(state.ledger),
+        quarantined=rep(state.quarantined),
     )
 
 

@@ -42,6 +42,23 @@ class SlotActiveError(ValueError):
         self.slot = int(slot)
 
 
+class MeshShrinkError(RuntimeError):
+    """Elastic shrink failed: the surviving chips cannot hold the mesh.
+
+    ``healthy_chips`` survived the failure; ``model_axis`` is the tensor-
+    parallel extent that must stay intact (TP is wired to the parameter
+    layout, so it cannot shrink).  Raised by
+    ``ElasticPolicy.shrink_for_failures`` when even a data axis of 1 does
+    not fit — the supervisor's options are to page an operator or drain
+    the session to its checkpoint and wait for capacity.
+    """
+
+    def __init__(self, message: str, *, healthy_chips: int, model_axis: int):
+        super().__init__(message)
+        self.healthy_chips = int(healthy_chips)
+        self.model_axis = int(model_axis)
+
+
 class SlotsExhaustedError(RuntimeError):
     """Tenant-slot exhaustion: ``admit`` found no free slot.
 

@@ -188,6 +188,12 @@ class SessionState:
     active: jax.Array  # [S] bool: slot occupancy
     num_rows: jax.Array  # [] int32: rows [0, num_rows) hold real objects
     ledger: CostLedger  # [S] per-tenant attributed cost
+    # [P, F] bool: quarantined enrichment functions are OR-ed into the
+    # decision-table state id, so plan selection skips their triples exactly
+    # like already-executed ones — a pure data update (no retrace), the same
+    # mechanism as tenant-slot masks.  None (the facades) means no quarantine
+    # channel at all; the session layer always carries the array.
+    quarantined: Optional[jax.Array] = None
 
     @property
     def capacity(self) -> int:
@@ -349,6 +355,12 @@ class EpochProgram:
         cfg = self.config
         der = state.derived
         state_id = state.substrate.state_id()  # [C, P]
+        if state.quarantined is not None:
+            # quarantined functions look "already executed" to the table
+            # lookup (both modes, both backends route through state_id), so
+            # they can never be planned; pred_prob is untouched — enrichment
+            # already applied keeps contributing to answers.
+            state_id = state_id | state_lib.pack_function_bits(state.quarantined)[None, :]
         mode = (
             "best"
             if cfg.function_selection == "best" and self.table.delta_h_all is not None
@@ -408,6 +420,12 @@ class EpochProgram:
             cost_budget=cfg.epoch_cost_budget,
             num_objects=state.capacity,
         )
+        if state.quarantined is not None:
+            # defense in depth: even if a quarantined lane survived scoring
+            # (it cannot, by the state-id OR above), it must neither execute
+            # nor bill — apply and ledger attribution both key off
+            # ``merged.valid``.
+            merged = plan_lib.quarantine_filter(merged, state.quarantined)
         return plans, merged, want_bits
 
     def _gather_outputs(self, state: SessionState, merged: plan_lib.Plan) -> jax.Array:

@@ -71,6 +71,20 @@ def canonicalize_plan(plan: Plan) -> Plan:
     )
 
 
+def quarantine_filter(plan: Plan, quarantined: jax.Array) -> Plan:
+    """Invalidate lanes whose (pred, func) is quarantined.
+
+    The scoring path already excludes quarantined functions (their state-id
+    bits read as executed), so on a healthy plan this is the identity; it
+    exists so execution and ledger attribution — both keyed off ``valid`` —
+    are *structurally* unable to run or bill a quarantined triple, whatever
+    upstream selection produced.  ``quarantined`` is [P, F] bool.
+    """
+    dead = quarantined[plan.pred_idx, jnp.maximum(plan.func_idx, 0)]
+    dead = dead & (plan.func_idx >= 0)
+    return plan._replace(valid=plan.valid & ~dead)
+
+
 def gather_object_idx(plan: Plan, num_objects: int) -> jax.Array:
     """[K] int32 object indices safe for bank/substrate row gathers.
 

@@ -303,6 +303,9 @@ class EngineSession:
             active=jnp.zeros((self.max_tenants,), bool),
             num_rows=jnp.asarray(n0, jnp.int32),
             ledger=ledger_lib.init_ledger(self.max_tenants),
+            quarantined=jnp.zeros(
+                (self.num_predicates, self.num_functions), bool
+            ),
         )
         return self.program.refresh(state)
 
@@ -416,6 +419,71 @@ class EngineSession:
         ``benchmarks.growth``); normal churn events call it internally.
         """
         return self.program.refresh(state)
+
+    # ---- degraded-mode enrichment (quarantine) -------------------------------
+
+    def set_quarantine(self, state: SessionState, quarantined) -> SessionState:
+        """Replace the [P, F] enrichment-function quarantine mask.
+
+        A pure data update on the scan carry — no retrace, no refresh: the
+        mask only gates *future* plan selection (its bits read as "already
+        executed" to the decision table), while enrichment a function already
+        delivered stays in the substrate and keeps contributing to answers.
+        The ledger bills nothing for quarantined work because quarantined
+        triples never enter a merged plan (and ``plan.quarantine_filter``
+        makes that structural).
+        """
+        q = jnp.asarray(quarantined, bool)
+        want = (self.num_predicates, self.num_functions)
+        if q.shape != want:
+            raise ValueError(f"quarantine mask must be {want}; got {q.shape}")
+        return dataclasses.replace(state, quarantined=q)
+
+    def quarantine(self, state: SessionState, pred: int, func: int) -> SessionState:
+        """Mask enrichment function ``func`` of predicate ``pred`` out of
+        plan selection (see ``set_quarantine``)."""
+        self._check_pf(pred, func)
+        return dataclasses.replace(
+            state, quarantined=state.quarantined.at[pred, func].set(True)
+        )
+
+    def unquarantine(self, state: SessionState, pred: int, func: int) -> SessionState:
+        """Re-admit a recovered enrichment function into plan selection."""
+        self._check_pf(pred, func)
+        return dataclasses.replace(
+            state, quarantined=state.quarantined.at[pred, func].set(False)
+        )
+
+    def _check_pf(self, pred: int, func: int):
+        if not (0 <= pred < self.num_predicates and 0 <= func < self.num_functions):
+            raise ValueError(
+                f"(pred={pred}, func={func}) outside "
+                f"[P={self.num_predicates}, F={self.num_functions}]"
+            )
+
+    def reshard(self, num_shards: int) -> "EngineSession":
+        """A new session over the same world, planning across ``num_shards``.
+
+        The elastic-restart building block: after ``ElasticPolicy`` shrinks
+        the data axis, the supervisor opens the resharded session and
+        restores the newest checkpoint onto it — bitwise-identical answers
+        are guaranteed because sharded plan selection is exact
+        (``plan.merge_plans_dedup_sharded``) and restore re-pads inertly.
+        The new session shares the table/params/costs but compiles its own
+        superstep (a legitimate, bounded recompile per mesh change).
+        """
+        cfg = dataclasses.replace(self.config, num_shards=int(num_shards))
+        return EngineSession(
+            self.global_predicates,
+            self.table,
+            self.combine_params,
+            self.costs,
+            capacity=self.capacity,
+            max_tenants=self.max_tenants,
+            config=cfg,
+            max_capacity=self._tiers[-1],
+            truth_masks=self.program.truth_masks,
+        )
 
     def _grow_padded(
         self, state: SessionState, min_rows: int, used: int
@@ -555,15 +623,19 @@ class EngineSession:
         chunk_size: Optional[int] = None,
         preemption=None,
         heartbeat=None,
+        boundary_hook=None,
     ) -> "SessionPipeline":
         """Open an async event pipeline over this session (one sync here —
         the shadow snapshot — then none until ``finish()``).  ``preemption``
         (a ``runtime.fault_tolerance.PreemptionHandler``) is polled at chunk
         boundaries so SIGTERM stops dispatch cooperatively; ``heartbeat``
-        beats worker 0 per dispatched chunk."""
+        beats worker 0 per dispatched chunk; ``boundary_hook`` (no-arg
+        callable) fires once per dispatched chunk — the supervisor's fault
+        clock."""
         return SessionPipeline(
             self, state, chunk_size=chunk_size,
             preemption=preemption, heartbeat=heartbeat,
+            boundary_hook=boundary_hook,
         )
 
 
@@ -599,6 +671,7 @@ class SessionPipeline:
         chunk_size: Optional[int] = None,
         preemption=None,
         heartbeat=None,
+        boundary_hook=None,
     ):
         self.session = session
         self.state = state
@@ -607,6 +680,7 @@ class SessionPipeline:
         )
         self.preemption = preemption  # polled at chunk boundaries
         self.heartbeat = heartbeat  # beaten per dispatched chunk
+        self.boundary_hook = boundary_hook  # fires once per dispatched chunk
         self.preempted = False  # a chunk-boundary poll saw should_stop
         # the pipeline's ONE upfront sync: snapshot the host shadows
         self.num_rows = int(jax.device_get(state.num_rows))
@@ -640,6 +714,10 @@ class SessionPipeline:
             base += length
             if self.heartbeat is not None:
                 self.heartbeat.beat(0)
+            if self.boundary_hook is not None:
+                # the supervisor's fault clock: may trip ``preemption`` so
+                # the NEXT boundary poll stops dispatch at this superstep
+                self.boundary_hook()
         self.epochs_dispatched += base
 
     def checkpoint(self, checkpointer, step: int, host_meta=None, force=True):

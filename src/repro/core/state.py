@@ -47,6 +47,17 @@ def _pack_state_id(exec_mask: jax.Array) -> jax.Array:
     return jnp.sum(exec_mask.astype(jnp.int32) * weights, axis=-1)
 
 
+def pack_function_bits(mask: jax.Array) -> jax.Array:
+    """Public packing of an [..., F] function mask into state-id bits.
+
+    The decision table never selects a function whose bit is set in the
+    state id (``next_fn`` / ``delta_h_all`` treat set bits as executed), so
+    OR-ing extra bits into the lookup id is the zero-retrace way to exclude
+    functions from plan selection — the quarantine mechanism uses this to
+    mask failing enrichment functions without touching ``exec_mask``."""
+    return _pack_state_id(mask)
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class SharedSubstrate:

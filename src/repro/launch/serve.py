@@ -427,6 +427,9 @@ class SessionServeReport:
     scan_lengths: list = dataclasses.field(default_factory=list)  # distinct dispatched
     checkpoint_saves: int = 0
     checkpoint_seconds: float = 0.0
+    # ---- degraded-mode enrichment (quarantine) ----
+    quarantined: list = dataclasses.field(default_factory=list)  # [[pred, func]]
+    degraded: bool = False  # any enrichment function quarantined at the end
 
 
 HOST_META_FORMAT = 1  # driver-shadow block version inside extra["host"]
@@ -445,6 +448,7 @@ def serve_session_trace(
     checkpointer: Optional[SessionCheckpointer] = None,
     resume: Optional[dict] = None,
     heartbeat: Optional[Heartbeat] = None,
+    boundary_hook=None,
 ) -> SessionServeReport:
     """Drive a scripted arrival trace through one long-lived session.
 
@@ -475,6 +479,12 @@ def serve_session_trace(
     and the admit RNG's bit-generator state restored — so the resumed
     process replays the uninterrupted run bitwise (``cost_hex``,
     ``bills_hex``, ``answer_digest`` in the report are the CI diff surface).
+
+    ``boundary_hook`` (no-arg callable) fires once per dispatched scan
+    chunk, BEFORE the preemption poll of that boundary — the supervisor's
+    fault clock: a hook that trips the preemption handler stops dispatch
+    and force-saves at that same superstep boundary
+    (``runtime.supervisor``).
     """
     rng = np.random.default_rng(seed)
     pool_off = 0
@@ -513,6 +523,7 @@ def serve_session_trace(
         session.pipeline(
             state, chunk_size=chunk_size,
             preemption=preemption, heartbeat=heartbeat,
+            boundary_hook=boundary_hook,
         )
         if overlap
         else None
@@ -564,6 +575,8 @@ def serve_session_trace(
                     _prev[0] = done
                     if heartbeat is not None:
                         heartbeat.beat(0)
+                    if boundary_hook is not None:
+                        boundary_hook()
                     stop = preemption is not None and preemption.should_stop
                     if checkpointer is not None:
                         into = _into0 + done
@@ -647,6 +660,10 @@ def serve_session_trace(
         np.asarray(state.derived.in_answer)[:, :num_rows]
     )
     bills = state.ledger.bills(state.cost_spent)
+    quarantined = []
+    if state.quarantined is not None:
+        qm = np.asarray(jax.device_get(state.quarantined))
+        quarantined = [[int(i), int(j)] for i, j in zip(*np.nonzero(qm))]
     return SessionServeReport(
         epochs=len(history),
         events=[dict(kind=k, arg=a) for k, a in events],
@@ -679,6 +696,8 @@ def serve_session_trace(
         checkpoint_seconds=(
             0.0 if checkpointer is None else checkpointer.save_seconds
         ),
+        quarantined=quarantined,
+        degraded=bool(quarantined),
     )
 
 
@@ -737,6 +756,23 @@ def main(argv=None):
                          "--plan-shards or capacity tier)")
     ap.add_argument("--restore-step", type=int, default=None,
                     help="restore this checkpoint step instead of the latest")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run the session trace under runtime.supervisor: "
+                         "heartbeat-driven failure detection, elastic shrink "
+                         "(ElasticPolicy), restore-on-the-shrunken-mesh, and "
+                         "enrichment-function quarantine with backoff probes "
+                         "(requires --checkpoint-dir)")
+    ap.add_argument("--inject-faults", default=None, metavar="SPEC",
+                    help="deterministic chaos schedule at named chunk "
+                         "boundaries, e.g. 'kill:w1@chunk:6;"
+                         "raise:p2.f1@chunk:5+3;slow:w0*4@chunk:3+8;"
+                         "silence:w1@chunk:4+2' (see runtime.chaos; "
+                         "requires --supervise)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for 'auto' fault boundaries in --inject-faults")
+    ap.add_argument("--heartbeat-timeout", type=float, default=2.0,
+                    help="supervised mode: chunk boundaries of silence before "
+                         "a worker is declared failed")
     ap.add_argument("--report", default=None,
                     help="write the session serve report as JSON (the CI "
                          "kill-and-resume job's bitwise diff surface)")
@@ -783,12 +819,50 @@ def main(argv=None):
             f"admit:3;run:{e};retire:0;run:{e}"
         )
         events = parse_trace(spec)
-        report = serve_session_trace(
-            session, state, events, pool=pool, preds=preds,
-            preemption=handler, overlap=args.overlap,
-            chunk_size=args.chunk_size,
-            checkpointer=checkpointer, resume=resume,
-        )
+        supervision = None
+        if args.inject_faults and not args.supervise:
+            ap.error("--inject-faults requires --supervise")
+        if args.supervise:
+            if not args.checkpoint_dir:
+                ap.error("--supervise requires --checkpoint-dir")
+            if args.restore:
+                ap.error("--supervise owns restore; drop --restore")
+            from repro.runtime.chaos import parse_fault_spec
+            from repro.runtime.supervisor import Supervisor, SupervisorConfig
+
+            plan = (
+                parse_fault_spec(args.inject_faults, seed=args.fault_seed)
+                if args.inject_faults
+                else None
+            )
+            sup = Supervisor(
+                session, state, events, pool=pool, preds=preds,
+                checkpoint_dir=args.checkpoint_dir, fault_plan=plan,
+                external=handler, chunk_size=args.chunk_size,
+                overlap=args.overlap,
+                config=SupervisorConfig(
+                    heartbeat_timeout=args.heartbeat_timeout,
+                    checkpoint_every=args.checkpoint_every,
+                    checkpoint_keep=args.checkpoint_keep,
+                ),
+            )
+            report = sup.serve()
+            supervision = sup.summary()
+            print(
+                f"[serve] supervised: state={supervision['final_state']}, "
+                f"{supervision['restarts']} restarts, "
+                f"shrinks={supervision['shrinks']}, "
+                f"quarantined={supervision['quarantined']}, "
+                f"recovered={supervision['recovered']}, "
+                f"transitions={supervision['transitions']}"
+            )
+        else:
+            report = serve_session_trace(
+                session, state, events, pool=pool, preds=preds,
+                preemption=handler, overlap=args.overlap,
+                chunk_size=args.chunk_size,
+                checkpointer=checkpointer, resume=resume,
+            )
         eps = report.epochs / max(report.wall_s, 1e-9)
         bills = {i: f"{c:.3f}" for i, c in enumerate(report.attributed) if c > 0}
         mode = "overlap" if args.overlap else "lockstep"
@@ -820,8 +894,11 @@ def main(argv=None):
                     "growths", "superstep_traces", "retrace_bound",
                     "preempted", "restored_step", "scan_lengths",
                     "checkpoint_saves", "active_tenants", "mean_expected_f",
+                    "quarantined", "degraded",
                 )
             }
+            if supervision is not None:
+                payload["supervision"] = supervision
             with open(args.report, "w") as fh:
                 json.dump(payload, fh, indent=1, sort_keys=True)
         # each DISTINCT dispatched scan length (with chunking: chunk length +
@@ -829,8 +906,11 @@ def main(argv=None):
         # program once per capacity tier the trace actually VISITED
         # (growths + 1); anything beyond means a churn event re-traced the
         # superstep
+        # (supervised runs recompile legitimately across restarts/reshards —
+        # the final pass's session only saw its own scan lengths, so the
+        # accounting below still holds per pass)
         expected = max(len(report.scan_lengths), 1) * (report.growths + 1)
-        if report.superstep_traces > expected:
+        if not args.supervise and report.superstep_traces > expected:
             print(
                 f"[serve] WARNING: superstep re-traced under churn "
                 f"({report.superstep_traces} traces for {expected} scan "

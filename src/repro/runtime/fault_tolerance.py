@@ -14,6 +14,8 @@ import time
 from collections import deque
 from typing import Callable, Optional
 
+from repro.core.errors import MeshShrinkError
+
 
 @dataclasses.dataclass
 class PreemptionHandler:
@@ -68,7 +70,13 @@ class Heartbeat:
     """Driver-side liveness tracking of worker shards.
 
     A worker that misses ``timeout_s`` is declared failed; the driver then
-    triggers restore-from-checkpoint on a shrunken mesh (elastic restart)."""
+    triggers restore-from-checkpoint on a shrunken mesh (elastic restart).
+
+    Membership is explicit: ``beat`` refuses worker ids it is not tracking
+    (a silent insert would mask driver bookkeeping bugs — e.g. beating the
+    pre-shrink worker numbering after an elastic restart).  The driver
+    acknowledges a declared failure with ``remove`` (so ``failed_workers``
+    stops re-reporting it) and re-admits a worker with ``revive``."""
 
     num_workers: int
     timeout_s: float = 60.0
@@ -79,7 +87,31 @@ class Heartbeat:
         self.last_seen = {w: now for w in range(self.num_workers)}
 
     def beat(self, worker: int, at: Optional[float] = None):
+        if worker not in self.last_seen:
+            raise KeyError(
+                f"heartbeat from unknown worker {worker}; tracking "
+                f"{sorted(self.last_seen)} of {self.num_workers} allocated "
+                f"(use revive() to rejoin a removed worker)"
+            )
         self.last_seen[worker] = self.clock() if at is None else at
+
+    def remove(self, worker: int):
+        """Acknowledge a failure: stop tracking ``worker`` until revived."""
+        if worker not in self.last_seen:
+            raise KeyError(f"cannot remove untracked worker {worker}")
+        del self.last_seen[worker]
+
+    def revive(self, worker: int):
+        """Explicit rejoin: (re)track ``worker`` as healthy as of now.
+
+        The id must be within the allocated range — revive re-admits a
+        removed or timed-out worker, it does not grow the worker set."""
+        if not 0 <= worker < self.num_workers:
+            raise KeyError(
+                f"cannot revive worker {worker}: allocated range is "
+                f"[0, {self.num_workers})"
+            )
+        self.last_seen[worker] = self.clock()
 
     def failed_workers(self) -> list[int]:
         now = self.clock()
@@ -135,16 +167,25 @@ class StragglerMonitor:
         ]
 
     def rebalance_objects(self, num_objects: int) -> list[tuple[int, int]]:
-        """-> per-shard [start, end) ranges proportional to speed."""
+        """-> per-shard [start, end) ranges proportional to speed.
+
+        Cut points come from the *cumulative* weight (clamped monotone into
+        ``[start, num_objects]``), so per-shard rounding cannot accumulate:
+        the ranges are always non-negative, disjoint, and cover exactly
+        ``[0, num_objects)`` — a fast shard can round to an empty range, but
+        the last shard can never go negative."""
         w = self.partition_weights()
         bounds = []
         start = 0
+        cum = 0.0
         for i, wi in enumerate(w):
-            size = int(round(wi * num_objects))
+            cum += wi
             if i == self.num_shards - 1:
-                size = num_objects - start
-            bounds.append((start, start + size))
-            start += size
+                end = num_objects
+            else:
+                end = min(num_objects, max(start, int(round(cum * num_objects))))
+            bounds.append((start, end))
+            start = end
         return bounds
 
 
@@ -162,7 +203,9 @@ class ElasticPolicy:
         while data * self.model_axis > healthy_chips and data > 1:
             data //= 2
         if data * self.model_axis > healthy_chips:
-            raise RuntimeError(
-                f"cannot fit model axis {self.model_axis} on {healthy_chips} chips"
+            raise MeshShrinkError(
+                f"cannot fit model axis {self.model_axis} on {healthy_chips} chips",
+                healthy_chips=healthy_chips,
+                model_axis=self.model_axis,
             )
         return data, self.model_axis

@@ -1,0 +1,340 @@
+"""Chaos injection + supervised recovery (ISSUE 7 tentpole).
+
+Three layers, all deterministic (logical chunk-boundary clock, no sleeps):
+
+* the ``--inject-faults`` grammar parses to a seeded ``FaultPlan`` whose
+  one-shot arrivals fire exactly once and whose windows close;
+* quarantine is a pure data update on the scan carry — a masked enrichment
+  function stops executing and stops billing with zero retraces, and
+  un-quarantining resumes it;
+* the ``Supervisor`` closes the loop: an injected worker death mid-trace
+  drains, shrinks 2 -> 1 plan shards, restores the newest checkpoint, and
+  finishes with answers/spend/bills BYTE-EQUAL to an uninterrupted control
+  run, while enrichment raises degrade gracefully (permanent quarantine or
+  backoff-probe recovery) instead of killing the session.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    EngineSession,
+    MultiQueryConfig,
+    Predicate,
+    conjunction,
+    fallback_decision_table,
+    restore_session_checkpoint,
+    save_session_checkpoint,
+)
+from repro.core.combine import default_combine_params
+from repro.data.synthetic import make_corpus
+from repro.launch.serve import parse_trace, serve_session_trace
+from repro.runtime.chaos import FaultEvent, FaultPlan, parse_fault_spec
+from repro.runtime.supervisor import Supervisor, SupervisorConfig
+
+P_GLOBAL, F = 4, 4
+
+
+def _world(seed=0, num_objects=256):
+    preds = [Predicate(i, 1) for i in range(P_GLOBAL)]
+    corpus = make_corpus(
+        jax.random.PRNGKey(seed), num_objects, [p.tag_type for p in preds],
+        [p.tag for p in preds], selectivity=[0.3, 0.4, 0.25, 0.35],
+    )
+    combine = default_combine_params(corpus.aucs)
+    table = fallback_decision_table(P_GLOBAL, F, corpus.aucs)
+    return preds, corpus, combine, table
+
+
+def _session(preds, corpus, combine, table, capacity, max_tenants=3,
+             max_capacity=None, num_shards=1):
+    cfg = MultiQueryConfig(plan_size=32, num_shards=num_shards)
+    return EngineSession(
+        [p.positive() for p in preds], table, combine, corpus.costs,
+        capacity=capacity, max_tenants=max_tenants, config=cfg,
+        max_capacity=max_capacity,
+    )
+
+
+# ------------------------------------------------------------ fault grammar --
+
+
+class TestFaultSpecGrammar:
+    def test_every_event_kind(self):
+        plan = parse_fault_spec(
+            "kill:w1@chunk:6; silence:w0@chunk:4+3;"
+            "slow:w2*8@chunk:3+5; raise:p2.f1@chunk:5+2; raise:p0.f3@chunk:9"
+        )
+        kinds = [e.kind for e in plan.events]
+        assert sorted(kinds) == ["kill", "raise", "raise", "silence", "slow"]
+        by_kind = {e.kind: e for e in plan.events if e.kind != "raise"}
+        assert by_kind["kill"].worker == 1 and by_kind["kill"].boundary == 6
+        assert by_kind["kill"].duration is None  # permanent
+        assert by_kind["silence"].duration == 3
+        assert by_kind["slow"].factor == 8.0 and by_kind["slow"].duration == 5
+        raises = sorted(
+            (e for e in plan.events if e.kind == "raise"),
+            key=lambda e: e.boundary,
+        )
+        assert (raises[0].pred, raises[0].func) == (2, 1)
+        assert raises[1].duration is None
+
+    def test_slow_factor_defaults(self):
+        plan = parse_fault_spec("slow:w0@chunk:2")
+        assert plan.events[0].factor == 4.0
+
+    def test_kill_with_duration_rejected(self):
+        with pytest.raises(ValueError, match="permanent"):
+            parse_fault_spec("kill:w1@chunk:6+2")
+
+    @pytest.mark.parametrize(
+        "bad",
+        [
+            "explode:w1@chunk:3",  # unknown kind
+            "kill:w1",  # no boundary
+            "kill:w1@chunk:0",  # boundaries are 1-based
+            "raise:p1@chunk:3",  # raise needs .fF
+            "silence:w0@chunk:4+0",  # zero-length window
+            "kill:w1@epoch:3",  # wrong clock name
+        ],
+    )
+    def test_malformed_events_rejected(self, bad):
+        with pytest.raises(ValueError):
+            parse_fault_spec(bad)
+
+    def test_empty_spec_is_empty_plan(self):
+        assert len(parse_fault_spec(" ; ")) == 0
+
+    def test_auto_boundary_is_seeded(self):
+        a = parse_fault_spec("kill:w0@chunk:auto; raise:p1.f2@chunk:auto",
+                             seed=13, horizon=10)
+        b = parse_fault_spec("kill:w0@chunk:auto; raise:p1.f2@chunk:auto",
+                             seed=13, horizon=10)
+        c = parse_fault_spec("kill:w0@chunk:auto; raise:p1.f2@chunk:auto",
+                             seed=14, horizon=10)
+        assert [e.boundary for e in a.events] == [e.boundary for e in b.events]
+        assert all(1 <= e.boundary <= 10 for e in a.events)
+        # a different seed draws a different schedule (13 vs 14 do here)
+        assert ([e.boundary for e in a.events]
+                != [e.boundary for e in c.events])
+
+
+class TestFaultPlan:
+    def test_due_consumes_oneshots_exactly_once(self):
+        plan = parse_fault_spec("kill:w1@chunk:3; raise:p0.f1@chunk:5")
+        assert plan.due(2) == []
+        due3 = plan.due(3)
+        assert [e.kind for e in due3] == ["kill"]
+        assert plan.due(3) == []  # consumed
+        due9 = plan.due(9)  # late boundary still collects the raise onset
+        assert [e.kind for e in due9] == ["raise"]
+        assert plan.due(9) == []
+
+    def test_windows_are_stateless(self):
+        plan = parse_fault_spec("silence:w0@chunk:4+3; slow:w1*2@chunk:2+2")
+        assert not plan.silenced(0, 3)
+        assert plan.silenced(0, 4) and plan.silenced(0, 6)
+        assert not plan.silenced(0, 7)  # window closed
+        assert plan.silenced(0, 5) and plan.silenced(0, 5)  # re-queryable
+        assert plan.slow_factor(1, 2) == 2.0 and plan.slow_factor(1, 4) == 1.0
+        assert plan.slow_factor(0, 2) == 1.0  # other worker unaffected
+
+    def test_raising_window(self):
+        plan = parse_fault_spec("raise:p1.f2@chunk:4+2")
+        assert not plan.raising(1, 2, 3)
+        assert plan.raising(1, 2, 4) and plan.raising(1, 2, 5)
+        assert not plan.raising(1, 2, 6)
+        assert not plan.raising(1, 3, 4)  # other function unaffected
+        permanent = parse_fault_spec("raise:p1.f2@chunk:4")
+        assert permanent.raising(1, 2, 400)
+
+    def test_event_validation(self):
+        with pytest.raises(ValueError, match="kind"):
+            FaultEvent(kind="meteor", boundary=1)
+        with pytest.raises(ValueError, match=">= 1"):
+            FaultEvent(kind="kill", boundary=0, worker=0)
+
+
+# --------------------------------------------- quarantine as a data update --
+
+
+class TestQuarantineDataUpdate:
+    def _serving_state(self, session, corpus, preds, tenants=2):
+        st = session.init_state(corpus.func_probs[: session.capacity])
+        for q in range(tenants):
+            query = conjunction(preds[q].positive(), preds[q + 1].positive())
+            st, _ = session.admit(st, query)
+        return st
+
+    def test_quarantined_function_stops_executing_and_billing(self):
+        preds, corpus, combine, table = _world(num_objects=64)
+        sess = _session(preds, corpus, combine, table, capacity=64)
+        st = self._serving_state(sess, corpus, preds)
+        st, _ = sess.run(st, 6)
+
+        st = sess.quarantine(st, 1, 2)
+        exec_before = np.asarray(st.substrate.exec_mask).copy()
+        bills_before = np.asarray(st.ledger.attributed).copy()
+        traces_before = sess.superstep_traces
+
+        st, _ = sess.run(st, 6)
+        exec_after = np.asarray(st.substrate.exec_mask)
+
+        # the masked triple never runs again...
+        np.testing.assert_array_equal(exec_after[:, 1, 2], exec_before[:, 1, 2])
+        # ...while the session keeps serving from surviving functions
+        assert exec_after.sum() > exec_before.sum()
+        assert np.asarray(st.ledger.attributed).sum() > bills_before.sum()
+        # zero retraces: the mask rides the existing compiled superstep
+        assert sess.superstep_traces == traces_before
+
+    def test_unquarantine_resumes_execution(self):
+        preds, corpus, combine, table = _world(num_objects=64)
+        sess = _session(preds, corpus, combine, table, capacity=64)
+        st = self._serving_state(sess, corpus, preds)
+        st = sess.quarantine(st, 0, 1)
+        st, _ = sess.run(st, 6)
+        frozen = np.asarray(st.substrate.exec_mask)[:, 0, 1].copy()
+        assert frozen.sum() == 0
+
+        st = sess.unquarantine(st, 0, 1)
+        st, _ = sess.run(st, 6)
+        assert np.asarray(st.substrate.exec_mask)[:, 0, 1].sum() > 0
+
+    def test_quarantine_bounds_checked(self):
+        preds, corpus, combine, table = _world(num_objects=64)
+        sess = _session(preds, corpus, combine, table, capacity=64)
+        st = sess.init_state(corpus.func_probs[:64])
+        with pytest.raises(ValueError, match="outside"):
+            sess.quarantine(st, P_GLOBAL, 0)
+        with pytest.raises(ValueError, match="outside"):
+            sess.unquarantine(st, 0, -1)
+        with pytest.raises(ValueError, match="must be"):
+            sess.set_quarantine(st, np.zeros((P_GLOBAL, F + 1), bool))
+
+    def test_checkpoint_roundtrips_quarantine_mask(self, tmp_path):
+        preds, corpus, combine, table = _world(num_objects=64)
+        sess = _session(preds, corpus, combine, table, capacity=64)
+        st = self._serving_state(sess, corpus, preds)
+        st = sess.quarantine(st, 1, 2)
+        st = sess.quarantine(st, 3, 0)
+        save_session_checkpoint(tmp_path, 5, sess, st)
+
+        fresh = _session(preds, corpus, combine, table, capacity=64)
+        rst, step, _ = restore_session_checkpoint(fresh, tmp_path)
+        assert step == 5
+        np.testing.assert_array_equal(
+            np.asarray(rst.quarantined), np.asarray(st.quarantined)
+        )
+
+
+# ---------------------------------------------------- supervised recovery --
+
+
+_TRACE = "admit:2;admit:2;run:12;ingest:60;run:6"
+
+
+def _control_report(preds, corpus, combine, table, num_shards):
+    sess = _session(preds, corpus, combine, table, capacity=64,
+                    max_capacity=256, num_shards=num_shards)
+    st = sess.init_state(corpus.func_probs[:48])
+    rep = serve_session_trace(sess, st, parse_trace(_TRACE),
+                              pool=corpus.func_probs[48:], preds=preds,
+                              seed=7, chunk_size=2)
+    assert not rep.preempted
+    return rep
+
+
+def _supervised(preds, corpus, combine, table, tmp_path, spec,
+                num_shards=1, timeout=2.0):
+    sess = _session(preds, corpus, combine, table, capacity=64,
+                    max_capacity=256, num_shards=num_shards)
+    st = sess.init_state(corpus.func_probs[:48])
+    sup = Supervisor(
+        sess, st, parse_trace(_TRACE),
+        pool=corpus.func_probs[48:], preds=preds, seed=7,
+        checkpoint_dir=tmp_path, chunk_size=2,
+        fault_plan=parse_fault_spec(spec),
+        config=SupervisorConfig(heartbeat_timeout=timeout,
+                                checkpoint_every=2, checkpoint_keep=3),
+    )
+    return sup, sup.serve()
+
+
+def _assert_digests_equal(a, b):
+    assert a.cost_hex == b.cost_hex
+    assert a.bills_hex == b.bills_hex
+    assert a.answer_digest == b.answer_digest
+    assert a.epochs_total == b.epochs_total
+
+
+def test_worker_death_shrinks_and_resumes_bitwise(tmp_path):
+    """The CI chaos gate, in-process: kill a plan shard mid-trace; the
+    supervisor detects via missed beats, shrinks 2 -> 1, restores the newest
+    checkpoint, replays the cursor — digests byte-equal to the control."""
+    preds, corpus, combine, table = _world()
+    control = _control_report(preds, corpus, combine, table, num_shards=2)
+    sup, rep = _supervised(preds, corpus, combine, table, tmp_path,
+                           "kill:w1@chunk:4", num_shards=2)
+
+    assert not rep.preempted
+    _assert_digests_equal(rep, control)
+    s = sup.summary()
+    assert s["final_state"] == "healthy"
+    assert s["shrinks"] == [[2, 1]]
+    assert s["failed_workers"] == [1]
+    assert s["restarts"] == 1 and s["plan_shards"] == 1
+    assert len(s["recovery_latency_s"]) == 1
+    assert s["restored_steps"] and s["restored_steps"][0] <= rep.epochs_total
+    names = [t[2] for t in s["transitions"]]
+    assert names == ["draining", "restoring", "healthy"]
+
+
+def test_enrichment_raise_quarantines_and_degrades(tmp_path):
+    """A permanently-raising enrichment function is quarantined after the
+    breaker opens; the session keeps serving (nonzero quality) from the
+    surviving functions and the final report surfaces degraded mode."""
+    preds, corpus, combine, table = _world()
+    sup, rep = _supervised(preds, corpus, combine, table, tmp_path,
+                           "raise:p1.f2@chunk:4")
+
+    assert not rep.preempted
+    assert rep.degraded and rep.quarantined == [[1, 2]]
+    assert rep.mean_expected_f > 0  # still answering from survivors
+    s = sup.summary()
+    assert s["final_state"] == "degraded"
+    assert s["quarantined"] == [[1, 2]] and s["recovered"] == []
+    # one drain/restore for the OPEN transition; failed backoff probes and
+    # the OPEN -> PERMANENT flip are host bookkeeping, not restarts
+    assert s["restarts"] == 1
+    # the onset plus at least one failed exponential-backoff probe
+    assert s["function_failures"]["p1.f2"] >= 2
+    assert s["shrinks"] == []  # no mesh change for enrichment faults
+
+
+def test_transient_enrichment_fault_recovers_via_probes(tmp_path):
+    """A bounded raise window: the breaker opens, backoff probes find the
+    window closed, the function is un-quarantined and the session ends
+    healthy and undegraded."""
+    preds, corpus, combine, table = _world()
+    sup, rep = _supervised(preds, corpus, combine, table, tmp_path,
+                           "raise:p1.f2@chunk:4+2")
+
+    assert not rep.preempted
+    assert not rep.degraded and rep.quarantined == []
+    s = sup.summary()
+    assert s["final_state"] == "healthy"
+    assert s["recovered"] == [[1, 2]] and s["quarantined"] == []
+    assert s["restarts"] == 2  # open (quarantine) + close (un-quarantine)
+
+
+def test_short_silence_within_timeout_is_tolerated(tmp_path):
+    """Heartbeat silence shorter than the timeout never trips a drain."""
+    preds, corpus, combine, table = _world()
+    sup, rep = _supervised(preds, corpus, combine, table, tmp_path,
+                           "silence:w1@chunk:4+2", num_shards=2, timeout=3.0)
+    assert not rep.preempted
+    s = sup.summary()
+    assert s["restarts"] == 0 and s["final_state"] == "healthy"
+    assert s["shrinks"] == [] and s["failed_workers"] == []

@@ -1,0 +1,154 @@
+"""Driver-side fault-tolerance mechanisms (ISSUE 7 satellites).
+
+Host-only logic, exercised deterministically: ``StragglerMonitor`` range
+partitions must stay non-negative/disjoint/covering under adversarial speed
+ratios (the old rounding scheme could hand the last shard a negative-size
+range), ``Heartbeat`` must refuse unknown worker ids and support explicit
+remove/revive membership, and ``ElasticPolicy`` must raise the typed
+``MeshShrinkError`` when the surviving chips cannot hold the model axis.
+"""
+
+import pytest
+
+from repro.core.errors import MeshShrinkError
+from repro.runtime.fault_tolerance import (
+    ElasticPolicy,
+    Heartbeat,
+    StragglerMonitor,
+)
+
+
+def _check_partition(bounds, num_objects):
+    """Ranges are non-negative, disjoint, contiguous, and cover [0, N)."""
+    assert bounds[0][0] == 0
+    assert bounds[-1][1] == num_objects
+    prev_end = 0
+    for start, end in bounds:
+        assert start == prev_end  # contiguous + disjoint
+        assert end >= start  # non-negative size
+        prev_end = end
+
+
+class TestStragglerRebalance:
+    def test_negative_last_shard_regression(self):
+        # three equal-speed shards + one 3x-slower: weights ~[.3,.3,.3,.1]
+        # over 5 objects used to round to sizes [2,2,2] leaving the last
+        # shard the range (6, 5) — a negative size
+        mon = StragglerMonitor(num_shards=4, ema=1.0)
+        for shard, t in enumerate([1.0, 1.0, 1.0, 3.0]):
+            mon.record(shard, t)
+        bounds = _check_partition_result = mon.rebalance_objects(5)
+        _check_partition(bounds, 5)
+
+    @pytest.mark.parametrize(
+        "times,num_objects",
+        [
+            ([1.0, 1.0, 1.0, 3.0], 5),
+            ([1e-6, 1.0, 1.0], 7),  # one absurdly fast shard
+            ([1.0, 1e-6, 1e-6, 1e-6], 3),  # more shards than objects worth
+            ([5.0, 1.0, 1.0, 1.0, 1.0], 1),  # single object
+            ([2.0, 3.0, 5.0, 7.0, 11.0, 13.0], 97),  # ragged primes
+            ([1.0] * 8, 64),  # uniform
+        ],
+    )
+    def test_partition_invariants_adversarial(self, times, num_objects):
+        mon = StragglerMonitor(num_shards=len(times), ema=1.0)
+        for shard, t in enumerate(times):
+            mon.record(shard, t)
+        _check_partition(mon.rebalance_objects(num_objects), num_objects)
+
+    def test_faster_shards_get_more_objects(self):
+        mon = StragglerMonitor(num_shards=2, ema=1.0)
+        mon.record(0, 1.0)
+        mon.record(1, 3.0)
+        (s0, e0), (s1, e1) = mon.rebalance_objects(100)
+        assert e0 - s0 > e1 - s1
+
+    def test_unfilled_shards_use_mean_time(self):
+        mon = StragglerMonitor(num_shards=3)
+        mon.record(0, 2.0)  # shards 1, 2 never reported
+        _check_partition(mon.rebalance_objects(10), 10)
+
+    def test_stragglers_under_two_filled_shards(self):
+        mon = StragglerMonitor(num_shards=4)
+        assert mon.stragglers() == []  # nothing recorded
+        mon.record(2, 50.0)  # one filled shard is not a comparison
+        assert mon.stragglers() == []
+
+    def test_straggler_detection(self):
+        mon = StragglerMonitor(num_shards=3, ema=1.0)
+        mon.record(0, 1.0)
+        mon.record(1, 1.1)
+        mon.record(2, 4.0)
+        assert mon.stragglers(factor=1.5) == [2]
+        assert mon.stragglers(factor=10.0) == []
+
+
+class TestHeartbeat:
+    def _hb(self, n=3, timeout=10.0):
+        t = [0.0]
+        hb = Heartbeat(num_workers=n, timeout_s=timeout, clock=lambda: t[0])
+        return hb, t
+
+    def test_beat_unknown_worker_raises(self):
+        hb, _ = self._hb(n=2)
+        with pytest.raises(KeyError, match="unknown worker 5"):
+            hb.beat(5)
+
+    def test_failure_detection_and_remove(self):
+        hb, t = self._hb(n=3, timeout=10.0)
+        t[0] = 5.0
+        hb.beat(0)
+        hb.beat(2)
+        t[0] = 12.0  # worker 1 last seen at 0.0 -> 12 > timeout
+        assert hb.failed_workers() == [1]
+        assert not hb.healthy()
+        hb.remove(1)  # driver acknowledges; stops re-reporting
+        assert hb.failed_workers() == []
+        with pytest.raises(KeyError):  # a removed worker may not beat
+            hb.beat(1)
+        with pytest.raises(KeyError):  # remove is not idempotent by design
+            hb.remove(1)
+
+    def test_revive_rejoins_as_healthy(self):
+        hb, t = self._hb(n=2, timeout=5.0)
+        t[0] = 20.0
+        assert sorted(hb.failed_workers()) == [0, 1]
+        hb.remove(0)
+        hb.revive(0)  # explicit rejoin: healthy as of now
+        assert hb.failed_workers() == [1]
+        hb.beat(0)  # and it may beat again
+
+    def test_revive_out_of_range_raises(self):
+        hb, _ = self._hb(n=2)
+        with pytest.raises(KeyError, match=r"\[0, 2\)"):
+            hb.revive(2)
+        with pytest.raises(KeyError):
+            hb.revive(-1)
+
+    def test_revive_resets_a_timed_out_worker(self):
+        hb, t = self._hb(n=1, timeout=3.0)
+        t[0] = 10.0
+        assert hb.failed_workers() == [0]
+        hb.revive(0)  # never removed — revive still re-anchors liveness
+        assert hb.failed_workers() == []
+
+
+class TestElasticPolicy:
+    def test_shrink_halves_data_axis(self):
+        pol = ElasticPolicy(data_axis=8, model_axis=2)
+        assert pol.shrink_for_failures(healthy_chips=12) == (4, 2)
+        assert pol.shrink_for_failures(healthy_chips=16) == (8, 2)
+        assert pol.shrink_for_failures(healthy_chips=2) == (1, 2)
+
+    def test_two_to_one_shard_shrink(self):
+        # the supervisor's CI scenario: 2 plan shards, 1 worker dies
+        assert ElasticPolicy(2, 1).shrink_for_failures(1) == (1, 1)
+
+    def test_mesh_shrink_error_is_typed(self):
+        pol = ElasticPolicy(data_axis=4, model_axis=4)
+        with pytest.raises(MeshShrinkError) as ei:
+            pol.shrink_for_failures(healthy_chips=3)
+        assert ei.value.healthy_chips == 3
+        assert ei.value.model_axis == 4
+        assert isinstance(ei.value, RuntimeError)  # the pre-typed contract
