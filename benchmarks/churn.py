@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import bench_meta, time_to_quality
+from repro.core.state import substrate_hbm_bytes
 from benchmarks.multi_query import _build_global, _sample_queries
 from repro.core import (
     EngineSession,
@@ -204,6 +205,8 @@ def bench_churn(small: bool = True, out_path: str = "BENCH_churn.json"):
             capacity=capacity,
             active_tenants=2,  # at trace end (3 admitted, 1 retired)
             events=trace,
+            substrate_dtype="float32",
+            substrate_hbm_bytes=substrate_hbm_bytes(capacity, num_preds, 4),
         ),
         config=dict(
             num_objects=n0, capacity=capacity, plan_size=plan_size,

@@ -161,6 +161,8 @@ def bench_meta(
     chunk_size: Optional[int] = None,
     backend: Optional[str] = None,
     num_shards: Optional[int] = None,
+    substrate_dtype: str = "float32",
+    substrate_hbm_bytes: Optional[int] = None,
 ) -> dict:
     """Machine-readable provenance block every BENCH_*.json payload carries.
 
@@ -171,8 +173,12 @@ def bench_meta(
     ``backend`` / ``num_shards`` record the executor configuration (scan
     dispatch granularity, scoring backend, plan shards) so perf numbers are
     attributable to a concrete program shape; None means the engine default.
-    Keeping the block uniform across BENCH files is what lets cross-PR
-    trajectory tooling compare runs without per-bench parsing.
+    ``substrate_dtype`` is the storage dtype of the shared substrate and
+    ``substrate_hbm_bytes`` the device bytes it pins at ``capacity``
+    (``repro.core.state.substrate_hbm_bytes``) — what a bf16 substrate buys
+    is only legible next to the throughput numbers it ships with.  Keeping
+    the block uniform across BENCH files is what lets cross-PR trajectory
+    tooling compare runs without per-bench parsing.
     """
     events = list(events or [])
     norm = []
@@ -189,4 +195,6 @@ def bench_meta(
         chunk_size=chunk_size,
         backend=backend,
         num_shards=num_shards,
+        substrate_dtype=substrate_dtype,
+        substrate_hbm_bytes=substrate_hbm_bytes,
     )

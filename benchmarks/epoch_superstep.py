@@ -31,6 +31,7 @@ import numpy as np
 from benchmarks.common import bench_meta
 from benchmarks.multi_query import _build_global, _sample_queries
 from repro.core import MultiQueryConfig, MultiQueryEngine, build_query_set
+from repro.core.state import substrate_hbm_bytes
 from repro.data.synthetic import truth_answer_mask
 
 
@@ -126,7 +127,11 @@ def bench_epoch_superstep(small: bool = True, out_path: str = "BENCH_epoch.json"
     speedup = scan_side["epochs_per_sec"] / max(loop_side["epochs_per_sec"], 1e-9)
     payload = dict(
         benchmark="epoch_superstep",
-        meta=bench_meta(capacity=n, active_tenants=q),
+        meta=bench_meta(
+            capacity=n, active_tenants=q,
+            substrate_dtype="float32",
+            substrate_hbm_bytes=substrate_hbm_bytes(n, 6, 4),
+        ),
         config=dict(
             num_objects=n, num_queries=q, epochs=epochs, plan_size=plan_size,
             num_preds=6, bank="simulated", small=small,

@@ -42,6 +42,7 @@ from repro.core import (
     fallback_decision_table,
 )
 from repro.core.combine import default_combine_params
+from repro.core.state import substrate_hbm_bytes
 from repro.data.synthetic import make_corpus
 from repro.launch.serve import serve_session_trace
 from repro.runtime.chaos import parse_fault_spec
@@ -145,6 +146,8 @@ def bench_failover(small: bool = True, out_path: str = "BENCH_failover.json"):
             chunk_size=chunk,
             backend="jnp",
             num_shards=shards,
+            substrate_dtype="float32",
+            substrate_hbm_bytes=substrate_hbm_bytes(capacity, P_GLOBAL, F),
         ),
         config=dict(
             num_objects=n0, capacity=capacity, max_capacity=max_capacity,

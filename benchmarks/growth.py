@@ -39,6 +39,7 @@ import sys
 import time
 
 from benchmarks.common import bench_meta, time_to_quality
+from repro.core.state import substrate_hbm_bytes
 from benchmarks.multi_query import _build_global, _sample_queries
 from repro.core import EngineSession, MultiQueryConfig, pad_session_state
 
@@ -177,6 +178,8 @@ def bench_growth(small: bool = True, out_path: str = "BENCH_growth.json"):
             capacity=max_cap,
             active_tenants=2,  # at trace end (3 admitted, 1 retired)
             events=trace,
+            substrate_dtype="float32",
+            substrate_hbm_bytes=substrate_hbm_bytes(max_cap, num_preds, 4),
         ),
         config=dict(
             num_objects=n0, capacity=base, max_capacity=max_cap,

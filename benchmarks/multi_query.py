@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import bench_meta
+from repro.core.state import substrate_hbm_bytes
 from repro.core import (
     MultiQueryConfig,
     MultiQueryEngine,
@@ -242,7 +243,11 @@ def bench_multi_query(small: bool = True, out_path: str = "BENCH_multi_query.jso
         )
     payload = dict(
         benchmark="multi_query_dedup",
-        meta=bench_meta(capacity=n, active_tenants=list(qs)),
+        meta=bench_meta(
+            capacity=n, active_tenants=list(qs),
+            substrate_dtype="float32",
+            substrate_hbm_bytes=substrate_hbm_bytes(n, num_preds, 4),
+        ),
         config=dict(
             num_objects=n, epochs_cap=epochs, plan_size=plan_size,
             num_preds=num_preds, small=small,

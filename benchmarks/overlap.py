@@ -34,6 +34,7 @@ import numpy as np
 from benchmarks.common import bench_meta, time_to_quality
 from benchmarks.multi_query import _build_global, _sample_queries
 from repro.core import EngineSession, MultiQueryConfig
+from repro.core.state import substrate_hbm_bytes
 
 
 def _trace(rounds: int, epochs_per_run: int, ingest_per_round: int):
@@ -181,6 +182,8 @@ def bench_overlap(small: bool = True, out_path: str = "BENCH_overlap.json"):
             chunk_size=chunk,
             backend="jnp",
             num_shards=1,
+            substrate_dtype="float32",
+            substrate_hbm_bytes=substrate_hbm_bytes(capacity, num_preds, 4),
         ),
         config=dict(
             num_objects=n0, capacity=capacity, plan_size=plan_size,

@@ -46,6 +46,7 @@ from repro.core import (
     restore_session_checkpoint,
 )
 from repro.core.combine import default_combine_params
+from repro.core.state import substrate_hbm_bytes
 from repro.data.synthetic import make_corpus
 from repro.launch.serve import serve_session_trace
 from repro.runtime.fault_tolerance import PreemptionHandler
@@ -190,6 +191,8 @@ def bench_restore(small: bool = True, out_path: str = "BENCH_restore.json"):
             chunk_size=chunk,
             backend="jnp",
             num_shards=1,
+            substrate_dtype="float32",
+            substrate_hbm_bytes=substrate_hbm_bytes(capacity, P_GLOBAL, F),
         ),
         config=dict(
             num_objects=n0, capacity=capacity, max_capacity=max_capacity,

@@ -40,9 +40,11 @@ from repro.core.multi_query import (
 )
 from repro.core.errors import (
     CapacityError,
+    IngestBackpressure,
     MeshShrinkError,
     SlotActiveError,
     SlotsExhaustedError,
+    SubstrateDtypeError,
 )
 from repro.core.ledger import (
     CostLedger,
@@ -83,8 +85,8 @@ __all__ = [
     "QuerySet", "build_query_set",
     "EngineSession", "SessionState", "SessionDerived", "SessionEpochStats",
     "SessionPipeline", "pad_session_state", "tier_schedule",
-    "CapacityError", "MeshShrinkError", "SlotActiveError",
-    "SlotsExhaustedError",
+    "CapacityError", "IngestBackpressure", "MeshShrinkError", "SlotActiveError",
+    "SlotsExhaustedError", "SubstrateDtypeError",
     "CostLedger", "init_ledger", "attribute_epoch", "migrate_ledger", "reset_slot",
     "SessionCheckpointer", "save_session_checkpoint", "restore_session_checkpoint",
     "session_state_spec", "shard_session_state",

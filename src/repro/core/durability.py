@@ -64,30 +64,37 @@ from repro.core.state import SharedSubstrate
 # Bump when the SessionState leaf set changes shape-incompatibly; restore
 # refuses checkpoints from a different format instead of mis-zipping leaves.
 # 2: SessionState grew the [P, F] ``quarantined`` enrichment-function mask.
-CHECKPOINT_FORMAT = 2
+# 3: the substrate storage dtype became a session parameter — float leaves
+#    (func_probs / bank_outputs / derived) persist at ``substrate_dtype``
+#    (recorded in the extra block; the store round-trips bf16 bitwise) and
+#    restore refuses a dtype mismatch instead of silently casting.
+CHECKPOINT_FORMAT = 3
 
 
 def session_state_spec(session: EngineSession, capacity: int) -> SessionState:
     """A ``SessionState`` of ``jax.ShapeDtypeStruct`` leaves for ``session``
     at ``capacity`` rows — the abstract ``like`` tree a restore validates
-    stored shapes/dtypes against without allocating anything."""
+    stored shapes/dtypes against without allocating anything.  Float leaves
+    follow the session's substrate dtype; ``cost_spent`` (and the ledger)
+    stay f32 — the spend identity contract."""
     p = session.num_predicates
     f = session.num_functions
     s = session.max_tenants
+    dt = session.substrate_dtype
     sds = jax.ShapeDtypeStruct
     return SessionState(
         substrate=SharedSubstrate(
-            func_probs=sds((capacity, p, f), jnp.float32),
+            func_probs=sds((capacity, p, f), dt),
             exec_mask=sds((capacity, p, f), jnp.bool_),
             cost_spent=sds((), jnp.float32),
         ),
         derived=SessionDerived(
-            pred_prob=sds((capacity, p), jnp.float32),
-            uncertainty=sds((capacity, p), jnp.float32),
-            joint_prob=sds((s, capacity), jnp.float32),
+            pred_prob=sds((capacity, p), dt),
+            uncertainty=sds((capacity, p), dt),
+            joint_prob=sds((s, capacity), dt),
             in_answer=sds((s, capacity), jnp.bool_),
         ),
-        bank_outputs=sds((capacity, p, f), jnp.float32),
+        bank_outputs=sds((capacity, p, f), dt),
         pred_mask=sds((s, p), jnp.bool_),
         active=sds((s,), jnp.bool_),
         num_rows=sds((), jnp.int32),
@@ -112,6 +119,7 @@ def _session_extra(session: EngineSession, state: SessionState) -> dict:
     return {
         "format": CHECKPOINT_FORMAT,
         "capacity": capacity,
+        "substrate_dtype": session.config.substrate_dtype,
         "num_predicates": session.num_predicates,
         "num_functions": session.num_functions,
         "num_slots": session.max_tenants,
@@ -242,6 +250,10 @@ def restore_session_checkpoint(
         ("num_predicates", session.num_predicates),
         ("num_functions", session.num_functions),
         ("num_slots", session.max_tenants),
+        # restore is bitwise, so a dtype change is a different world: a bf16
+        # checkpoint has no f32 bits to restore (and vice versa) — re-ingest
+        # or explicitly convert offline instead of silently casting here
+        ("substrate_dtype", session.config.substrate_dtype),
     ):
         if extra[field] != have:
             raise ValueError(

@@ -59,6 +59,45 @@ class MeshShrinkError(RuntimeError):
         self.model_axis = int(model_axis)
 
 
+class SubstrateDtypeError(ValueError):
+    """Mixed-dtype substrate write: the incoming floats don't match storage.
+
+    The substrate has ONE storage dtype (``expected``); merging or ingesting
+    float data of another dtype (``got``) would either silently widen the
+    whole buffer (jnp promotion) or silently quantize the input.  Both are
+    wrong by default — the caller must cast explicitly at the boundary where
+    the precision contract is documented.  ``where`` names the operation
+    that refused (e.g. ``"ingest_rows"``, ``"with_cached_state"``).
+    """
+
+    def __init__(self, message: str, *, expected: str, got: str, where: str):
+        super().__init__(message)
+        self.expected = str(expected)
+        self.got = str(got)
+        self.where = str(where)
+
+
+class IngestBackpressure(RuntimeError):
+    """Pending-row ring is full: enrichment has fallen behind ingestion.
+
+    Raised by ``PendingRing.push`` under the ``block`` policy (the other
+    policies — ``shed``/``spill`` — absorb the overflow themselves).  The
+    handler's fix is to drain the ring into the session (freeing every
+    slot) and retry the push; ``occupied``/``capacity`` are in ring slots,
+    ``requested`` is the number of rows that did not fit, and ``policy``
+    echoes the ring's configured policy so generic handlers can log it.
+    """
+
+    def __init__(
+        self, message: str, *, occupied: int, capacity: int, requested: int, policy: str
+    ):
+        super().__init__(message)
+        self.occupied = int(occupied)
+        self.capacity = int(capacity)
+        self.requested = int(requested)
+        self.policy = str(policy)
+
+
 class SlotsExhaustedError(RuntimeError):
     """Tenant-slot exhaustion: ``admit`` found no free slot.
 

@@ -80,10 +80,35 @@ class EngineConfig:
     # dispatch (None: the whole run in one scan).  Bitwise inert; chunk
     # boundaries are where staged churn events overlap in-flight compute.
     chunk_size: Optional[int] = None
+    # storage dtype of func_probs / bank_outputs / derived state ("float32" |
+    # "bfloat16").  bf16 halves substrate HBM and ingest transfer bytes at
+    # million-row capacity; ALL arithmetic (combine, entropy, Eq. 11 scoring,
+    # answer selection) still runs in f32 — storage is upcast at the consumer
+    # (in-register inside the Pallas tiles), so a bf16 session is exact w.r.t.
+    # its stored values, and the f32 default is bitwise-identical to before
+    # this knob existed.  cost_spent / ledger stay f32 unconditionally.
+    substrate_dtype: str = "float32"
 
 
 # Back-compat alias: every engine now shares one config type.
 MultiQueryConfig = EngineConfig
+
+_SUBSTRATE_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+
+
+def resolve_substrate_dtype(name: str):
+    """Map ``EngineConfig.substrate_dtype`` to a jnp dtype (typed rejection).
+
+    The config field is a *string* so ``EngineConfig`` stays hashable /
+    serializable (checkpoint meta, scan-cache keys); this is the one place
+    the string becomes a dtype.
+    """
+    try:
+        return _SUBSTRATE_DTYPES[name]
+    except KeyError:
+        raise ValueError(
+            f"substrate_dtype must be one of {sorted(_SUBSTRATE_DTYPES)}, got {name!r}"
+        ) from None
 
 
 def scan_capable(bank) -> bool:
@@ -170,9 +195,9 @@ class SessionDerived:
     probability and answer membership actually vary per slot.
     """
 
-    pred_prob: jax.Array  # [C, P] f32, shared across slots
-    uncertainty: jax.Array  # [C, P] f32, shared across slots
-    joint_prob: jax.Array  # [S, C] f32
+    pred_prob: jax.Array  # [C, P] substrate dtype, shared across slots
+    uncertainty: jax.Array  # [C, P] substrate dtype, shared across slots
+    joint_prob: jax.Array  # [S, C] substrate dtype
     in_answer: jax.Array  # [S, C] bool
 
 
@@ -301,20 +326,34 @@ class EpochProgram:
         *data* so admit/retire never retrace.  Joint probability is zeroed on
         invalid rows and inactive slots so they can never enter an answer set
         or earn benefit.
+
+        Storage-dtype contract: arithmetic runs in f32 regardless of the
+        substrate dtype (bf16 upcasts exactly), results are stored back at
+        the substrate dtype.  Under the f32 default every cast is a no-op,
+        so this path is bitwise-identical to the pre-dtype-knob executor.
         """
-        pred_prob = combine_probabilities(
+        store_dt = substrate.func_probs.dtype
+        pred32 = combine_probabilities(
             self.combine_params,
-            substrate.func_probs,
+            substrate.func_probs.astype(jnp.float32),
             substrate.exec_mask,
             prior=self.config.prior,
-        )  # [C, P]
-        joint = jnp.prod(
-            jnp.where(pred_mask[:, None, :], pred_prob[None], 1.0), axis=-1
-        )  # [S, C]
-        joint = jnp.where(active[:, None] & row_valid[None, :], joint, 0.0)
-        return pred_prob, binary_entropy(pred_prob), joint
+        )  # [C, P] f32
+        joint32 = jnp.prod(
+            jnp.where(pred_mask[:, None, :], pred32[None], 1.0), axis=-1
+        )  # [S, C] f32
+        joint32 = jnp.where(active[:, None] & row_valid[None, :], joint32, 0.0)
+        return (
+            pred32.astype(store_dt),
+            binary_entropy(pred32).astype(store_dt),
+            joint32.astype(store_dt),
+        )
 
     def _select_answers(self, joint_prob: jax.Array) -> threshold_lib.AnswerSelection:
+        # Selection consumes the STORED joint (upcast exactly to f32), so
+        # answer membership is always derivable from a checkpointed state
+        # regardless of the storage dtype; no-op under the f32 default.
+        joint_prob = joint_prob.astype(jnp.float32)
         if self.config.answer_mode == "approx":
             fn = functools.partial(
                 threshold_lib.select_answer_approx, alpha=self.config.alpha
@@ -369,6 +408,9 @@ class EpochProgram:
         if cfg.backend == "pallas":
             from repro.kernels.enrich_score import ops as es_ops
 
+            # raw storage dtype straight into the kernel: bf16 rows are
+            # upcast to f32 in-register inside each tile (dequant-in-tile),
+            # so no f32 copy of the substrate-derived rows ever hits HBM.
             tb = es_ops.fused_benefits_batched(
                 der.pred_prob, der.uncertainty, state_id,
                 der.joint_prob, self.table, self.costs,
@@ -376,9 +418,14 @@ class EpochProgram:
                 interpret=cfg.pallas_interpret,
             )
         else:
+            # the jnp backend has no tile boundary to hide the upcast in;
+            # dequantize at the input (exact, no-op under f32)
             tb = benefit_lib.compute_benefits_batched(
-                der.pred_prob, der.uncertainty, state_id,
-                der.joint_prob, self.table, self.costs,
+                der.pred_prob.astype(jnp.float32),
+                der.uncertainty.astype(jnp.float32),
+                state_id,
+                der.joint_prob.astype(jnp.float32),
+                self.table, self.costs,
                 function_selection=mode,
             )
         benefit, nf, est_joint, cost = tb
@@ -389,9 +436,10 @@ class EpochProgram:
             & row_valid[None, :, None]
         )
         benefit = jnp.where(valid, benefit, NEG_INF)
+        unc32 = der.uncertainty.astype(jnp.float32)
         cand = jax.vmap(
             lambda a, m: benefit_lib.candidate_mask(
-                der.uncertainty, a, cfg.candidate_strategy,
+                unc32, a, cfg.candidate_strategy,
                 pred_mask=m, row_valid=row_valid,
             )
         )(der.in_answer, state.pred_mask)  # [S, C]

@@ -70,6 +70,7 @@ from repro.core.executor import (
     SessionDerived,
     SessionEpochStats,
     SessionState,
+    resolve_substrate_dtype,
 )
 from repro.core.query import CompiledQuery
 from repro.core.state import SharedSubstrate
@@ -181,6 +182,10 @@ class EngineSession:
         self.capacity = int(capacity)
         self.max_tenants = int(max_tenants)
         self.config = config
+        # storage dtype of func_probs / bank_outputs / derived state;
+        # resolve_substrate_dtype raises on unknown names at construction,
+        # not deep inside the first allocation.
+        self.substrate_dtype = resolve_substrate_dtype(config.substrate_dtype)
         # capacity tiers: default max_capacity == capacity (no growth; the
         # pre-tier contract).  Each tier is shard-divisible, so sharded
         # planning survives growth unchanged.
@@ -266,8 +271,14 @@ class EngineSession:
         N0 may be anything up to ``max_capacity``; the session opens at the
         smallest tier that holds it, leaving the remaining rows pre-allocated
         for ``ingest``.  No tenants are active yet — ``admit`` fills slots.
+
+        Outputs are quantized HERE to ``config.substrate_dtype`` — the one
+        documented cast of the ingest path (everything downstream is
+        dtype-strict, see ``state.ingest_rows``).
         """
-        bank_outputs = jnp.asarray(bank_outputs, jnp.float32)
+        bank_outputs = jnp.asarray(bank_outputs)
+        if bank_outputs.dtype != self.substrate_dtype:
+            bank_outputs = bank_outputs.astype(self.substrate_dtype)
         n0, p, f = bank_outputs.shape
         if p != self.num_predicates or f != self.num_functions:
             raise ValueError(
@@ -288,14 +299,16 @@ class EngineSession:
             self.num_predicates,
             self.num_functions,
             prior=self.config.prior,
+            dtype=self.substrate_dtype,
             capacity=cap,
         )
+        dt = self.substrate_dtype
         state = SessionState(
             substrate=substrate,
             derived=SessionDerived(  # placeholder; refresh fills it
-                pred_prob=jnp.zeros((cap, self.num_predicates), jnp.float32),
-                uncertainty=jnp.zeros((cap, self.num_predicates), jnp.float32),
-                joint_prob=jnp.zeros((self.max_tenants, cap), jnp.float32),
+                pred_prob=jnp.zeros((cap, self.num_predicates), dt),
+                uncertainty=jnp.zeros((cap, self.num_predicates), dt),
+                joint_prob=jnp.zeros((self.max_tenants, cap), dt),
                 in_answer=jnp.zeros((self.max_tenants, cap), bool),
             ),
             bank_outputs=state_lib.pad_rows(bank_outputs, cap, self.config.prior),
@@ -500,7 +513,9 @@ class EngineSession:
         self.growths += 1
         return state
 
-    def grow(self, state: SessionState, min_rows: int) -> SessionState:
+    def grow(
+        self, state: SessionState, min_rows: int, *, num_rows: Optional[int] = None
+    ) -> SessionState:
         """Migrate a live session to the smallest capacity tier holding
         ``min_rows`` (no-op when the current tier already does).
 
@@ -510,15 +525,27 @@ class EngineSession:
         ``run`` compiles the superstep ONCE for the new tier — the bounded-
         recompile contract (``retrace_bound``).  Raises ``CapacityError``
         when ``min_rows`` exceeds the last tier.
+
+        ``num_rows`` may carry the host-shadowed occupied row count (it only
+        feeds the error payload); without it the count is read from the
+        device — the one blocking sync of this path, which shadow-holding
+        callers (the pipeline, the ingest ring) should never pay.
         """
         if min_rows <= state.capacity:
             return state
-        used = int(jax.device_get(state.num_rows))
+        used = (
+            int(jax.device_get(state.num_rows)) if num_rows is None else int(num_rows)
+        )
         grown = self._grow_padded(state, min_rows, used)
         return self.program.refresh(grown)
 
     def ingest(
-        self, state: SessionState, outputs: jax.Array, *, num_rows: Optional[int] = None
+        self,
+        state: SessionState,
+        outputs: jax.Array,
+        *,
+        num_rows: Optional[int] = None,
+        refresh: bool = True,
     ) -> SessionState:
         """Stream new objects into pre-allocated rows between supersteps.
 
@@ -533,9 +560,24 @@ class EngineSession:
 
         ``num_rows`` may carry the host-shadowed occupied row count (the
         async pipeline's no-sync path); by default it is read from the
-        device.
+        device.  ``refresh=False`` skips the derived-state recomputation —
+        for callers applying a BURST of ingests (the pending-row ring drain)
+        who refresh once at the end: refresh is idempotent w.r.t. the
+        substrate, so burst-then-refresh is bitwise identical to
+        refresh-per-batch at a fraction of the work.  A state whose last
+        ingest skipped the refresh must not run a superstep until refreshed.
+
+        Outputs are cast to the substrate dtype here — THE quantization
+        boundary.  The old unconditional ``asarray(outputs, float32)``
+        silently widened bf16 input (doubling H2D transfer bytes); now
+        already-conforming input passes through untouched.
         """
-        outputs = jnp.asarray(outputs, jnp.float32)
+        outputs = jnp.asarray(outputs)
+        if jnp.issubdtype(outputs.dtype, jnp.inexact):
+            if outputs.dtype != self.substrate_dtype:
+                outputs = outputs.astype(self.substrate_dtype)
+        else:  # int-ish probabilities make no sense; keep the legacy f32 coercion
+            outputs = outputs.astype(self.substrate_dtype)
         if outputs.ndim != 3 or outputs.shape[1:] != (
             self.num_predicates,
             self.num_functions,
@@ -565,7 +607,7 @@ class EngineSession:
             state.bank_outputs, state.num_rows, outputs
         )
         state = dataclasses.replace(state, bank_outputs=bank, num_rows=new_rows)
-        return self.program.refresh(state)
+        return self.program.refresh(state) if refresh else state
 
     # ---- drivers (delegating to the unified executor) ------------------------
 
@@ -738,6 +780,22 @@ class SessionPipeline:
         )
         self.num_rows += int(jnp.asarray(outputs).shape[0])
         self.events_staged += 1
+
+    def drain_ring(self, ring) -> int:
+        """Drain a ``repro.ingest.PendingRing`` into the in-flight carry.
+
+        Every pending slot applies as a refresh-free ingest and derived
+        state recomputes ONCE at the end — bitwise identical to ingesting
+        each batch directly (refresh is idempotent w.r.t. the substrate) at
+        a fraction of the work, and sync-free end to end: bounds checks and
+        tier growth run off the pipeline's host shadow.  Returns the number
+        of rows drained (0 when the ring was empty)."""
+        self.state, self.num_rows, drained = ring.drain_into(
+            self.session, self.state, self.num_rows
+        )
+        if drained:
+            self.events_staged += 1
+        return drained
 
     def admit(self, query: CompiledQuery, slot: Optional[int] = None) -> int:
         """Stage a tenant admission (slot chosen from the host shadow)."""

@@ -37,7 +37,30 @@ import jax.numpy as jnp
 
 from repro.core import combine as combine_lib
 from repro.core import entropy as entropy_lib
+from repro.core.errors import SubstrateDtypeError
 from repro.core.query import CompiledQuery
+
+
+def _check_float_dtype(buffer: jax.Array, values: jax.Array, where: str) -> None:
+    """Refuse mixed-float writes into a substrate buffer.
+
+    jnp promotion would silently widen a bf16 buffer to f32 (doubling HBM) or
+    silently quantize f32 inputs; both must be explicit casts at a documented
+    boundary (``EngineSession.ingest`` quantizes, nothing widens).  Dtypes are
+    static, so inside jit this raises at trace time.
+    """
+    if (
+        jnp.issubdtype(buffer.dtype, jnp.inexact)
+        and jnp.issubdtype(values.dtype, jnp.inexact)
+        and buffer.dtype != values.dtype
+    ):
+        raise SubstrateDtypeError(
+            f"{where}: substrate stores {buffer.dtype} but got {values.dtype} "
+            f"values; cast explicitly at the ingest/merge boundary",
+            expected=str(buffer.dtype),
+            got=str(values.dtype),
+            where=where,
+        )
 
 
 def _pack_state_id(exec_mask: jax.Array) -> jax.Array:
@@ -134,6 +157,12 @@ def init_substrate(
     indistinguishable from never-enriched objects (prior probs, empty exec
     mask); callers track which rows hold real objects via a row-validity mask
     (``row_validity``) and must exclude invalid rows from planning/selection.
+
+    ``dtype`` is the *storage* dtype of ``func_probs`` (f32 or bf16 — at 1M
+    rows the bf16 substrate halves HBM and H2D bytes; scoring upcasts to f32
+    in-register, see ``kernels/enrich_score``).  ``cost_spent`` is always f32:
+    the pay-as-you-go ledger accumulates and reconciles bills in f32, and
+    quantizing the spend counter would break that bitwise identity.
     """
     if capacity is None:
         capacity = num_objects
@@ -143,8 +172,19 @@ def init_substrate(
     return SharedSubstrate(
         func_probs=jnp.full((n, p, f), prior, dtype),
         exec_mask=jnp.zeros((n, p, f), bool),
-        cost_spent=jnp.zeros((), dtype),
+        cost_spent=jnp.zeros((), jnp.float32),
     )
+
+
+def substrate_hbm_bytes(
+    capacity: int, num_predicates: int, num_functions: int, dtype=jnp.float32
+) -> int:
+    """Device bytes held by a capacity-padded substrate (func_probs +
+    exec_mask + cost_spent) — what ``bench_meta`` reports so benchmark
+    artifacts record what the dtype choice buys at a given capacity."""
+    n, p, f = int(capacity), int(num_predicates), int(num_functions)
+    itemsize = jnp.dtype(dtype).itemsize
+    return n * p * f * itemsize + n * p * f * 1 + jnp.dtype(jnp.float32).itemsize
 
 
 def row_validity(capacity: int, num_rows: jax.Array) -> jax.Array:
@@ -194,7 +234,12 @@ def ingest_rows(
     traced offset): the buffer shape never changes, so downstream jitted
     programs keyed on it never retrace.  Callers bound-check M against the
     remaining capacity host-side (``EngineSession.ingest``).
+
+    Mixed-float writes raise ``SubstrateDtypeError`` — the old silent
+    ``astype(buffer.dtype)`` quantized (or widened) whatever arrived, which
+    hid the cast the session is supposed to make once, at its boundary.
     """
+    _check_float_dtype(buffer, new_rows, "ingest_rows")
     start = (jnp.asarray(num_rows, jnp.int32),) + (0,) * (buffer.ndim - 1)
     out = jax.lax.dynamic_update_slice(buffer, new_rows.astype(buffer.dtype), start)
     return out, jnp.asarray(num_rows, jnp.int32) + jnp.int32(new_rows.shape[0])
@@ -235,7 +280,12 @@ def apply_outputs_to_substrate(
     by construction, which is what makes Q overlapping queries cost ~1x, not
     Qx.  Callers are still expected to dedup within a plan (see
     ``plan.merge_plans_dedup``); this guard covers cross-epoch repeats.
+
+    ``probs`` must already be at the substrate's storage dtype (the bank
+    buffer is allocated at it) — a mixed-float scatter would silently widen
+    the whole substrate via jnp promotion, so it raises instead.
     """
+    _check_float_dtype(substrate.func_probs, probs, "apply_outputs_to_substrate")
     n = substrate.num_objects
     chargeable = chargeable_mask(substrate, object_idx, pred_idx, func_idx, valid)
     obj = jnp.where(valid, object_idx, n)  # out-of-range drops the scatter
@@ -331,7 +381,7 @@ def init_state(
         uncertainty=jnp.full((n, p), entropy_lib.binary_entropy(jnp.asarray(prior)), dtype),
         joint_prob=jnp.full((n,), prior**num_predicates, dtype),
         in_answer=jnp.zeros((n,), bool),
-        cost_spent=jnp.zeros((), dtype),
+        cost_spent=jnp.zeros((), jnp.float32),  # spend is always f32 (ledger identity)
     )
 
 
@@ -438,7 +488,12 @@ def with_cached_state(
 
     The starting state becomes the cached state; derived quantities are
     recombined so the first answer set already reflects cached enrichment.
+
+    Mixed-dtype merges raise ``SubstrateDtypeError``: ``jnp.where`` would
+    silently promote the whole ``func_probs`` buffer (bf16 state + f32 cache
+    -> f32 state), defeating the substrate's storage-dtype contract.
     """
+    _check_float_dtype(state.func_probs, cached_probs, "with_cached_state")
     merged_mask = state.exec_mask | cached_mask
     merged_probs = jnp.where(cached_mask, cached_probs, state.func_probs)
     new = dataclasses.replace(state, func_probs=merged_probs, exec_mask=merged_mask)

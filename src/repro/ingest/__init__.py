@@ -1,0 +1,16 @@
+"""Streaming ingestion front-end: staging, async transfer, pending-row ring.
+
+The million-row ingest path (ROADMAP "streaming ingestion front-end"):
+``IngestStream`` quantizes arriving rows into double-buffered staging
+memory and ships them with async ``device_put``; ``PendingRing`` parks the
+transferred micro-batches in a donated device ring until the session (or
+its pipeline — ``SessionPipeline.drain_ring``) drains them as refresh-free
+data updates; ``IngestBackpressure`` (re-exported from ``core.errors``) is
+the typed signal when enrichment falls behind arrivals.
+"""
+
+from repro.core.errors import IngestBackpressure
+from repro.ingest.ring import PendingRing
+from repro.ingest.stream import IngestStream
+
+__all__ = ["IngestBackpressure", "IngestStream", "PendingRing"]

@@ -34,6 +34,31 @@ benefit argmax over F *inside* the tile: the per-function delta table is
 gathered as a [T, F] matrix with a single one-hot matmul and the Eq. 11
 argmax runs in registers, so the [Q, N, P, F] tensor the jnp reference
 materializes in HBM never exists.
+
+**Dequant-in-tile:** the probability operands (pred_prob / uncertainty /
+joint) may arrive at the substrate's STORAGE dtype — bf16 under the
+million-row substrate — and every kernel body's first touch of those refs
+is ``.astype(jnp.float32)``: the upcast happens in-register on the tile
+just loaded from VMEM, all scoring math runs in f32, and outputs are f32.
+Since bf16 -> f32 is exact, a bf16-fed kernel computes on bitwise-identical
+inputs to one fed pre-upcast f32 copies, while HBM traffic for the
+substrate rows is halved.  Index-like operands (state id, predicate idx,
+candidate mask) stay f32 — they encode small integers exactly either way
+and feed one-hot matmuls directly.
+
+Exactness contract (pinned by the ops-level parity tests): the outputs
+that drive planning — ``benefit``, ``next_fn``, and the derived ``cost`` —
+are BITWISE identical between the bf16-fed kernel and its f32-upcast
+reference, in both table and best mode, and so are the session-level
+results built on them (plans, spend, answers).  The advisory ``est_joint``
+output is bitwise in table mode but only 1-ulp-stable in best mode: XLA
+duplicates the ``est_j`` chain into a separate output fusion, and whether
+the interpolation ``p_lo*(1-frac) + p_hi*frac`` gets FMA-contracted inside
+that fusion is a per-compilation codegen choice that the convert prefix of
+the bf16 graph can flip.  Pinning it would require forcing contraction off
+for the f32 graph too, perturbing the seed's f32 numerics — so the parity
+fixtures assert bitwise equality on benefit/next_fn/cost and <= 1 ulp on
+best-mode est_joint instead.
 """
 
 from __future__ import annotations

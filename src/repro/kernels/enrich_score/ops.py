@@ -39,14 +39,20 @@ def _tile_layout(n: int, p: int):
     Returns (rows, flatten, unflatten): ``flatten`` lays any [..., N, P]-
     shaped operand out as TILE-wide rows (leading axes preserved),
     ``unflatten`` strips the pad and restores [..., N, P].
+
+    ``flatten`` casts to ``dtype`` — f32 by default (index-like operands:
+    state ids, predicate indices, masks), but probability rows from a bf16
+    substrate pass ``dtype=x.dtype`` so the STORAGE dtype reaches the
+    kernel and the f32 upcast happens in-register inside the tile
+    (dequant-in-tile: no f32 copy of the substrate rows ever lands in HBM).
     """
     m = n * p
     pad = (-m) % TILE
     rows = (m + pad) // TILE
 
-    def flatten(x, fill=0.0):
+    def flatten(x, fill=0.0, dtype=jnp.float32):
         lead = x.shape[:-2]
-        x = x.reshape(lead + (-1,)).astype(jnp.float32)
+        x = x.reshape(lead + (-1,)).astype(dtype)
         widths = [(0, 0)] * len(lead) + [(0, pad)]
         x = jnp.pad(x, widths, constant_values=fill)
         return x.reshape(lead + (rows, TILE))
@@ -124,9 +130,32 @@ def fused_benefits_batched(
 
     Validity/candidate masking beyond exhausted triples (pred_mask, §4.1) is
     the caller's job, mirroring ``compute_benefits_batched``.
+
+    Probability inputs may be bf16 (the bf16 substrate's derived rows):
+    they ship to the kernel AT storage dtype and dequantize to f32
+    in-register inside each tile, where every Eq. 11 term — entropy deltas,
+    benefit ratio, best-mode argmax — runs in f32 exactly as if the caller
+    had upcast first (bf16 -> f32 is exact; benefit/next_fn/cost are
+    bitwise against the upcast reference, best-mode est_joint is 1-ulp
+    stable — see the kernel module docstring for the exactness contract
+    the parity tests pin).  Mixed probability dtypes raise
+    ``SubstrateDtypeError`` — a silent promotion here would materialize the
+    f32 copy the tile path exists to avoid.
     """
     if interpret is None:
         interpret = _is_cpu()
+    if not (pred_prob.dtype == uncertainty.dtype == joint_prob.dtype):
+        from repro.core.errors import SubstrateDtypeError
+
+        raise SubstrateDtypeError(
+            f"fused scoring needs one probability dtype; got pred_prob="
+            f"{pred_prob.dtype}, uncertainty={uncertainty.dtype}, "
+            f"joint_prob={joint_prob.dtype}",
+            expected=str(pred_prob.dtype),
+            got=f"{uncertainty.dtype}/{joint_prob.dtype}",
+            where="fused_benefits_batched",
+        )
+    row_dt = pred_prob.dtype
     n, p = pred_prob.shape
     q = joint_prob.shape[0]
     f = costs.shape[1]
@@ -135,12 +164,12 @@ def fused_benefits_batched(
 
     pred_idx = jnp.broadcast_to(jnp.arange(p, dtype=jnp.int32)[None], (n, p))
     shared = (
-        flat(pred_prob),
-        flat(uncertainty),
+        flat(pred_prob, dtype=row_dt),
+        flat(uncertainty, dtype=row_dt),
         flat(state_id.astype(jnp.float32)),
         flat(pred_idx.astype(jnp.float32)),
     )
-    joint_b = flat(jnp.broadcast_to(joint_prob[:, :, None], (q, n, p)))
+    joint_b = flat(jnp.broadcast_to(joint_prob[:, :, None], (q, n, p)), dtype=row_dt)
     lut = jnp.asarray(_inverse_entropy_table(lut_bins))
 
     if function_selection == "best":

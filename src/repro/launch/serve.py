@@ -323,6 +323,7 @@ def build_session_server(
     plan_shards: int = 1,
     backend: str = "jnp",
     max_capacity: Optional[int] = None,
+    substrate_dtype: str = "float32",
 ):
     """Long-lived serving session over a simulated (AUC-calibrated) corpus.
 
@@ -361,12 +362,83 @@ def build_session_server(
         config=MultiQueryConfig(
             plan_size=plan_size, function_selection="best",
             num_shards=plan_shards, backend=backend,
+            substrate_dtype=substrate_dtype,
         ),
         max_capacity=max_capacity,
     )
     state = session.init_state(evalc.func_probs[:num_objects])
     pool = evalc.func_probs[num_objects:limit]
     return session, state, pool, preds
+
+
+class StreamingIngest:
+    """Routes ``ingest`` trace events through the staging/ring front-end.
+
+    Owns a ``PendingRing`` sized by the ``--ingest-*`` flags and an
+    ``IngestStream`` whose backpressure callback drains the ring back into
+    the serve loop — lockstep drains through a host ``num_rows`` shadow
+    (one device sync at attach, none per event), overlap drains through
+    ``SessionPipeline.drain_ring`` against the in-flight carry — so a full
+    ring under the ``block`` policy resolves itself instead of deadlocking.
+    """
+
+    def __init__(
+        self,
+        session: EngineSession,
+        *,
+        batch_rows: int,
+        num_slots: int = 4,
+        policy: str = "block",
+        rate_rows_per_s: Optional[float] = None,
+    ):
+        from repro.ingest import IngestStream, PendingRing
+
+        self.ring = PendingRing(
+            session, slot_rows=batch_rows, num_slots=num_slots, policy=policy
+        )
+        self.stream = IngestStream(
+            self.ring, batch_rows=batch_rows,
+            rate_rows_per_s=rate_rows_per_s, on_pressure=self.drain,
+        )
+        self._session = session
+        self._pipe = None
+        self._state = None
+        self._num_rows: Optional[int] = None
+        self.drains = 0
+
+    def attach_pipeline(self, pipe) -> None:
+        self._pipe = pipe
+
+    def attach_lockstep(self, state) -> None:
+        self._state = state
+        self._num_rows = int(state.num_rows)  # one sync, at attach time
+
+    def begin(self, state) -> None:
+        """Lockstep only: adopt the loop's current state before feed/drain
+        (run/admit/retire events advanced it since the last ingest)."""
+        self._state = state
+
+    @property
+    def state(self):
+        """Lockstep only: the state after the last feed/drain."""
+        return self._state
+
+    def feed(self, rows) -> int:
+        return self.stream.feed(rows)
+
+    def drain(self) -> None:
+        if self._pipe is not None:
+            if self._pipe.drain_ring(self.ring):
+                self.drains += 1
+            return
+        self._state, self._num_rows, drained = self.ring.drain_into(
+            self._session, self._state, self._num_rows
+        )
+        if drained:
+            self.drains += 1
+
+    def counters(self) -> dict:
+        return self.stream.counters()
 
 
 def parse_trace(spec: str) -> list:
@@ -430,6 +502,11 @@ class SessionServeReport:
     # ---- degraded-mode enrichment (quarantine) ----
     quarantined: list = dataclasses.field(default_factory=list)  # [[pred, func]]
     degraded: bool = False  # any enrichment function quarantined at the end
+    # ---- streaming ingestion (staging + pending-row ring) ----
+    streaming: bool = False  # ingest events routed through the ring front-end
+    substrate_dtype: str = "float32"  # storage dtype of the session substrate
+    ring_drains: int = 0  # times the ring flushed into the session
+    ingest_counters: dict = dataclasses.field(default_factory=dict)
 
 
 HOST_META_FORMAT = 1  # driver-shadow block version inside extra["host"]
@@ -449,6 +526,7 @@ def serve_session_trace(
     resume: Optional[dict] = None,
     heartbeat: Optional[Heartbeat] = None,
     boundary_hook=None,
+    streaming: Optional[StreamingIngest] = None,
 ) -> SessionServeReport:
     """Drive a scripted arrival trace through one long-lived session.
 
@@ -485,6 +563,14 @@ def serve_session_trace(
     fault clock: a hook that trips the preemption handler stops dispatch
     and force-saves at that same superstep boundary
     (``runtime.supervisor``).
+
+    With ``streaming`` (``--ingest-batch``), ingest events stage their rows
+    through the double-buffered transfer path into the pending-row ring
+    instead of applying directly; the ring drains into the session before
+    every run event, before overlap-mode event-boundary checkpoints (ring
+    contents are not part of a snapshot — drain-then-save keeps restores
+    exact), and once at the end.  Results are bitwise identical to direct
+    ingest; only the transfer/backpressure schedule differs.
     """
     rng = np.random.default_rng(seed)
     pool_off = 0
@@ -528,6 +614,11 @@ def serve_session_trace(
         if overlap
         else None
     )
+    if streaming is not None:
+        if pipe is not None:
+            streaming.attach_pipeline(pipe)
+        else:
+            streaming.attach_lockstep(state)
     preempted = False
     events_done = start_event
     t0 = time.perf_counter()
@@ -542,6 +633,13 @@ def serve_session_trace(
             if run_epochs <= 0:
                 events_done = idx + 1
                 continue
+            if streaming is not None:
+                # pending ring rows join planning before these epochs run
+                if pipe is None:
+                    streaming.begin(state)
+                streaming.drain()
+                if pipe is None:
+                    state = streaming.state
             if pipe is not None:
                 n_chunks = len(pipe._chunks)
                 pipe.run(run_epochs)
@@ -618,7 +716,13 @@ def serve_session_trace(
                     f"({0 if pool is None else pool.shape[0] - pool_off})"
                 )
             batch = pool[pool_off:pool_off + arg]
-            if pipe is not None:
+            if streaming is not None:
+                if pipe is None:
+                    streaming.begin(state)
+                streaming.feed(batch)
+                if pipe is None:
+                    state = streaming.state
+            elif pipe is not None:
                 pipe.ingest(batch)
             else:
                 state = session.ingest(state, batch)
@@ -630,12 +734,22 @@ def serve_session_trace(
                 state = session.retire(state, arg)
         events_done = idx + 1
         if pipe is not None and checkpointer is not None:
+            if streaming is not None:
+                streaming.drain()  # ring rows are not part of a snapshot
             # overlap cadence: event boundaries (drains the in-flight chunks)
             pipe.checkpoint(
                 checkpointer, epochs_total,
                 host_meta=host_meta(idx + 1, 0, epochs_total),
                 force=False,
             )
+    if streaming is not None:
+        # rows still parked in the ring (trace ended on ingest, or shed/spill
+        # holdover) land before the final answers are read
+        if pipe is None:
+            streaming.begin(state)
+        streaming.drain()
+        if pipe is None:
+            state = streaming.state
     if pipe is not None:
         state, history = pipe.finish()  # the pipeline's single sync point
     if preempted and checkpointer is not None:
@@ -698,6 +812,10 @@ def serve_session_trace(
         ),
         quarantined=quarantined,
         degraded=bool(quarantined),
+        streaming=streaming is not None,
+        substrate_dtype=session.config.substrate_dtype,
+        ring_drains=0 if streaming is None else streaming.drains,
+        ingest_counters={} if streaming is None else streaming.counters(),
     )
 
 
@@ -730,6 +848,27 @@ def main(argv=None):
     ap.add_argument("--trace", default=None,
                     help="session arrival trace, e.g. "
                          "'admit:2;run:4;ingest:64;admit:3;run:4;retire:0;run:4'")
+    ap.add_argument("--substrate-dtype", default="float32",
+                    choices=("float32", "bfloat16"),
+                    help="storage dtype of the session substrate (func_probs "
+                         "and derived probabilities; bfloat16 halves HBM at "
+                         "unchanged f32 scoring math — dequant-in-tile)")
+    ap.add_argument("--ingest-batch", type=int, default=None, metavar="ROWS",
+                    help="stream ingest trace events through the staging + "
+                         "pending-row-ring front-end in micro-batches of this "
+                         "many rows (enables streaming ingestion; results "
+                         "stay bitwise identical to direct ingest)")
+    ap.add_argument("--ring-capacity", type=int, default=4, metavar="SLOTS",
+                    help="pending-row ring slots; arrivals beyond "
+                         "ring + drain rate hit --ingest-policy")
+    ap.add_argument("--ingest-rate", type=float, default=None,
+                    metavar="ROWS_PER_S",
+                    help="throttle staged arrivals to this many rows/s "
+                         "(default: unthrottled)")
+    ap.add_argument("--ingest-policy", default="block",
+                    choices=("block", "shed", "spill"),
+                    help="full-ring behavior: block (drain then retry), shed "
+                         "(drop + count), spill (host-side FIFO overflow)")
     ap.add_argument("--chunk-size", type=int, default=None,
                     help="scan dispatch granularity: run events scan this many "
                          "epochs per device dispatch (bitwise inert; the unit "
@@ -785,7 +924,17 @@ def main(argv=None):
             num_preds=max(args.preds, 2), max_tenants=args.max_tenants,
             plan_shards=args.plan_shards, backend=args.backend,
             max_capacity=args.max_capacity,
+            substrate_dtype=args.substrate_dtype,
         )
+        streaming = None
+        if args.ingest_batch is not None:
+            if args.supervise:
+                ap.error("--ingest-batch is not wired into --supervise yet")
+            streaming = StreamingIngest(
+                session, batch_rows=args.ingest_batch,
+                num_slots=args.ring_capacity, policy=args.ingest_policy,
+                rate_rows_per_s=args.ingest_rate,
+            )
         checkpointer = None
         if args.checkpoint_dir:
             checkpointer = SessionCheckpointer(
@@ -862,6 +1011,7 @@ def main(argv=None):
                 preemption=handler, overlap=args.overlap,
                 chunk_size=args.chunk_size,
                 checkpointer=checkpointer, resume=resume,
+                streaming=streaming,
             )
         eps = report.epochs / max(report.wall_s, 1e-9)
         bills = {i: f"{c:.3f}" for i, c in enumerate(report.attributed) if c > 0}
@@ -884,6 +1034,18 @@ def main(argv=None):
             + (" [PREEMPTED: drained + checkpointed]"
                if report.preempted else "")
         )
+        if report.streaming:
+            c = report.ingest_counters
+            print(
+                f"[serve] streaming ingest ({args.substrate_dtype} substrate, "
+                f"batch={args.ingest_batch} x {args.ring_capacity} slots, "
+                f"policy={args.ingest_policy}): "
+                f"{c.get('pushed_rows', 0)} rows staged, "
+                f"{report.ring_drains} drains, "
+                f"blocked={c.get('blocked', 0)}, "
+                f"shed={c.get('shed_rows', 0)}, "
+                f"spilled={c.get('spilled_rows', 0)}"
+            )
         if args.report:
             payload = {
                 k: getattr(report, k)
@@ -895,6 +1057,8 @@ def main(argv=None):
                     "preempted", "restored_step", "scan_lengths",
                     "checkpoint_saves", "active_tenants", "mean_expected_f",
                     "quarantined", "degraded",
+                    "streaming", "substrate_dtype", "ring_drains",
+                    "ingest_counters",
                 )
             }
             if supervision is not None:
