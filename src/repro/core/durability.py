@@ -67,7 +67,10 @@ from repro.core.state import SharedSubstrate
 # 3: the substrate storage dtype became a session parameter — float leaves
 #    (func_probs / bank_outputs / derived) persist at ``substrate_dtype``
 #    (recorded in the extra block; the store round-trips bf16 bitwise) and
-#    restore refuses a dtype mismatch instead of silently casting.
+#    restore refuses a dtype mismatch instead of silently casting.  A
+#    format-2 checkpoint is byte-identical to format 3 at float32, so
+#    restore still accepts it by defaulting the missing ``substrate_dtype``
+#    field to "float32" (the schema gate then arbitrates as usual).
 CHECKPOINT_FORMAT = 3
 
 
@@ -241,7 +244,12 @@ def restore_session_checkpoint(
     meta = store.load_meta(root, step)
     extra = meta.get("extra", {})
     fmt = extra.get("format")
-    if fmt != CHECKPOINT_FORMAT:
+    if fmt == 2:
+        # format 2 predates the substrate-dtype parameter; its leaf set and
+        # layout are byte-identical to format 3 at float32, so default the
+        # missing field and let the schema gate below arbitrate
+        extra.setdefault("substrate_dtype", "float32")
+    elif fmt != CHECKPOINT_FORMAT:
         raise ValueError(
             f"checkpoint format {fmt!r} != supported {CHECKPOINT_FORMAT} "
             "(not a session checkpoint, or from an incompatible version)"

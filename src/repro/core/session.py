@@ -573,10 +573,7 @@ class EngineSession:
         already-conforming input passes through untouched.
         """
         outputs = jnp.asarray(outputs)
-        if jnp.issubdtype(outputs.dtype, jnp.inexact):
-            if outputs.dtype != self.substrate_dtype:
-                outputs = outputs.astype(self.substrate_dtype)
-        else:  # int-ish probabilities make no sense; keep the legacy f32 coercion
+        if outputs.dtype != self.substrate_dtype:
             outputs = outputs.astype(self.substrate_dtype)
         if outputs.ndim != 3 or outputs.shape[1:] != (
             self.num_predicates,

@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.errors import IngestBackpressure
+from repro.core.errors import CapacityError, IngestBackpressure
 
 _POLICIES = ("block", "shed", "spill")
 
@@ -238,7 +238,28 @@ class PendingRing:
         re-enter freed slots FIFO and drain in the same pass, so a drain
         leaves the ring truly empty unless the spill queue outruns the ring
         again.
+
+        All-or-nothing: capacity is checked against the TOTAL pending rows
+        (ring + spill queue) before any slot is applied, so a
+        ``CapacityError`` raises with the ring shadows, the spill queue, and
+        ``state`` all untouched — a caller that catches it (e.g. to shrink
+        load and retry) loses nothing.  A mid-drain raise would instead pop
+        applied slots from the shadows while the accumulated state/num_rows
+        die with the exception.
         """
+        total = self.pending_rows + sum(
+            int(b.shape[0]) for b in self._spilled
+        )
+        if num_rows + total > session.max_capacity:
+            raise CapacityError(
+                f"draining {total} pending rows overflows capacity "
+                f"({num_rows} rows used, max_capacity="
+                f"{session.max_capacity}); nothing was applied — shrink the "
+                "backlog or open the session with a larger max_capacity",
+                used=num_rows,
+                capacity=session.max_capacity,
+                requested=total,
+            )
         drained = 0
         while self._count or self._spilled:
             while self._count:

@@ -10,10 +10,11 @@ The transfer path the ROADMAP's streaming front-end calls for:
    is itself async — so transfer N overlaps both the slot write of batch
    N-1 and whatever scan chunks the session pipeline has in flight;
 4. a staging buffer is reused only after the RING WRITE that consumed it is
-   done (``block_until_ready`` on the ring buffer version two pushes back —
-   not on the transfer, because ``device_put`` of a numpy view may alias on
-   CPU backends, and "transfer complete" would not mean "safe to
-   overwrite").
+   done (``block_until_ready`` on the LIVE ring buffer — not on the
+   transfer, because ``device_put`` of a numpy view may alias on CPU
+   backends, and "transfer complete" would not mean "safe to overwrite";
+   and not on a stored buffer version, because the donated write path
+   deletes every superseded version on the very next push).
 
 With two buffers the steady state is the classic overlap-by-one: the host
 quantizes batch N+1 while the device absorbs batch N.  Throttling
@@ -32,6 +33,14 @@ import numpy as np
 
 from repro.core.errors import IngestBackpressure
 from repro.ingest.ring import PendingRing
+
+# Reuse-gate sentinel: "the ring write that consumed this staging buffer".
+# We must NOT store the ring-buffer version itself — under the donated
+# write path the very next push donates that version away, and blocking on
+# a donated/deleted buffer raises on GPU/TPU.  Blocking on the LIVE ring
+# buffer is equivalent: single-device dispatch is in-order, so the live
+# version being ready implies every earlier slot write has completed.
+_RING_WRITE = object()
 
 
 class IngestStream:
@@ -71,8 +80,9 @@ class IngestStream:
             np.zeros((self.batch_rows, p, f), dt),
             np.zeros((self.batch_rows, p, f), dt),
         ]
-        # per-buffer consumption token: the ring-buffer version whose slot
-        # write read this staging buffer's transfer; ready => safe to reuse
+        # per-buffer consumption token: what must settle before the buffer
+        # is safe to overwrite — ``_RING_WRITE`` (gate on the live ring
+        # buffer) after a landed push, or the orphaned transfer after a shed
         self._consumed: list = [None, None]
         self._next = 0
         self._t_next_send = 0.0  # rate-limit horizon (monotonic seconds)
@@ -87,7 +97,9 @@ class IngestStream:
         i = self._next
         token = self._consumed[i]
         if token is not None:
-            jax.block_until_ready(token)
+            jax.block_until_ready(
+                self.ring._buf if token is _RING_WRITE else token
+            )
             self._consumed[i] = None
         m = rows.shape[0]
         buf = self._staging[i]
@@ -127,9 +139,10 @@ class IngestStream:
                         raise
                     self.on_pressure()  # drain; the retry reuses `dev`
             if ok:
-                # safe-reuse token: when this ring version is ready, the slot
-                # write that consumed `dev` (hence staging buffer i) is done
-                self._consumed[i] = self.ring._buf
+                # safe-reuse gate: the slot write that consumed `dev` (hence
+                # staging buffer i) — resolved against the LIVE ring buffer
+                # at _stage time, never a version the next push may donate
+                self._consumed[i] = _RING_WRITE
                 landed += chunk.shape[0]
             else:  # shed: nothing consumed the transfer; buffer reusable when
                 self._consumed[i] = dev  # the (now pointless) H2D settles

@@ -11,6 +11,7 @@ signals, no sleeps); and ``prune_old`` can never delete the last restore
 point.
 """
 
+import json
 import signal
 
 import jax
@@ -281,6 +282,36 @@ def test_restore_validates_format_schema_and_capacity(tmp_path):
     assert [(p, l.shape, l.dtype) for p, l in flat_spec] == [
         (p, l.shape, l.dtype) for p, l in flat_live
     ]
+
+
+def test_format2_checkpoint_restores_into_float32_session(tmp_path):
+    """A format-2 checkpoint (pre-dtype-parameter) is byte-identical to
+    format 3 at float32: restore defaults the missing ``substrate_dtype``
+    to "float32" and succeeds bitwise, instead of refusing every checkpoint
+    the fleet wrote before the format bump.  A bf16 session still refuses —
+    there are no bf16 bits in it to restore."""
+    preds, corpus, combine, table = _world(num_objects=64)
+    sess = _session(preds, corpus, combine, table, capacity=64)
+    st = sess.init_state(corpus.func_probs)
+    path = save_session_checkpoint(tmp_path, 0, sess, st)
+    meta_file = path / "meta.json"
+    meta = json.loads(meta_file.read_text())
+    assert meta["extra"]["format"] == 3  # downgrade to a pre-bump layout
+    meta["extra"]["format"] = 2
+    del meta["extra"]["substrate_dtype"]
+    meta_file.write_text(json.dumps(meta))
+    rst, step, extra = restore_session_checkpoint(sess, tmp_path)
+    assert step == 0 and extra["substrate_dtype"] == "float32"
+    for a, b in zip(jax.tree_util.tree_leaves(rst),
+                    jax.tree_util.tree_leaves(st)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    bf = EngineSession(
+        [p.positive() for p in preds], table, combine, corpus.costs,
+        capacity=64, max_tenants=3,
+        config=MultiQueryConfig(plan_size=32, substrate_dtype="bfloat16"),
+    )
+    with pytest.raises(ValueError, match="substrate_dtype"):
+        restore_session_checkpoint(bf, tmp_path)
 
 
 # --------------------------------------- deterministic preemption/heartbeat --

@@ -263,6 +263,31 @@ def test_stream_feed_micro_batches_and_partial_tail():
     np.testing.assert_array_equal(np.asarray(state.bank_outputs[16:35]), wave)
 
 
+def test_stream_reuse_tokens_never_hold_ring_versions():
+    """The safe-reuse gate is a sentinel resolved against the LIVE ring
+    buffer at stage time.  Storing a ring-buffer VERSION instead would block
+    on a buffer the next donated push deletes — an XlaRuntimeError on every
+    platform that selects the donating write path (GPU/TPU), invisible to
+    the CPU fallback."""
+    from repro.ingest.stream import _RING_WRITE
+
+    sess, corpus, _ = _session(capacity=N)
+    state = sess.init_state(corpus.func_probs[:8])
+    ring = PendingRing(sess, slot_rows=4, num_slots=8)
+    stream = IngestStream(ring, batch_rows=4)
+    first = np.asarray(_rows(20, seed=9))  # 5 micro-batches: both staging
+    assert stream.feed(first) == 20  # buffers recycle through the gate
+    assert all(t is None or t is _RING_WRITE for t in stream._consumed)
+    second = np.asarray(_rows(8, seed=10))  # re-stages via the blocked path
+    assert stream.feed(second) == 8
+    state, num_rows, drained = ring.drain_into(sess, state, 8)
+    assert (drained, num_rows) == (28, 36)
+    np.testing.assert_array_equal(
+        np.asarray(state.bank_outputs[8:36]),
+        np.concatenate([first, second]),
+    )
+
+
 def test_stream_backpressure_callback_drains_and_retries():
     """A blocked push invokes on_pressure (which drains) and retries the
     SAME device batch — every row lands despite a ring smaller than the
@@ -342,6 +367,33 @@ def test_ingest_capacity_error_payload():
     with pytest.raises(CapacityError) as ei2:
         ring.drain_into(sess, state, 30)
     assert (ei2.value.used, ei2.value.requested) == (30, 5)
+
+
+def test_drain_capacity_precheck_is_all_or_nothing():
+    """A drain that cannot fit raises BEFORE applying any slot: ring
+    shadows, spill queue, and counters stay intact, so a caller that frees
+    capacity retries without losing a row."""
+    sess, corpus, _ = _session(capacity=32)
+    state = sess.init_state(corpus.func_probs[:30])
+    ring = PendingRing(sess, slot_rows=4, num_slots=2, policy="spill")
+    fed = [np.asarray(_rows(4, seed=40 + s)) for s in range(3)]
+    for batch in fed:  # 2 ring slots + 1 spilled batch = 12 pending rows
+        assert ring.push(jnp.asarray(batch))
+    before = dict(ring.counters)
+    with pytest.raises(CapacityError) as ei:
+        ring.drain_into(sess, state, 30)
+    e = ei.value
+    assert (e.used, e.capacity, e.requested) == (30, 32, 12)
+    assert ring.occupied == 2 and ring.pending_rows == 8
+    assert ring.spilled_pending == 1
+    assert ring.counters == before
+    # retry against freed capacity: every pending row lands, in order
+    state2 = sess.init_state(corpus.func_probs[:16])
+    state2, num_rows, drained = ring.drain_into(sess, state2, 16)
+    assert (drained, num_rows) == (12, 28)
+    np.testing.assert_array_equal(
+        np.asarray(state2.bank_outputs[16:28]), np.concatenate(fed)
+    )
 
 
 # ---------------------------------------------------- dtype-parameterized --
