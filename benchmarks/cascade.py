@@ -1,0 +1,231 @@
+"""Model-cascade enrichment benchmark: fused in-scan forwards vs the legacy
+per-epoch host-dispatch loop.
+
+PIQUE's motivating workload is EXPENSIVE ML tagging functions executed
+progressively during query processing (paper section 3), and the DSP-
+enrichment evaluation line in PAPERS.md found dispatch overhead dominating
+at high event rates.  This benchmark runs the SAME multi-query workload
+over the REAL ``ModelCascadeBank`` (trained probes + transformer-backbone
+heads) through both execution postures:
+
+* **loop** — the pre-fusion posture: a wrapper bank hides ``supports_scan``
+  and routes ``execute`` to ``ModelCascadeBank.execute_host`` (host numpy
+  grouping, one jitted forward per non-empty (pred, level) group), so the
+  engine falls back to the per-epoch legacy loop — two jitted stages plus
+  host round-trips every epoch;
+* **scan** — the traceable bank: stacked per-predicate parameters, lane-sort
+  dispatch, shared-trunk backbone — the whole plan -> execute -> apply epoch
+  fused into ``EpochProgram.run_scan`` with zero host round-trips.
+
+Parity is re-checked in-bench at two layers: raw probability parity of
+``execute`` vs ``execute_host`` on a live merged plan (documented f32
+tolerance — the fused path reassociates the head einsums), and per-epoch
+answer-set / cost parity between the two drivers.  Results land in
+``BENCH_cascade.json`` with the standard ``bench_meta`` block.
+
+    python -m benchmarks.cascade [--full] [--out BENCH_cascade.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_meta, time_to_quality
+from repro.core import MultiQueryConfig, MultiQueryEngine, build_query_set
+from repro.core.state import substrate_hbm_bytes
+from repro.data.synthetic import truth_answer_mask
+from repro.launch.serve import _offline_phase
+
+# f32 tolerance for execute vs execute_host probability parity: both paths
+# compute the same math, but the fused bank's stacked einsums reassociate
+# the probe/head contractions (documented contract, see README).
+PROB_PARITY_ATOL = 1e-5
+
+
+class _HostLoopCascadeBank:
+    """The pre-fusion posture: ``supports_scan`` hidden (the engine must
+    route to the per-epoch legacy loop) and ``execute`` delegated to the
+    host-grouping oracle ``execute_host``."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.costs = inner.costs
+        self.available = inner.available
+
+    def execute(self, plan):
+        return self.inner.execute_host(plan)
+
+
+def _make_engines(n: int, q: int, num_preds: int, plan_size: int,
+                  backbone_arch: str, train_size: int):
+    preds, evalc, bank, combine, table, _q = _offline_phase(
+        n, num_preds, backbone_arch, seed=0, train_size=train_size,
+    )
+    rng = np.random.default_rng(1)
+    queries = []
+    from repro.core import conjunction
+
+    for _ in range(q):
+        cols = sorted(rng.choice(num_preds, size=min(2, num_preds), replace=False))
+        queries.append(conjunction(*[preds[c] for c in cols]))
+    query_set = build_query_set(
+        queries, global_predicates=[p.positive() for p in preds]
+    )
+    truths = jnp.stack(
+        [truth_answer_mask(evalc, rq) for rq in query_set.reindexed]
+    )
+    cfg = MultiQueryConfig(plan_size=plan_size, function_selection="best")
+
+    def engine(b):
+        return MultiQueryEngine(
+            query_set, table, combine, bank.costs, b, cfg, truth_masks=truths
+        )
+
+    return engine(bank), engine(_HostLoopCascadeBank(bank)), bank
+
+
+def bench_cascade(small: bool = True, out_path: str = "BENCH_cascade.json"):
+    n = 192 if small else 1024
+    q = 4 if small else 8
+    num_preds = 3
+    epochs = 8 if small else 16
+    plan_size = 32 if small else 128
+    backbone_arch = "qwen3-1.7b"  # reduced (smoke) config off the accelerator
+    scan_engine, loop_engine, bank = _make_engines(
+        n, q, num_preds, plan_size, backbone_arch, train_size=256 if small else 512
+    )
+
+    # ---- probability parity on a LIVE merged plan (not a synthetic one) ----
+    state = scan_engine.init_state(n)
+    _plans, merged = scan_engine._plan_fn(state)
+    fused = np.asarray(bank.execute(merged), np.float32)
+    host = np.asarray(bank.execute_host(merged), np.float32)
+    prob_max_abs_diff = float(np.abs(fused - host).max())
+    prob_parity = prob_max_abs_diff <= PROB_PARITY_ATOL
+
+    # warm both drivers (compile + trace) before timing steady state
+    loop_engine.run(n, epochs, stop_when_exhausted=False)
+    scan_engine.run_scan(n, epochs, stop_when_exhausted=False)
+
+    t0 = time.perf_counter()
+    _sl, hist_loop = loop_engine.run(n, epochs, stop_when_exhausted=False)
+    t_loop = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    _ss, hist_scan = scan_engine.run_scan(n, epochs, stop_when_exhausted=False)
+    t_scan = time.perf_counter() - t0
+
+    # ---- driver parity: answer sets + spend, epoch by epoch ----------------
+    loop_masks = [h.answer_mask for h in loop_engine._run_legacy_loop(
+        loop_engine.init_state(n), epochs, False, collect_masks=True
+    )[1]]
+    _, hist_scan_m = scan_engine.run_scan(
+        n, epochs, stop_when_exhausted=False, collect_masks=True
+    )
+    answer_parity = all(
+        np.array_equal(lm, h.answer_mask)
+        for lm, h in zip(loop_masks, hist_scan_m)
+    )
+    cost_parity = all(
+        np.isclose(a.cost_spent, b.cost_spent, rtol=1e-5)
+        for a, b in zip(hist_loop, hist_scan)
+    )
+    parity = prob_parity and answer_parity and cost_parity
+
+    triples = int(sum(h.merged_valid for h in hist_scan))
+
+    def side(wall, hist):
+        eps = epochs / max(wall, 1e-9)
+        # cumulative wall is amortized uniformly over the run's epochs (the
+        # scan driver has no per-epoch host stamps by design)
+        stamps = [((e + 1) / eps, h.mean_expected_f) for e, h in enumerate(hist)]
+        return dict(
+            wall_s=wall,
+            epochs_per_sec=eps,
+            triples_per_sec=triples / max(wall, 1e-9),
+            final_mean_expected_f=hist[-1].mean_expected_f if hist else 0.0,
+            stamps=stamps,
+        )
+
+    loop_side, scan_side = side(t_loop, hist_loop), side(t_scan, hist_scan)
+    target = 0.95 * scan_side["final_mean_expected_f"]
+    for s in (loop_side, scan_side):
+        s["time_to_quality_s"] = time_to_quality(s.pop("stamps"), target)
+    speedup = scan_side["epochs_per_sec"] / max(loop_side["epochs_per_sec"], 1e-9)
+
+    payload = dict(
+        benchmark="cascade",
+        meta=bench_meta(
+            capacity=n, active_tenants=q,
+            backend="jnp", num_shards=1,
+            substrate_dtype="float32",
+            substrate_hbm_bytes=substrate_hbm_bytes(
+                n, num_preds, int(bank.costs.shape[1])
+            ),
+        ),
+        config=dict(
+            num_objects=n, num_queries=q, epochs=epochs, plan_size=plan_size,
+            num_preds=num_preds, bank="cascade", backbone=backbone_arch,
+            num_levels=int(bank.costs.shape[1]), small=small,
+        ),
+        loop=loop_side,
+        scan=scan_side,
+        speedup=speedup,
+        quality_target=target,
+        executed_triples=triples,
+        parity=dict(
+            probabilities_equal=bool(prob_parity),
+            prob_max_abs_diff=prob_max_abs_diff,
+            prob_atol=PROB_PARITY_ATOL,
+            answer_sets_equal=bool(answer_parity),
+            cost_spent_equal=bool(cost_parity),
+            all=bool(parity),
+        ),
+        per_epoch=[
+            dict(
+                epoch=h.epoch,
+                cost_spent=h.cost_spent,
+                merged_valid=h.merged_valid,
+                mean_expected_f=h.mean_expected_f,
+            )
+            for h in hist_scan
+        ],
+    )
+    with open(out_path, "w") as fh:
+        json.dump(payload, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+
+    return [
+        dict(
+            name=f"cascade_Q{q}_N{n}_P{num_preds}",
+            us_per_call=1e6 / scan_side["epochs_per_sec"],
+            derived=(
+                f"speedup={speedup:.2f}x"
+                f";loop_eps={loop_side['epochs_per_sec']:.2f}"
+                f";scan_eps={scan_side['epochs_per_sec']:.2f}"
+                f";prob_diff={prob_max_abs_diff:.2e}"
+                f";parity={'yes' if parity else 'NO'}"
+            ),
+        )
+    ]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--out", default="BENCH_cascade.json")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    for r in bench_cascade(small=not args.full, out_path=args.out):
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,9 +4,10 @@ PIQUE's headline metric is the *rate* at which answer quality improves
 (paper §3.2/§6), so epochs/sec is the number this repo optimizes.  This
 benchmark runs the SAME multi-query workload through both engine drivers:
 
-* **loop** — the per-epoch-dispatch driver (``EpochProgram.run_loop``, the
-  path a non-traceable model-cascade bank forces): two jitted stages per
-  epoch plus the host round-trips that per-epoch execution costs;
+* **loop** — the per-epoch-dispatch fallback (the engine's private legacy
+  loop, the path an opaque bank with host-side ``execute`` forces): two
+  jitted stages per epoch plus the host round-trips that per-epoch
+  execution costs;
 * **scan** — the fused ``lax.scan`` superstep: every epoch's
   plan -> execute -> apply cycle inlined into ONE jitted dispatch with
   on-device stats accumulation and a single end-of-run host sync.

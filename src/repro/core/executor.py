@@ -18,18 +18,21 @@ substrate, tenant slots, ledger update, sharded plan merge) and BOTH drivers:
   events while the previous chunk is still in flight
   (``session.SessionPipeline``).  Dispatch never blocks; the single host
   sync happens at history materialization.
-* **loop** — the legacy per-epoch Python driver, kept ONLY because
-  non-traceable banks (the model-cascade bank batches real model inference
-  at the Python level) cannot live inside ``lax.scan``.  It splits the same
-  superstep at the bank boundary: jitted plan half, host ``bank.execute``,
-  jitted apply half — so loop and scan are the same arithmetic by
-  construction, not by parity testing.
+The bank boundary inside the superstep takes one of two traceable forms:
+banks publishing a precomputed ``.outputs`` tensor (the simulated bank) are
+gathered from the session-carried capacity-padded buffer, and banks passed
+to the program as ``bank=`` (the model-cascade bank) have their pure-JAX
+``execute`` traced straight into the scan body — real model forwards with
+zero host round-trips per epoch.  The old per-epoch loop driver
+(``run_loop``: jitted plan half, host ``bank.execute``, jitted apply half)
+is GONE; after the cascade bank became traceable nothing needed it.
 
 ``ProgressiveQueryOperator`` and ``MultiQueryEngine`` are now thin facades
 over ``EngineSession`` (one tenant / capacity == N respectively), which owns
 an ``EpochProgram``; their legacy per-epoch paths survive only for query
 shapes the session's data-masked slots cannot express (general ASTs,
-``benefit_mode="exact_slow"``, custom benefit overrides).
+``benefit_mode="exact_slow"``, custom benefit overrides) and for opaque
+banks that hide ``supports_scan``.
 """
 
 from __future__ import annotations
@@ -285,11 +288,23 @@ class EpochProgram:
         costs: jax.Array,
         config: EngineConfig,
         truth_masks: Optional[jax.Array] = None,  # [S, C] bool (metrics only)
+        bank=None,  # traceable bank whose execute runs INSIDE the superstep
     ):
         self.table = table
         self.combine_params = combine_params
         self.costs = jnp.asarray(costs, jnp.float32)
         self.config = config
+        # When a bank is attached, the superstep calls ``bank.execute(merged)``
+        # in-trace (its parameters and features become trace constants); when
+        # absent, outputs gather from the state-carried ``bank_outputs``
+        # buffer (banks publishing a precomputed ``.outputs`` tensor).
+        self.bank = bank
+        if bank is not None and not scan_capable(bank):
+            raise ValueError(
+                "EpochProgram(bank=...) requires a traceable bank "
+                "(supports_scan == True); opaque banks go through the "
+                "facades' legacy per-epoch loop"
+            )
         # ground-truth answer masks, one row per slot: when present the
         # superstep reports per-slot true F-alpha ON DEVICE ([S] floats per
         # epoch), so truth tracking never forces answer-mask collection.
@@ -299,8 +314,6 @@ class EpochProgram:
         self._trace_count = 0  # superstep (re)traces
         self._scan_cache: dict = {}
         self._refresh_fn = jax.jit(self._refresh)
-        self._plan_fn = jax.jit(self._plan_part)
-        self._apply_fn = jax.jit(self._apply_part)
 
     @property
     def num_predicates(self) -> int:
@@ -477,12 +490,21 @@ class EpochProgram:
         return plans, merged, want_bits
 
     def _gather_outputs(self, state: SessionState, merged: plan_lib.Plan) -> jax.Array:
-        """The traceable bank: a gather from the capacity-padded outputs.
+        """The bank boundary, fully inside the trace.
 
-        Invalid merged lanes route to row 0 (NOT clipped onto row capacity-1,
-        a real row once the session fills) and stay inert: apply drops them,
-        chargeable/want-bits are valid-masked.
+        With an attached bank, the merged plan runs through the bank's pure
+        ``execute`` (real model forwards for the cascade bank); its f32
+        probabilities are quantized to the substrate storage dtype HERE —
+        the same boundary ``ingest`` quantizes at — so ``apply`` only ever
+        sees conforming writes.  Otherwise outputs gather from the
+        capacity-padded ``state.bank_outputs`` buffer; invalid merged lanes
+        route to row 0 (NOT clipped onto row capacity-1, a real row once the
+        session fills) and stay inert: apply drops them, chargeable/want-bits
+        are valid-masked.
         """
+        if self.bank is not None:
+            probs = self.bank.execute(merged)
+            return probs.astype(state.substrate.func_probs.dtype)
         obj = plan_lib.gather_object_idx(merged, state.capacity)
         return state.bank_outputs[obj, merged.pred_idx, jnp.maximum(merged.func_idx, 0)]
 
@@ -703,42 +725,3 @@ class EpochProgram:
                     return history
         return history
 
-    def run_loop(
-        self,
-        state: SessionState,
-        num_epochs: int,
-        bank,
-        collect_masks: bool = False,
-        stop_when_exhausted: bool = True,
-    ):
-        """The legacy per-epoch Python loop, as an ``EpochProgram`` driver.
-
-        Exists for banks whose ``execute`` is not traceable (the model
-        cascade batches real inference at the Python level): the SAME
-        superstep arithmetic, split at the bank boundary into a jitted plan
-        half and a jitted apply half, with the bank called on the host in
-        between.  One host sync per epoch — the price of an opaque bank.
-        """
-        history: list[SessionEpochStats] = []
-        for e in range(num_epochs):
-            t0 = time.perf_counter()
-            plans, merged, want_bits = self._plan_fn(state)
-            outputs = bank.execute(merged)
-            state, stats = self._apply_fn(state, plans, merged, want_bits, outputs)
-            if not collect_masks:  # don't ship [S, C] masks nobody asked for
-                stats = {k: v for k, v in stats.items() if k != "answer_mask"}
-            stats = jax.device_get(stats)
-            wall = time.perf_counter() - t0
-            chunk = [(1, jax.tree.map(lambda x: np.asarray(x)[None], stats))]
-            history.extend(
-                self.materialize_history(
-                    chunk,
-                    wall_per_epoch=wall,
-                    collect_masks=collect_masks,
-                    stop_when_exhausted=False,
-                    epoch_base=e,
-                )
-            )
-            if stop_when_exhausted and history[-1].merged_valid == 0:
-                break
-        return state, history

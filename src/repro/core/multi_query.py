@@ -271,6 +271,14 @@ class MultiQueryEngine:
         from repro.core.session import EngineSession
 
         if self._session is None or self._session[0] != num_objects:
+            # A traceable bank with no precomputed ``.outputs`` buffer (the
+            # model-cascade bank) is wired into the session so its forwards
+            # run inside the fused superstep.
+            traced_bank = (
+                self.bank
+                if scan_capable(self.bank) and not hasattr(self.bank, "outputs")
+                else None
+            )
             self._session = (
                 num_objects,
                 EngineSession(
@@ -282,6 +290,7 @@ class MultiQueryEngine:
                     max_tenants=self.query_set.num_queries,
                     config=self.config,
                     truth_masks=self.truth_masks,  # per-slot true-F on device
+                    bank=traced_bank,
                 ),
             )
         return self._session[1]
@@ -300,14 +309,18 @@ class MultiQueryEngine:
 
         q = self.query_set.num_queries
         n = state.substrate.num_objects
-        if scan_capable(self.bank):
+        if hasattr(self.bank, "outputs"):
             outputs = jnp.asarray(self.bank.outputs, jnp.float32)
-        else:  # loop driver: the buffer is never gathered, only shape matters
+        else:  # in-scan bank.execute: the buffer is never gathered
             outputs = jnp.full(
                 (n, self.query_set.num_predicates, self.costs.shape[1]),
                 self.config.prior,
                 jnp.float32,
             )
+        quarantined = None
+        avail = getattr(self.bank, "available", None)
+        if avail is not None:  # ragged cascade: missing levels unplannable
+            quarantined = ~jnp.asarray(avail, bool)
         pred_mask = self.query_set.pred_mask
         if for_donation:
             outputs = jnp.array(outputs, copy=True)
@@ -325,6 +338,7 @@ class MultiQueryEngine:
             active=jnp.ones((q,), bool),
             num_rows=jnp.asarray(n, jnp.int32),
             ledger=ledger_lib.init_ledger(q),
+            quarantined=quarantined,
         )
 
     def _from_session_state(self, sst) -> MultiQueryState:
@@ -576,6 +590,13 @@ class MultiQueryEngine:
             benefit = per.joint_prob[..., None] * est_joint / cost  # Eq. 11
 
         valid = (nf >= 0) & pred_mask[:, None, :]
+        avail = getattr(self.bank, "available", None)
+        if avail is not None:
+            # Ragged cascade bank: a missing (pred, level) pair carries a
+            # sentinel cost, but benefit/cost is still finite — mask it out
+            # so the short cascade can never plan a level it does not have.
+            pi = jnp.arange(p, dtype=jnp.int32)
+            valid = valid & jnp.asarray(avail, bool)[pi, jnp.maximum(nf, 0)]
         benefit = jnp.where(valid, benefit, NEG_INF)
 
         # Candidate restriction per DISTINCT query (its inputs — uncertainty,
@@ -672,30 +693,35 @@ class MultiQueryEngine:
             return self._run_legacy_loop(
                 state, num_epochs, stop_when_exhausted
             )
-        session = self._session_for(num_objects)
-        if scan_capable(self.bank):
-            # donate driver-created states off-CPU (the pre-facade policy):
-            # XLA updates the [N, P, F] tensors in place across the run
-            donate = created_here and jax.default_backend() != "cpu"
-            sst, hist = session.program.run_scan(
-                self._to_session_state(state, for_donation=donate),
-                num_epochs, collect_masks=collect_masks,
-                stop_when_exhausted=stop_when_exhausted, chunk_size=chunk_size,
-                donate=donate,
-            )
-        else:
-            sst, hist = session.run_loop(
-                self._to_session_state(state), num_epochs, self.bank,
+        if not scan_capable(self.bank):
+            # Opaque banks (no traceable execute, no outputs buffer) keep the
+            # pre-facade per-epoch loop: jitted plan half, host bank.execute,
+            # jitted apply half.
+            return self._run_legacy_loop(
+                state, num_epochs, stop_when_exhausted,
                 collect_masks=collect_masks,
-                stop_when_exhausted=stop_when_exhausted,
             )
+        session = self._session_for(num_objects)
+        # donate driver-created states off-CPU (the pre-facade policy):
+        # XLA updates the [N, P, F] tensors in place across the run
+        donate = created_here and jax.default_backend() != "cpu"
+        sst, hist = session.program.run_scan(
+            self._to_session_state(state, for_donation=donate),
+            num_epochs, collect_masks=collect_masks,
+            stop_when_exhausted=stop_when_exhausted, chunk_size=chunk_size,
+            donate=donate,
+        )
         return (
             self._from_session_state(sst),
             self._stats_from_session(hist, collect_masks),
         )
 
     def _run_legacy_loop(
-        self, state: MultiQueryState, num_epochs: int, stop_when_exhausted: bool
+        self,
+        state: MultiQueryState,
+        num_epochs: int,
+        stop_when_exhausted: bool,
+        collect_masks: bool = False,
     ) -> tuple[MultiQueryState, list]:
         history: list[MultiEpochStats] = []
         for e in range(num_epochs):
@@ -721,6 +747,9 @@ class MultiQueryEngine:
                     plan_valid=[int(x) for x in jnp.sum(plans.valid, axis=1)],
                     merged_valid=merged_valid,
                     wall_time_s=wall,
+                    answer_mask=(
+                        np.asarray(sel.mask) if collect_masks else None
+                    ),
                 )
             )
             if stop_when_exhausted and merged_valid == 0:

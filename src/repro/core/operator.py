@@ -119,6 +119,13 @@ class ProgressiveQueryOperator:
         from repro.core.session import EngineSession
 
         if self._session is None or self._session[0] != num_objects:
+            # A traceable bank with no precomputed ``.outputs`` buffer (the
+            # model-cascade bank) runs its forwards inside the fused superstep.
+            traced_bank = (
+                self.bank
+                if scan_capable(self.bank) and not hasattr(self.bank, "outputs")
+                else None
+            )
             self._session = (
                 num_objects,
                 EngineSession(
@@ -134,6 +141,7 @@ class ProgressiveQueryOperator:
                         if self.truth_mask is None
                         else jnp.asarray(self.truth_mask)[None]
                     ),
+                    bank=traced_bank,
                 ),
             )
         return self._session[1]
@@ -146,12 +154,16 @@ class ProgressiveQueryOperator:
         from repro.core.executor import SessionDerived, SessionState
 
         n, p = st.pred_prob.shape
-        if scan_capable(self.bank):
+        if hasattr(self.bank, "outputs"):
             outputs = jnp.asarray(self.bank.outputs, jnp.float32)
             if for_donation:
                 outputs = jnp.array(outputs, copy=True)
-        else:  # loop driver: the buffer is never gathered, only shape matters
+        else:  # in-scan bank.execute: the buffer is never gathered
             outputs = jnp.full((n, p, self.costs.shape[1]), self.config.prior)
+        quarantined = None
+        avail = getattr(self.bank, "available", None)
+        if avail is not None:  # ragged cascade: missing levels unplannable
+            quarantined = ~jnp.asarray(avail, bool)
         return SessionState(
             substrate=st.substrate,
             derived=SessionDerived(
@@ -165,6 +177,7 @@ class ProgressiveQueryOperator:
             active=jnp.ones((1,), bool),
             num_rows=jnp.asarray(n, jnp.int32),
             ledger=ledger_lib.init_ledger(1),
+            quarantined=quarantined,
         )
 
     def _from_session_state(self, sst) -> state_lib.EnrichmentState:
@@ -223,6 +236,15 @@ class ProgressiveQueryOperator:
             benefits = benefit_lib.compute_benefits(
                 state, self.query, self.table, self.costs, every,
                 function_selection=cfg.function_selection,
+            )
+        avail = getattr(self.bank, "available", None)
+        if avail is not None:
+            # Ragged cascade bank: missing (pred, level) pairs carry a
+            # sentinel cost, but benefit/cost stays finite — mask them out.
+            pi = jnp.arange(benefits.next_fn.shape[-1], dtype=jnp.int32)
+            ok = jnp.asarray(avail, bool)[pi, jnp.maximum(benefits.next_fn, 0)]
+            benefits = benefits._replace(
+                benefit=jnp.where(ok, benefits.benefit, benefit_lib.NEG_INF)
             )
         cand = candidate_mask(state.uncertainty, state.in_answer, cfg.candidate_strategy)
         benefits = benefits._replace(
@@ -297,26 +319,20 @@ class ProgressiveQueryOperator:
         created_here = state is None
         if state is None:
             state = self.init_state(num_objects)
-        if self._legacy_only:
+        if self._legacy_only or not scan_capable(self.bank):
+            # General ASTs / exact_slow / custom benefit_fn — or an opaque
+            # bank with no traceable execute — keep the per-epoch loop.
             return self._run_legacy_loop(state, num_epochs, stop_when_exhausted)
         session = self._session_for(num_objects)
-        if scan_capable(self.bank):
-            # donate driver-created states off-CPU (the pre-facade policy)
-            donate = created_here and jax.default_backend() != "cpu"
-            sst, hist = session.program.run_scan(
-                self._to_session_state(state, for_donation=donate),
-                num_epochs,
-                stop_when_exhausted=stop_when_exhausted,
-                chunk_size=chunk_size,
-                donate=donate,
-            )
-        else:
-            sst, hist = session.run_loop(
-                self._to_session_state(state),
-                num_epochs,
-                self.bank,
-                stop_when_exhausted=stop_when_exhausted,
-            )
+        # donate driver-created states off-CPU (the pre-facade policy)
+        donate = created_here and jax.default_backend() != "cpu"
+        sst, hist = session.program.run_scan(
+            self._to_session_state(state, for_donation=donate),
+            num_epochs,
+            stop_when_exhausted=stop_when_exhausted,
+            chunk_size=chunk_size,
+            donate=donate,
+        )
         return self._from_session_state(sst), self._stats_from_session(hist)
 
     def _run_legacy_loop(

@@ -46,9 +46,10 @@ pre-allocated at ``max_capacity``.
 
 Scope: tenants must be pure conjunctions (the paper's Q1-Q5 shape and the
 multi-tenant fast path); general ASTs stay on ``MultiQueryEngine``'s legacy
-loop.  The scan-driver execution bank is the session-owned capacity-padded
-output buffer (the simulated-bank gather); model-cascade banks go through
-``run_loop`` (the ``EpochProgram`` loop driver).
+loop.  The scan-driver execution bank is either the session-owned
+capacity-padded output buffer (the simulated-bank gather) or — when the
+session is opened with ``bank=`` — a traceable bank (the model-cascade
+bank) whose real model forwards run inside the fused superstep.
 """
 
 from __future__ import annotations
@@ -163,6 +164,7 @@ class EngineSession:
         config: EngineConfig = EngineConfig(),
         max_capacity: Optional[int] = None,
         truth_masks: Optional[jax.Array] = None,  # [S, capacity] bool, metrics only
+        bank=None,  # traceable bank executed INSIDE the superstep (see executor)
     ):
         if config.backend not in ("jnp", "pallas"):
             raise ValueError(f"unknown backend: {config.backend!r}")
@@ -207,8 +209,10 @@ class EngineSession:
                 "truth rows cannot follow tier growth)"
             )
         # the unified executor: one superstep + drivers for the session's life
+        self.bank = bank
         self.program = EpochProgram(
-            table, combine_params, self.costs, config, truth_masks=truth_masks
+            table, combine_params, self.costs, config, truth_masks=truth_masks,
+            bank=bank,
         )
 
     @property
@@ -316,11 +320,20 @@ class EngineSession:
             active=jnp.zeros((self.max_tenants,), bool),
             num_rows=jnp.asarray(n0, jnp.int32),
             ledger=ledger_lib.init_ledger(self.max_tenants),
-            quarantined=jnp.zeros(
-                (self.num_predicates, self.num_functions), bool
-            ),
+            quarantined=self._initial_quarantine(),
         )
         return self.program.refresh(state)
+
+    def _initial_quarantine(self) -> jax.Array:
+        """(pred, fn) pairs dead from birth: a ragged bank's missing levels
+        (``bank.available == False``) enter the quarantine channel, so beyond
+        their sentinel cost they are STRUCTURALLY unplannable — the same
+        state-id exclusion a fault quarantine uses."""
+        q = jnp.zeros((self.num_predicates, self.num_functions), bool)
+        avail = getattr(self.bank, "available", None)
+        if avail is not None:
+            q = q | ~jnp.asarray(avail, bool)
+        return q
 
     def _query_columns(self, query: CompiledQuery) -> list:
         if not query.is_conjunctive:
@@ -635,25 +648,6 @@ class EngineSession:
             collect_masks=collect_masks,
             stop_when_exhausted=stop_when_exhausted,
             on_chunk=on_chunk,
-        )
-
-    def run_loop(
-        self,
-        state: SessionState,
-        num_epochs: int,
-        bank,
-        collect_masks: bool = False,
-        stop_when_exhausted: bool = True,
-    ) -> tuple[SessionState, list]:
-        """Per-epoch loop driver for non-traceable banks (model cascades):
-        the same superstep arithmetic, with ``bank.execute(merged)`` called
-        on the host between the jitted plan and apply halves."""
-        return self.program.run_loop(
-            state,
-            num_epochs,
-            bank,
-            collect_masks=collect_masks,
-            stop_when_exhausted=stop_when_exhausted,
         )
 
     def pipeline(

@@ -6,15 +6,31 @@ section 3):
 
     level 0: linear probe                 (the pre-executed cheapest function)
     level 1: 2-layer MLP probe
-    level 2: small transformer over feature patches
-    level 3: assigned-arch-backbone head (reduced config on CPU; the full
+    level 2: assigned-arch-backbone head (reduced config on CPU; the full
              config is what the dry-run serves on the production mesh)
 
 Costs are analytic FLOPs converted to seconds at the target chip's peak
 (197 TFLOPs bf16); qualities are measured AUC on a held-out validation
-split.  ``execute`` groups a plan's triples by (predicate, level) and runs
-batched forward passes — the "plan execution" phase of the paper driven by
-actual model inference.
+split.
+
+``ModelCascadeBank`` is a *traceable* bank (``supports_scan == True``): at
+construction the per-(predicate, level) parameters are stacked into
+homogeneous ``[P]``-leading pytrees (linear and MLP probes stack directly;
+the backbone level is ONE shared trunk with stacked per-predicate heads),
+and ``execute`` is a pure fixed-shape JAX function — the merged plan's lanes
+are sorted by (pred, level) key inside the trace, each level runs as one
+masked batched forward over the full lane vector (features gathered once,
+``vmap`` over predicate heads), and probabilities scatter back through the
+inverse permutation.  That lets the whole plan -> execute -> apply epoch
+fuse into ``EpochProgram.run_scan`` with zero host round-trips per epoch.
+``execute_host`` keeps the legacy host-side numpy grouping (one jitted call
+per (pred, level)) as the parity reference and benchmark baseline.
+
+Ragged cascades (predicates with fewer levels) pad ``costs`` with a LARGE
+sentinel (never zero: the planner divides benefit by cost, and a free
+nonexistent level would win every epoch) and publish an ``available``
+[P, F] mask; engines exclude unavailable (pred, level) pairs structurally
+via the quarantine channel.
 """
 
 from __future__ import annotations
@@ -28,10 +44,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.plan import Plan
+from repro.models import transformer as tf
 from repro.models.config import ModelConfig
 from repro.models.model import Model
 
 PEAK_FLOPS = 197e12
+
+# Cost padding for (pred, level) slots a ragged cascade bank does not have.
+# Eq. 11 ranks triples by benefit / cost, so a missing level must look
+# prohibitively expensive, never free: ~30 device-years at peak keeps the
+# ratio at effectively zero while staying far from f32 overflow when costs
+# are summed over a plan.
+SENTINEL_COST_S = 1e9
+
+# The backbone head tiles each projected feature vector into this many
+# token positions before the trunk (a "patch sequence" stand-in).
+N_BACKBONE_TOKENS = 8
 
 
 def _linear_probe_init(key, d, width=0):
@@ -64,48 +92,61 @@ class CascadeLevel:
     params: object
     apply_fn: Callable  # (params, features [B, D]) -> probs [B]
     flops_per_object: float
+    cfg: Optional[ModelConfig] = None  # backbone levels carry their config
 
     @property
     def cost_seconds(self) -> float:
         return self.flops_per_object / PEAK_FLOPS
 
 
-def _backbone_level(key, cfg: ModelConfig, feature_dim: int) -> CascadeLevel:
-    """Transformer-backbone tagging head: features -> token-ish patches ->
-    reduced backbone -> mean-pool -> sigmoid head."""
-    model = Model(cfg)
-    params, _ = model.init_params(key)
+def _backbone_apply(cfg: ModelConfig, trunk_params, head_params, feats):
+    """Features -> token-ish patches -> reduced backbone -> mean-pool ->
+    sigmoid head.  Shared by the per-level closure and the fused bank."""
+    b = feats.shape[0]
+    x = feats @ head_params["proj"]  # [B, d_model]
+    x = jnp.tile(x[:, None, :], (1, N_BACKBONE_TOKENS, 1)).astype(
+        cfg.activation_dtype
+    )
+    pos = jnp.broadcast_to(
+        jnp.arange(N_BACKBONE_TOKENS)[None], (b, N_BACKBONE_TOKENS)
+    )
+    h, _, _ = tf.stack_apply(
+        trunk_params["layers"], cfg, x, pos, cfg.num_layers, causal=False
+    )
+    pooled = jnp.mean(h.astype(jnp.float32), axis=1)
+    return jax.nn.sigmoid(pooled @ head_params["out"])[:, 0]
+
+
+def _backbone_level(
+    key,
+    cfg: ModelConfig,
+    feature_dim: int,
+    trunk_params=None,
+) -> CascadeLevel:
+    """Transformer-backbone tagging head.  ``trunk_params`` shares ONE trunk
+    across predicates (per-predicate heads only) — the layout the fused bank
+    requires; when omitted a private trunk is initialized."""
+    if trunk_params is None:
+        model = Model(cfg)
+        trunk_params, _ = model.init_params(key)
     k2 = jax.random.fold_in(key, 1)
     head = {
         "proj": jax.random.normal(k2, (feature_dim, cfg.d_model)) * 0.05,
         "out": jax.random.normal(jax.random.fold_in(k2, 1), (cfg.d_model, 1)) * 0.05,
     }
 
-    n_tokens = 8
-
     def apply_fn(p, feats):
         model_params, head_params = p
-        b = feats.shape[0]
-        x = feats @ head_params["proj"]  # [B, d_model]
-        x = jnp.tile(x[:, None, :], (1, n_tokens, 1)).astype(cfg.activation_dtype)
-        import dataclasses as dc
+        return _backbone_apply(cfg, model_params, head_params, feats)
 
-        from repro.models import layers as nn_layers
-        from repro.models import transformer as tf
-
-        pos = jnp.broadcast_to(jnp.arange(n_tokens)[None], (b, n_tokens))
-        h, _, _ = tf.stack_apply(
-            model_params["layers"], cfg, x, pos, cfg.num_layers, causal=False
-        )
-        pooled = jnp.mean(h.astype(jnp.float32), axis=1)
-        return jax.nn.sigmoid(pooled @ head_params["out"])[:, 0]
-
-    flops = 2.0 * cfg.param_counts()["active"] * n_tokens
+    # FLOP-honest cost: 2 * active params per token, N_BACKBONE_TOKENS tokens
+    flops = 2.0 * cfg.param_counts()["active"] * N_BACKBONE_TOKENS
     return CascadeLevel(
         name=f"backbone:{cfg.name}",
-        params=(params, head),
+        params=(trunk_params, head),
         apply_fn=apply_fn,
         flops_per_object=flops,
+        cfg=cfg,
     )
 
 
@@ -113,6 +154,7 @@ def build_cascade(
     key,
     feature_dim: int,
     backbone_cfg: Optional[ModelConfig] = None,
+    backbone_trunk=None,
 ) -> list[CascadeLevel]:
     ks = jax.random.split(key, 4)
     levels = [
@@ -122,8 +164,32 @@ def build_cascade(
                      _mlp_probe_apply, 2.0 * feature_dim * 256 * 2),
     ]
     if backbone_cfg is not None:
-        levels.append(_backbone_level(ks[2], backbone_cfg, feature_dim))
+        levels.append(
+            _backbone_level(ks[2], backbone_cfg, feature_dim,
+                            trunk_params=backbone_trunk)
+        )
     return levels
+
+
+def build_cascade_suite(
+    key,
+    num_preds: int,
+    feature_dim: int,
+    backbone_cfg: Optional[ModelConfig] = None,
+) -> list[list[CascadeLevel]]:
+    """One cascade per predicate with the stacked-bank layout: private
+    linear/MLP probes, one SHARED backbone trunk with per-predicate heads."""
+    trunk = None
+    if backbone_cfg is not None:
+        model = Model(backbone_cfg)
+        trunk, _ = model.init_params(jax.random.fold_in(key, 999))
+    return [
+        build_cascade(
+            jax.random.fold_in(key, i), feature_dim,
+            backbone_cfg=backbone_cfg, backbone_trunk=trunk,
+        )
+        for i in range(num_preds)
+    ]
 
 
 def train_level(
@@ -160,21 +226,93 @@ def train_level(
 
 @dataclasses.dataclass
 class ModelCascadeBank:
-    """Tagging bank backed by model cascades (one per predicate)."""
+    """Tagging bank backed by model cascades (one per predicate).
 
-    cascades: Sequence[Sequence[CascadeLevel]]  # [P][F]
+    Traceable: ``execute`` is a pure JAX function over stacked parameters,
+    so the bank runs INSIDE the fused scan superstep.  ``execute_host`` is
+    the legacy per-(pred, level) host dispatch kept as the parity oracle.
+    """
+
+    cascades: Sequence[Sequence[CascadeLevel]]  # [P][<=F]
     features: jax.Array  # [N, D]
     costs: jax.Array = None  # [P, F] seconds (filled in __post_init__)
+    available: jax.Array = None  # [P, F] bool (filled in __post_init__)
+
+    # the scan superstep may trace this bank's execute (see core.executor)
+    supports_scan = True
 
     def __post_init__(self):
         p = len(self.cascades)
         f = max(len(c) for c in self.cascades)
-        costs = np.zeros((p, f), np.float32)
+        # missing levels of a ragged bank: sentinel cost, unavailable —
+        # NEVER zero cost (a free level would have infinite benefit/cost)
+        costs = np.full((p, f), SENTINEL_COST_S, np.float32)
+        avail = np.zeros((p, f), bool)
         for i, c in enumerate(self.cascades):
             for j, lvl in enumerate(c):
                 costs[i, j] = lvl.cost_seconds
+                avail[i, j] = True
         self.costs = jnp.asarray(costs)
+        self.available = jnp.asarray(avail)
+        self.features = jnp.asarray(self.features)
         self._jitted = {}
+        self._stack = self._build_stack(p, f)
+
+    @property
+    def num_levels(self) -> int:
+        return self.costs.shape[1]
+
+    # ---- stacked-parameter construction ------------------------------------
+
+    def _build_stack(self, p: int, f: int) -> list:
+        """Per level: one homogeneous [P]-leading parameter stack.
+
+        Linear/MLP probes stack leaf-wise (predicates missing the level get
+        zero-filled placeholders, masked out by ``available``).  Backbone
+        levels must share ONE trunk across predicates; only the (proj, out)
+        heads stack.
+        """
+        stack = []
+        for j in range(f):
+            present = {i: c[j] for i, c in enumerate(self.cascades) if len(c) > j}
+            template = next(iter(present.values()))
+            if template.name.startswith("backbone"):
+                trunks = {id(lvl.params[0]) for lvl in present.values()}
+                if len(trunks) != 1:
+                    raise ValueError(
+                        "backbone cascade level requires one shared trunk "
+                        "with per-predicate heads (build_cascade_suite); got "
+                        f"{len(trunks)} distinct trunks at level {j}"
+                    )
+                zero_head = jax.tree.map(jnp.zeros_like, template.params[1])
+                heads = [
+                    present[i].params[1] if i in present else zero_head
+                    for i in range(p)
+                ]
+                stack.append(dict(
+                    kind="backbone",
+                    cfg=template.cfg,
+                    trunk=template.params[0],
+                    heads=jax.tree.map(lambda *xs: jnp.stack(xs), *heads),
+                ))
+            else:
+                fns = {lvl.apply_fn for lvl in present.values()}
+                if len(fns) != 1:
+                    raise ValueError(
+                        f"cascade level {j} mixes apply functions; stacked "
+                        "dispatch needs one architecture per level"
+                    )
+                zero = jax.tree.map(jnp.zeros_like, template.params)
+                params = [
+                    present[i].params if i in present else zero
+                    for i in range(p)
+                ]
+                stack.append(dict(
+                    kind="probe",
+                    apply=template.apply_fn,
+                    params=jax.tree.map(lambda *xs: jnp.stack(xs), *params),
+                ))
+        return stack
 
     def _apply(self, pred: int, fn: int):
         key = (pred, fn)
@@ -192,12 +330,96 @@ class ModelCascadeBank:
             features=self.features,
         )
 
+    # ---- execution ----------------------------------------------------------
+
     def execute(self, plan: Plan) -> jax.Array:
-        """Group triples by (predicate, function) and run batched forwards.
+        """Fused traceable execute: every unique (object, pred, level) triple
+        of the merged plan in one fixed-shape program.
+
+        Lanes are sorted by (pred, level) key (invalid lanes to the back),
+        features are gathered once, and each cascade level runs as ONE
+        masked batched forward — probes ``vmap`` over the stacked predicate
+        heads, the backbone runs a single shared-trunk pass with per-lane
+        head gathers (skipped in-trace via ``lax.cond`` on epochs where the
+        planner selected no backbone lane).  Results scatter back through
+        the inverse permutation;
+        unmatched/invalid lanes return the 0.5 prior, matching
+        ``execute_host`` lane for lane.
 
         Works unchanged for single-query plans and for the multi-query
-        engine's merged deduplicated plans — each unique triple runs one
-        forward pass regardless of how many queries requested it.
+        engine's merged deduplicated plans, and — because every operand is a
+        fixed-shape jnp array — inside ``jit`` / ``lax.scan``.
+        """
+        p_num = len(self.cascades)
+        f_num = self.num_levels
+        m = plan.object_idx.shape[0]
+        n = self.features.shape[0]
+        valid = plan.valid
+        obj = jnp.where(valid, jnp.clip(plan.object_idx, 0, n - 1), 0)
+        prd = jnp.where(valid, jnp.clip(plan.pred_idx, 0, p_num - 1), 0)
+        fns = jnp.where(valid, jnp.clip(plan.func_idx, 0, f_num - 1), 0)
+
+        # stable lane sort by (pred, level); invalid lanes sort past P*F
+        key = jnp.where(valid, prd * f_num + fns, p_num * f_num)
+        order = jnp.argsort(key)
+        inv = jnp.argsort(order)
+        s_obj, s_prd, s_fn = obj[order], prd[order], fns[order]
+        s_valid = valid[order]
+        feats = self.features[s_obj].astype(jnp.float32)  # [M, D]
+        lane = jnp.arange(m)
+
+        out = jnp.full((m,), 0.5, jnp.float32)
+        for j, entry in enumerate(self._stack):
+            on = s_valid & (s_fn == j) & self.available[s_prd, j]
+            if entry["kind"] == "backbone":
+                cfg = entry["cfg"]
+                heads = entry["heads"]
+
+                def _backbone_probs(operands, cfg=cfg, heads=heads, entry=entry):
+                    feats, s_prd = operands
+                    # per-predicate input/output heads via vmap-shaped
+                    # einsums, one shared trunk pass over all M lanes
+                    x_all = jnp.einsum("md,pdk->pmk", feats, heads["proj"])
+                    x = x_all[s_prd, lane]  # [M, d_model]
+                    x = jnp.tile(
+                        x[:, None, :], (1, N_BACKBONE_TOKENS, 1)
+                    ).astype(cfg.activation_dtype)
+                    pos = jnp.broadcast_to(
+                        jnp.arange(N_BACKBONE_TOKENS)[None],
+                        (m, N_BACKBONE_TOKENS),
+                    )
+                    h, _, _ = tf.stack_apply(
+                        entry["trunk"]["layers"], cfg, x, pos, cfg.num_layers,
+                        causal=False,
+                    )
+                    pooled = jnp.mean(h.astype(jnp.float32), axis=1)
+                    logits = jnp.einsum("mk,pko->pmo", pooled, heads["out"])
+                    return jax.nn.sigmoid(logits[s_prd, lane, 0])
+
+                # Skip the trunk entirely on epochs where the planner put no
+                # lane at this level — the in-trace twin of execute_host's
+                # ``if not sel.any(): continue``.  The branch result is only
+                # read where ``on`` holds, so the skip value never escapes.
+                probs = jax.lax.cond(
+                    jnp.any(on),
+                    _backbone_probs,
+                    lambda operands: jnp.full((m,), 0.5, jnp.float32),
+                    (feats, s_prd),
+                )
+            else:
+                per_pred = jax.vmap(entry["apply"], in_axes=(0, None))(
+                    entry["params"], feats
+                )  # [P, M]
+                probs = per_pred[s_prd, lane]
+            out = jnp.where(on, probs.astype(jnp.float32), out)
+        return out[inv]
+
+    def execute_host(self, plan: Plan) -> jax.Array:
+        """Legacy host dispatch: group triples by (pred, level) on the host
+        and run one jitted forward per non-empty group.
+
+        The pre-fusion execution path, kept as the parity oracle for
+        ``execute`` and the per-epoch-loop benchmark baseline.
         """
         obj = np.asarray(plan.object_idx)
         prd = np.asarray(plan.pred_idx)

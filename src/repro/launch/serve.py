@@ -50,7 +50,11 @@ from repro.core import (
 )
 from repro.core.combine import auc_score, fit_combine_weights
 from repro.data.synthetic import make_corpus, split_corpus, truth_answer_mask
-from repro.enrich.cascade import ModelCascadeBank, build_cascade, train_level
+from repro.enrich.cascade import (
+    ModelCascadeBank,
+    build_cascade_suite,
+    train_level,
+)
 from repro.runtime.fault_tolerance import (
     Heartbeat,
     PreemptionHandler,
@@ -90,13 +94,15 @@ def _offline_phase(
     train, evalc = split_corpus(corpus, train_size)
 
     backbone_cfg = get_config(backbone_arch, smoke=True) if backbone_arch else None
+    # one SHARED backbone trunk with per-predicate heads — the stacked
+    # layout the fused traceable bank requires
+    suite = build_cascade_suite(rng, num_preds, 64, backbone_cfg)
     cascades = []
     qualities = []
     for i in range(num_preds):
-        levels = build_cascade(jax.random.fold_in(rng, 100 + i), 64, backbone_cfg)
         levels = [
             train_level(lvl, train.features, train.truth_pred[:, i])
-            for lvl in levels
+            for lvl in suite[i]
         ]
         cascades.append(levels)
         qualities.append(
@@ -369,6 +375,51 @@ def build_session_server(
     state = session.init_state(evalc.func_probs[:num_objects])
     pool = evalc.func_probs[num_objects:limit]
     return session, state, pool, preds
+
+
+def build_cascade_session_server(
+    num_objects: int = 256,
+    num_preds: int = 3,
+    max_tenants: int = 8,
+    seed: int = 0,
+    backbone_arch: Optional[str] = None,
+    plan_size: int = 64,
+    plan_shards: int = 1,
+    backend: str = "jnp",
+    substrate_dtype: str = "float32",
+):
+    """Long-lived serving session whose enrichment is the REAL model-cascade
+    bank, traced into the fused scan superstep (``EngineSession(bank=...)``).
+
+    Every epoch's probe/backbone forwards run inside the compiled superstep —
+    zero host round-trips — so admit/retire/run churn keeps
+    ``superstep_traces == 1`` exactly like the simulated-bank session.  The
+    bank's feature table IS the corpus, so the session is fixed-capacity
+    (capacity == num_objects) and ingest events are out of scope here.
+
+    -> (session, state, preds, qualities)
+    """
+    preds, evalc, bank, combine, table, qualities = _offline_phase(
+        num_objects, num_preds, backbone_arch, seed
+    )
+    session = EngineSession(
+        [p.positive() for p in preds], table, combine, bank.costs,
+        capacity=num_objects, max_tenants=max_tenants,
+        config=MultiQueryConfig(
+            plan_size=plan_size, function_selection="best",
+            num_shards=plan_shards, backend=backend,
+            substrate_dtype=substrate_dtype,
+        ),
+        bank=bank,
+    )
+    # no precomputed outputs to seed — the bank computes probabilities inside
+    # the superstep; the buffer opens at the prior and is never gathered
+    placeholder = jnp.full(
+        (num_objects, len(preds), bank.costs.shape[1]),
+        session.config.prior, jnp.float32,
+    )
+    state = session.init_state(placeholder)
+    return session, state, preds, qualities
 
 
 class StreamingIngest:
@@ -836,6 +887,12 @@ def main(argv=None):
     ap.add_argument("--session", action="store_true",
                     help="serve a long-lived EngineSession driven by a "
                          "scripted ingest/admit/retire arrival trace")
+    ap.add_argument("--bank", default="simulated",
+                    choices=("simulated", "cascade"),
+                    help="session enrichment bank: 'simulated' (precomputed "
+                         "AUC-calibrated outputs, ingest-capable) or "
+                         "'cascade' (REAL model-cascade forwards traced into "
+                         "the fused superstep; fixed corpus, no ingest)")
     ap.add_argument("--capacity", type=int, default=None,
                     help="session row capacity (default 2x --objects)")
     ap.add_argument("--max-capacity", type=int, default=None,
@@ -919,13 +976,28 @@ def main(argv=None):
 
     handler = PreemptionHandler().install()
     if args.session:
-        session, state, pool, preds = build_session_server(
-            num_objects=args.objects, capacity=args.capacity,
-            num_preds=max(args.preds, 2), max_tenants=args.max_tenants,
-            plan_shards=args.plan_shards, backend=args.backend,
-            max_capacity=args.max_capacity,
-            substrate_dtype=args.substrate_dtype,
-        )
+        if args.bank == "cascade":
+            if args.ingest_batch is not None or args.max_capacity is not None:
+                ap.error("--bank cascade serves a fixed corpus: no "
+                         "--ingest-batch / --max-capacity growth")
+            if args.supervise:
+                ap.error("--bank cascade is not wired into --supervise yet")
+            session, state, preds, qualities = build_cascade_session_server(
+                num_objects=args.objects, num_preds=max(args.preds, 2),
+                max_tenants=args.max_tenants, backbone_arch=args.backbone,
+                plan_shards=args.plan_shards, backend=args.backend,
+                substrate_dtype=args.substrate_dtype,
+            )
+            pool = None
+            print(f"[serve] cascade qualities (AUC): {qualities}")
+        else:
+            session, state, pool, preds = build_session_server(
+                num_objects=args.objects, capacity=args.capacity,
+                num_preds=max(args.preds, 2), max_tenants=args.max_tenants,
+                plan_shards=args.plan_shards, backend=args.backend,
+                max_capacity=args.max_capacity,
+                substrate_dtype=args.substrate_dtype,
+            )
         streaming = None
         if args.ingest_batch is not None:
             if args.supervise:
@@ -962,12 +1034,22 @@ def main(argv=None):
             )
         e = max(args.epochs // 4, 1)
         # the default trace's big ingest forces tier growth when
-        # --max-capacity extends the pool past the base capacity
-        spec = args.trace or (
-            f"admit:2;admit:2;run:{e};ingest:{pool.shape[0] // 2};run:{e};"
-            f"admit:3;run:{e};retire:0;run:{e}"
-        )
+        # --max-capacity extends the pool past the base capacity; the
+        # cascade bank serves its fixed corpus, so its default churns
+        # tenants only
+        if pool is None:
+            spec = args.trace or (
+                f"admit:2;run:{e};admit:2;run:{e};retire:0;run:{e}"
+            )
+        else:
+            spec = args.trace or (
+                f"admit:2;admit:2;run:{e};ingest:{pool.shape[0] // 2};run:{e};"
+                f"admit:3;run:{e};retire:0;run:{e}"
+            )
         events = parse_trace(spec)
+        if pool is None and any(k == "ingest" for k, _ in events):
+            ap.error("--bank cascade serves a fixed corpus; drop ingest "
+                     "events from --trace")
         supervision = None
         if args.inject_faults and not args.supervise:
             ap.error("--inject-faults requires --supervise")

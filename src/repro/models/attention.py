@@ -156,9 +156,12 @@ def attention_engine(
     if impl == "pallas":
         from repro.kernels.flash_attention import ops as fa_ops
 
+        # The kernel derives positions itself: queries sit at the end of the
+        # valid cache (q_base = kv_len - Sq), which is exactly how attn_apply
+        # builds q_pos/kv_pos (contiguous aranges, cache or no cache).
         return fa_ops.flash_attention(
-            q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal,
-            window=window, kv_len=kv_len, logit_softcap=cap,
+            q, k, v, kv_len, causal=causal, window=window,
+            logit_softcap=cap, q_offset_from_kv_len=True,
         )
     sq, skv = q.shape[1], k.shape[1]
     if impl == "chunked" or (impl == "auto" and sq > 1 and sq * skv >= CHUNK_THRESHOLD):

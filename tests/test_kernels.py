@@ -85,6 +85,59 @@ def test_flash_attention_partial_kv_len():
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
 
 
+# ----------------------------------- flash attn vs models/attention --------
+# Backbone parity fixtures for the fused cascade bank: the trunk routes its
+# attention through this kernel when ``cfg.attn_impl == "pallas"``, so the
+# kernel is pinned against the models/attention engines at the REDUCED
+# backbone shapes the bank actually runs (lanes x 8 tokens, non-causal).
+
+BACKBONE_FA_DTYPES = [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)]
+
+
+@pytest.mark.parametrize("dtype,tol", BACKBONE_FA_DTYPES)
+def test_attention_engine_pallas_matches_dense_backbone_shapes(dtype, tol):
+    from repro.models.attention import attention_engine
+
+    b, s, h, kv, d = 16, 8, 4, 2, 16  # 16 lanes x N_BACKBONE_TOKENS
+    q, k, v = _fa_inputs(2, b, s, s, h, kv, d, dtype)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    kwargs = dict(causal=False, window=None, kv_len=None, cap=None)
+    out_pl = attention_engine(q, k, v, pos, pos, impl="pallas", **kwargs)
+    out_dn = attention_engine(q, k, v, pos, pos, impl="dense", **kwargs)
+    np.testing.assert_allclose(
+        np.asarray(out_pl, np.float32), np.asarray(out_dn, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+@pytest.mark.parametrize("dtype_name,tol", [("float32", 2e-4), ("bfloat16", 4e-2)])
+def test_backbone_trunk_pallas_matches_default_impl(dtype_name, tol):
+    """The cascade-bank trunk, end to end: stack_apply with attn_impl
+    "pallas" must match the default (dense/chunked) engines at the reduced
+    backbone config."""
+    from repro.configs.archs import get_config
+    from repro.models import transformer as tf
+    from repro.models.model import Model
+
+    cfg = get_config("qwen3-1.7b", smoke=True)
+    cfg = dataclasses.replace(cfg, dtype=dtype_name)
+    params, _ = Model(cfg).init_params(jax.random.PRNGKey(0))
+    b, s = 16, 8
+    x = jax.random.normal(
+        jax.random.PRNGKey(1), (b, s, cfg.d_model), cfg.activation_dtype
+    )
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def run(impl):
+        c = dataclasses.replace(cfg, attn_impl=impl)
+        h, _, _ = tf.stack_apply(
+            params["layers"], c, x, pos, c.num_layers, causal=False
+        )
+        return np.asarray(h, np.float32)
+
+    np.testing.assert_allclose(run("pallas"), run("auto"), rtol=tol, atol=tol)
+
+
 # ------------------------------------------------------------ decode attn ---
 
 DA_CASES = [
